@@ -1,0 +1,93 @@
+"""Shared benchmark infrastructure: trained miniatures, eval, timing, CSV.
+
+Scaling note (DESIGN.md §7): the paper evaluates OPT-125M..30B / LLaMA-7B..30B
+on WikiText2/PTB/C4. This container is one CPU, so each table runs on
+*faithful miniatures* of the same families (identical block structure)
+trained on a synthetic Markov corpus; the claims validated are the method
+ORDERINGS and ablation effects, not absolute perplexities.
+"""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import MarkovCorpus, make_batch_fn
+from repro.models import build_model
+from repro.optim import AdamConfig
+from repro.train import checkpoints
+from repro.train.step import init_train_state, make_train_step
+
+ART = Path(__file__).parent / "artifacts"
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+# calibration budget (paper: 20-40 epochs, 128x2048 tokens; scaled here)
+EPOCHS = 4 if FAST else 8
+CALIB_SAMPLES = 8 if FAST else 16
+CALIB_SEQ = 48 if FAST else 96
+
+
+def corpus_for(cfg) -> MarkovCorpus:
+    # branching/bucket counts chosen so a 4-layer miniature reaches well
+    # below-uniform ppl within ~800 CPU steps (the regime where PTQ damage
+    # is measurable); see tests/test_system.py for the learning check.
+    return MarkovCorpus(vocab=cfg.vocab_size, branching=4, buckets=128,
+                        seed=0)
+
+
+def trained_model(arch: str, steps: int = 800):
+    """Load the cached pre-trained miniature or train it now."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    ckpt = ART / "models" / arch
+    params = model.init(jax.random.PRNGKey(0))
+    if checkpoints.latest_step(ckpt) is not None:
+        params, _ = checkpoints.restore(ckpt, params)
+        return cfg, model, params
+    corpus = corpus_for(cfg)
+    batch_fn = make_batch_fn(corpus, 16, 64)
+    adam = AdamConfig(lr=3e-3)
+    state = init_train_state(model, jax.random.PRNGKey(0), adam)
+    step = jax.jit(make_train_step(model, adam, total_steps=steps, warmup=50),
+                   donate_argnums=(0,))
+    for i in range(steps):
+        state, _ = step(state, {"tokens": jnp.asarray(
+            batch_fn(i)["tokens"])})
+    checkpoints.save(ckpt, steps, state.params, keep=1)
+    return cfg, model, state.params
+
+
+def eval_sets(cfg):
+    corpus = corpus_for(cfg)
+    calib = jnp.asarray(corpus.sample(CALIB_SAMPLES, CALIB_SEQ, seed=777))
+    test = jnp.asarray(corpus.sample(32, CALIB_SEQ, seed=999))
+    return calib, test
+
+
+def ppl(model, params, toks) -> float:
+    return float(jnp.exp(model.loss(params, {"tokens": toks})))
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    """(result, us_per_call) — first call excluded (compile)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0]) \
+        if jax.tree_util.tree_leaves(out) else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        leaves = jax.tree_util.tree_leaves(out)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return out, us
+
+
+def emit(rows):
+    """Print the harness CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

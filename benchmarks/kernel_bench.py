@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks.
+
+On this CPU-only container the Pallas kernels execute in interpret mode
+(Python — wall-times are NOT TPU-representative); the reported numbers are
+(a) the XLA reference path wall-time, useful for relative comparisons across
+bit widths, and (b) the analytic HBM-bytes ratio, which IS the TPU-relevant
+quantity for the memory-bound serving path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks import common
+
+M, K, N, G = 256, 1024, 1024, 128
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32)
+
+    y_fp, us_fp = common.timed(jax.jit(lambda a, b: a @ b), x, w)
+    bytes_fp = (M * K + K * N + M * N) * 4
+    rows.append(("kernel/matmul_fp32", us_fp, f"hbm_bytes={bytes_fp}"))
+
+    for bits in (2, 4, 8):
+        packed, scale, zp = ref.quantize_pack_ref(w, bits=bits, group_size=G)
+        fn = jax.jit(lambda a: ops.dequant_matmul(
+            a, packed, scale, zp, bits=bits, group_size=G, mode="ref"))
+        y, us = common.timed(fn, x)
+        w_bytes = K * N * bits // 8 + 2 * (K // G) * N * 4
+        ratio = (K * N * 4) / w_bytes
+        err = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        rows.append((f"kernel/dequant_matmul_w{bits}", us,
+                     f"weight_bytes={w_bytes};compression_vs_fp32="
+                     f"{ratio:.2f}x;rel_err={err:.4f}"))
+
+    wq = jnp.clip(jnp.round(w * 20), -128, 127).astype(jnp.int8)
+    ws = jnp.full((N,), 1 / 20, jnp.float32)
+    fn = jax.jit(lambda a: ops.w8a8_matmul(a, wq, ws, mode="ref"))
+    _, us = common.timed(fn, x)
+    rows.append(("kernel/w8a8_matmul", us,
+                 f"weight_bytes={K * N};int8_mxu_rate=2x_bf16"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

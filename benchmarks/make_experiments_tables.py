@@ -1,0 +1,101 @@
+"""Regenerate the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md
+from the dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+prints the markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.utils import human_bytes
+
+ART = Path(__file__).parent / "artifacts" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cells():
+    out = {}
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def dryrun_table(data) -> str:
+    lines = ["| arch | shape | mesh | status | peak bytes/dev | flops/dev | "
+             "collective wire/dev | compile |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), d in sorted(data.items(),
+                                         key=lambda kv: (kv[0][0],
+                                                         SHAPE_ORDER.index(
+                                                             kv[0][1]),
+                                                         kv[0][2])):
+        if d["status"] == "skip":
+            lines.append(f"| {arch} | {shape} | {mesh} | SKIP | "
+                         f"{d['reason'][:70]} | | | |")
+            continue
+        if d["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | "
+                         f"{d.get('error', '?')[:70]} | | | |")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory", {})
+        # XLA peak_memory_in_bytes covers args+temps at the high-water mark;
+        # fall back to args+temp when the backend omits it.
+        peak = mem.get("peak_bytes") or 0
+        args = mem.get("argument_bytes") or 0
+        temp = mem.get("temp_bytes") or 0
+        hbm = peak if peak >= max(args, temp) else args + temp
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | ok | "
+            f"{human_bytes(hbm)} | "
+            f"{r['hlo_flops']:.3g} | "
+            f"{human_bytes(r['collective_bytes'])} | "
+            f"{d['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(data) -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | 6ND/HLO | roofline frac | one-line bottleneck note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        "compute": "compute-bound: already near the MXU roofline for this "
+                   "sharding; gains need lower-precision math",
+        "memory": "memory-bound: HBM stream of weights/activations "
+                  "dominates; quantized weights / better fusion move it",
+        "collective": "collective-bound: FSDP gathers + TP reductions "
+                      "dominate; resharding or compression moves it",
+    }
+    for (arch, shape, mesh), d in sorted(data.items(),
+                                         key=lambda kv: (kv[0][0],
+                                                         SHAPE_ORDER.index(
+                                                             kv[0][1]))):
+        if mesh != "single" or d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | {notes[r['dominant']]} |")
+    return "\n".join(lines)
+
+
+def main():
+    data = cells()
+    n_ok = sum(d["status"] == "ok" for d in data.values())
+    n_skip = sum(d["status"] == "skip" for d in data.values())
+    print("### Dry-run results "
+          f"({n_ok} compiled cells, {n_skip} documented skips)\n")
+    print(dryrun_table(data))
+    print("\n### Roofline terms (single-pod 16x16, per device per step)\n")
+    print(roofline_table(data))
+
+
+if __name__ == "__main__":
+    main()

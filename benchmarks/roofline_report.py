@@ -1,0 +1,47 @@
+"""Roofline report (assignment deliverable g): reads the dry-run artifacts
+and prints the three-term table per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+from benchmarks import common
+
+DRYRUN = common.ART / "dryrun"
+
+
+def load_cells(pattern: str = "*"):
+    cells = []
+    for f in sorted(glob.glob(str(DRYRUN / f"{pattern}.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run():
+    rows = []
+    for d in load_cells():
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d.get("status") == "skip":
+            rows.append((name, 0.0, f"skip:{d['reason'][:60]}"))
+            continue
+        if d.get("status") != "ok":
+            rows.append((name, 0.0, f"error:{d.get('error', '?')[:60]}"))
+            continue
+        r = d["roofline"]
+        mem = d.get("memory", {})
+        derived = (f"dominant={r['dominant']};"
+                   f"compute_s={r['compute_s']:.4g};"
+                   f"memory_s={r['memory_s']:.4g};"
+                   f"collective_s={r['collective_s']:.4g};"
+                   f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                   f"roofline_fraction={r['roofline_fraction']:.4f};"
+                   f"peak_dev_bytes={mem.get('peak_bytes')}")
+        rows.append((name, d.get("compile_s", 0) * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,49 @@
+"""Benchmark runner — one function per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV (harness contract). Set
+``BENCH_FAST=1`` for a reduced-budget pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import common
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_loss_curves, kernel_bench, roofline_report,
+                            table1_weight_only, table3_w4a4, table4_precision,
+                            table5_stability, table6_gradual_mask)
+    suites = {
+        "table1": table1_weight_only.run,
+        "table3": table3_w4a4.run,
+        "table4": table4_precision.run,
+        "table5": table5_stability.run,
+        "table6": table6_gradual_mask.run,
+        "fig3": fig3_loss_curves.run,
+        "roofline": roofline_report.run,
+        "kernels": kernel_bench.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in wanted:
+        try:
+            common.emit(suites[name]())
+        except Exception as e:
+            failed += 1
+            print(f"{name},0,ERROR:{e!r}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

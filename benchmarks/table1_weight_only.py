@@ -1,0 +1,57 @@
+"""Paper Table 1 / 8-11 analog: weight-only PPL across methods x bit-configs.
+
+Methods: RTN, GPTQ, AWQ, OmniQuant-diag, AffineQuant.
+Configs: w2a16, w3a16, w4a16 (per-channel) + w3a16g64 (grouped).
+Model: trained llama-mini miniature (paper: OPT/LLaMA families).
+
+Expected orderings (the paper's claims at miniature scale):
+  AffineQuant <= OmniQuant-diag <= {AWQ, GPTQ} << RTN at low bits,
+  all methods converge toward fp ppl at w4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.baselines import quantize_model_baseline
+from repro.core.calibration import CalibConfig, quantize_dense_model
+from repro.core.quantizer import QuantConfig
+
+from benchmarks import common
+
+CONFIGS = [
+    QuantConfig(w_bits=2, a_bits=16, group_size=0),
+    QuantConfig(w_bits=3, a_bits=16, group_size=0),
+    QuantConfig(w_bits=3, a_bits=16, group_size=64),
+    QuantConfig(w_bits=4, a_bits=16, group_size=0),
+]
+METHODS = ("rtn", "gptq", "awq", "omniquant", "affinequant")
+
+
+def run(arch: str = "llama-mini"):
+    cfg, model, params = common.trained_model(arch)
+    calib, test = common.eval_sets(cfg)
+    rows = [(f"table1/{arch}/fp", 0.0,
+             f"ppl={common.ppl(model, params, test):.4f}")]
+    for qc in CONFIGS:
+        for method in METHODS:
+            t0 = time.perf_counter()
+            if method in ("omniquant", "affinequant"):
+                qcl = dataclasses.replace(qc, lwc=True)
+                q, _ = quantize_dense_model(
+                    params, cfg, qcl,
+                    CalibConfig(epochs=common.EPOCHS, alpha=0.1,
+                                use_affine=method == "affinequant"),
+                    calib, log=False)
+            else:
+                qcl = dataclasses.replace(qc, lwc=False)
+                q = quantize_model_baseline(params, cfg, qcl, calib, method)
+            us = (time.perf_counter() - t0) * 1e6
+            p = common.ppl(model, q, test)
+            rows.append((f"table1/{arch}/{qc.tag()}/{method}", us,
+                         f"ppl={p:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

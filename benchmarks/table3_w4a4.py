@@ -1,0 +1,61 @@
+"""Paper Table 3 analog: W4A4 weight-activation quantization.
+
+Methods: SmoothQuant (static 0.5 migration + RTN), OmniQuant-diag,
+AffineQuant. The paper's claim: AffineQuant < OmniQuant < SmoothQuant PPL.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import equivalence as eq
+from repro.core.baselines import smoothquant_transform, block_linear_inputs
+from repro.core.calibration import CalibConfig, quantize_dense_model
+from repro.core.quantizer import (QuantConfig, fake_quant_activation,
+                                  fake_quant_weight)
+
+from benchmarks import common
+
+
+def _smoothquant_model(params, cfg, calib):
+    """Static SmoothQuant: diag scale after each norm, RTN W4, per-token A4
+    evaluated via the same fake-quant pipeline (use_affine=False, epochs=0
+    equivalent: we reuse the calibration plumbing with 1 epoch, lr=0)."""
+    ccfg = CalibConfig(epochs=1, lr_affine=0.0, lr_shift=0.0, lr_lwc=0.0,
+                       use_affine=False, use_shift=False)
+    qcfg = QuantConfig(w_bits=4, a_bits=4, group_size=0, lwc=False)
+    q, _ = quantize_dense_model(params, cfg, qcfg, ccfg, calib, log=False)
+    return q
+
+
+def run(arch: str = "llama-mini"):
+    cfg, model, params = common.trained_model(arch)
+    calib, test = common.eval_sets(cfg)
+    qcfg = QuantConfig(w_bits=4, a_bits=4, group_size=0, lwc=True)
+    rows = [(f"table3/{arch}/fp", 0.0,
+             f"ppl={common.ppl(model, params, test):.4f}")]
+
+    t0 = time.perf_counter()
+    sq = _smoothquant_model(params, cfg, calib)
+    rows.append((f"table3/{arch}/w4a4/smoothquant",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"ppl={common.ppl(model, sq, test):.4f}"))
+
+    for method, use_affine in (("omniquant", False), ("affinequant", True)):
+        t0 = time.perf_counter()
+        q, info = quantize_dense_model(
+            params, cfg, qcfg,
+            CalibConfig(epochs=common.EPOCHS, alpha=0.1,
+                        use_affine=use_affine), calib, log=False)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table3/{arch}/w4a4/{method}", us,
+                     f"ppl={common.ppl(model, q, test):.4f};"
+                     f"last_block_mse={info['final_losses'][-1]:.6f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,41 @@
+"""Paper Table 5 analog: stability factor alpha sweep.
+
+Expectation: an intermediate alpha is best; very large alpha risks losing
+strict diagonal dominance (divergence), alpha -> 0 degenerates toward
+OmniQuant-diag performance.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.calibration import CalibConfig, quantize_dense_model
+from repro.core.quantizer import QuantConfig
+
+from benchmarks import common
+
+ALPHAS = (1.0, 1e-1, 1e-2, 1e-3, 1e-4)
+
+
+def run(arch: str = "llama-mini"):
+    cfg, model, params = common.trained_model(arch)
+    calib, test = common.eval_sets(cfg)
+    qcfg = QuantConfig(w_bits=2, a_bits=16, group_size=0, lwc=True)
+    rows = [(f"table5/{arch}/fp", 0.0,
+             f"ppl={common.ppl(model, params, test):.4f}")]
+    for alpha in ALPHAS:
+        t0 = time.perf_counter()
+        q, info = quantize_dense_model(
+            params, cfg, qcfg,
+            CalibConfig(epochs=common.EPOCHS, alpha=alpha), calib, log=False)
+        us = (time.perf_counter() - t0) * 1e6
+        p = common.ppl(model, q, test)
+        diverged = not np.isfinite(info["final_losses"]).all()
+        rows.append((f"table5/{arch}/alpha={alpha:g}", us,
+                     f"ppl={p:.4f};diverged={diverged}"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,30 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+The 10 assigned architectures (exact public configs) plus the paper's own
+evaluation families (OPT / LLaMA) in CPU-runnable miniature sizes used by the
+benchmark suite.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape
+from repro.configs.archs import (
+    ARCHS,
+    PAPER_ARCHS,
+)
+
+_ALL = dict(ARCHS)
+_ALL.update(PAPER_ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ALL:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALL)}")
+    return _ALL[name]
+
+
+def list_archs(assigned_only: bool = False) -> list[str]:
+    return sorted(ARCHS if assigned_only else _ALL)
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape", "get_config",
+           "list_archs", "ARCHS", "PAPER_ARCHS"]

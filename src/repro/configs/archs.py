@@ -1,0 +1,153 @@
+"""The 10 assigned (architecture x shape) configs + paper's own families.
+
+Every entry reproduces the exact published configuration named in the
+assignment (sources in brackets). ``supported_shapes`` / ``skip_reasons``
+encode the assignment's skip rules:
+
+  * ``long_500k`` needs sub-quadratic attention -> only mamba2 (SSM) and
+    recurrentgemma (local attention + RG-LRU) run it,
+  * encoder-only (hubert) has no autoregressive decode.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (ENCODER_SKIP, FULL_ATTENTION_SKIP, ModelConfig)
+
+_LM_ALL = ("train_4k", "prefill_32k", "decode_32k")
+_SUBQUAD = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+_ENCODER = ("train_4k", "prefill_32k")
+
+ARCHS: dict[str, ModelConfig] = {
+    # [dense] 32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064
+    # RoPE SwiGLU GQA  [arXiv:2412.08905; hf]
+    "phi4-mini-3.8b": ModelConfig(
+        name="phi4-mini-3.8b", family="dense",
+        num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab_size=200064,
+        act="swiglu", norm="rmsnorm", rope_theta=10000.0, microbatches=4,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [dense] 48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064
+    # GQA, QKV bias  [hf:Qwen/Qwen2.5; hf]
+    "qwen2.5-14b": ModelConfig(
+        name="qwen2.5-14b", family="dense",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=13824, vocab_size=152064,
+        act="swiglu", norm="rmsnorm", qkv_bias=True, rope_theta=1000000.0,
+        microbatches=8,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [dense] 40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352
+    # [hf:stabilityai/stablelm-2; hf]
+    "stablelm-12b": ModelConfig(
+        name="stablelm-12b", family="dense",
+        num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+        head_dim=160, d_ff=13824, vocab_size=100352,
+        act="swiglu", norm="layernorm", rope_theta=10000.0, microbatches=8,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [dense] 18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=256000
+    # GeGLU, head_dim=256, MQA  [arXiv:2403.08295; hf]
+    "gemma-2b": ModelConfig(
+        name="gemma-2b", family="dense",
+        num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+        head_dim=256, d_ff=16384, vocab_size=256000,
+        act="geglu", norm="rmsnorm", rope_theta=10000.0, tie_embeddings=True,
+        microbatches=2,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [ssm] 48L d_model=2048 (attn-free) vocab=50280, ssm_state=128
+    # SSD (state-space duality)  [arXiv:2405.21060]
+    "mamba2-1.3b": ModelConfig(
+        name="mamba2-1.3b", family="mamba2",
+        num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1,
+        conv_width=4, ssm_chunk=256, tie_embeddings=True, microbatches=8,
+        supported_shapes=_SUBQUAD),
+
+    # [hybrid] 26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000
+    # RG-LRU + local attn, 1:2  [arXiv:2402.19427; hf]
+    "recurrentgemma-2b": ModelConfig(
+        name="recurrentgemma-2b", family="griffin",
+        num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+        head_dim=256, d_ff=7680, vocab_size=256000,
+        act="geglu", norm="rmsnorm", rope_theta=10000.0, tie_embeddings=True,
+        window=2048, attn_every=3, rnn_width=2560, conv_width=4,
+        scan_layers=False, microbatches=4,
+        supported_shapes=_SUBQUAD),
+
+    # [vlm] 18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216
+    # SigLIP + gemma  [arXiv:2407.07726; hf]
+    "paligemma-3b": ModelConfig(
+        name="paligemma-3b", family="vlm",
+        num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+        head_dim=256, d_ff=16384, vocab_size=257216,
+        act="geglu", norm="rmsnorm", rope_theta=10000.0, tie_embeddings=True,
+        num_prefix=256, frontend_stub=True, microbatches=2,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [moe] 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+    # MoE 16e top-4  [hf:databricks/dbrx-base]
+    "dbrx-132b": ModelConfig(
+        name="dbrx-132b", family="moe",
+        num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+        head_dim=128, d_ff=10752, vocab_size=100352,
+        act="swiglu", norm="layernorm", rope_theta=500000.0,
+        num_experts=16, top_k=4, capacity_factor=1.25,
+        microbatches=16, opt_state_dtype="bfloat16",
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [moe] 48L d_model=2048 32H (GQA kv=4) d_ff=768 vocab=151936,
+    # MoE 128e top-8  [hf:Qwen/Qwen3-30B-A3B; hf]
+    "qwen3-moe-30b-a3b": ModelConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+        head_dim=128, d_ff=768, vocab_size=151936,
+        act="swiglu", norm="rmsnorm", rope_theta=1000000.0,
+        num_experts=128, top_k=8, capacity_factor=1.25, microbatches=4,
+        supported_shapes=_LM_ALL, skip_reasons=FULL_ATTENTION_SKIP),
+
+    # [audio] 48L d_model=1280 16H d_ff=5120 vocab=504 — encoder-only
+    # [arXiv:2106.07447]
+    "hubert-xlarge": ModelConfig(
+        name="hubert-xlarge", family="audio",
+        num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+        head_dim=80, d_ff=5120, vocab_size=504,
+        act="gelu", norm="layernorm", rope_theta=0.0, causal=False,
+        frontend_stub=True, microbatches=4,
+        supported_shapes=_ENCODER, skip_reasons=ENCODER_SKIP),
+}
+
+
+def _opt(name, L, d, h, ff, **kw) -> ModelConfig:
+    """OPT family (paper's main evaluation model; Zhang et al., 2022)."""
+    return ModelConfig(
+        name=name, family="dense", num_layers=L, d_model=d, num_heads=h,
+        num_kv_heads=h, d_ff=ff, vocab_size=kw.pop("vocab", 50272),
+        act="relu", norm="layernorm", qkv_bias=True, rope_theta=0.0,
+        tie_embeddings=True, scan_layers=kw.pop("scan_layers", True),
+        dtype=kw.pop("dtype", "float32"), remat=False, **kw)
+
+
+def _llama(name, L, d, h, kv, ff, **kw) -> ModelConfig:
+    """LLaMA family (paper's second evaluation model; Touvron et al., 2023)."""
+    return ModelConfig(
+        name=name, family="dense", num_layers=L, d_model=d, num_heads=h,
+        num_kv_heads=kv, d_ff=ff, vocab_size=kw.pop("vocab", 32000),
+        act="swiglu", norm="rmsnorm", rope_theta=10000.0,
+        tie_embeddings=True, dtype=kw.pop("dtype", "float32"), remat=False,
+        **kw)
+
+
+# CPU-runnable miniatures of the paper's evaluation families. Benchmarks use
+# these to reproduce the paper's *method orderings* (Tables 1, 3-6); layer
+# structure is faithful (pre-LN decoder; OPT = ReLU MLP + biases + learned
+# positions approximated with sinusoidal, LLaMA = SwiGLU + RMSNorm + RoPE).
+PAPER_ARCHS: dict[str, ModelConfig] = {
+    "opt-125m": _opt("opt-125m", 12, 768, 12, 3072),
+    "opt-mini": _opt("opt-mini", 4, 256, 8, 1024, vocab=2048),
+    "opt-micro": _opt("opt-micro", 2, 128, 4, 512, vocab=512),
+    "llama-7b": _llama("llama-7b", 32, 4096, 32, 32, 11008),
+    "llama-mini": _llama("llama-mini", 4, 256, 8, 8, 704, vocab=2048),
+    "llama-micro": _llama("llama-micro", 2, 128, 4, 4, 384, vocab=512),
+}

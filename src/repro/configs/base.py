@@ -1,0 +1,210 @@
+"""Config dataclasses + the (arch x shape) cell definitions.
+
+``ModelConfig`` fully describes an architecture; ``ShapeConfig`` describes an
+input-shape cell (train / prefill / decode / long-context-decode). The
+assigned shape set is identical across LM archs:
+
+    train_4k      seq 4096,   global_batch 256   (train_step)
+    prefill_32k   seq 32768,  global_batch 32    (prefill)
+    decode_32k    seq 32768,  global_batch 128   (serve_step, 1 new token)
+    long_500k     seq 524288, global_batch 1     (serve_step, 1 new token)
+
+Skips are *data*, not code: each config lists its supported cells with a
+reason for any exclusion (encoder-only has no decode; quadratic attention
+skips long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, mode="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+def shape(name: str) -> ShapeConfig:
+    return ShapeConfig(name=name, **SHAPES[name])
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str                      # dense | mamba2 | griffin | moe | vlm | audio
+    # transformer trunk
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    act: str = "swiglu"              # swiglu | geglu | gelu | relu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    causal: bool = True              # False: bidirectional encoder (audio)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # griffin (recurrentgemma)
+    window: int = 0                  # sliding-window size for local attention
+    attn_every: int = 0              # 1 attention layer per `attn_every` layers
+    rnn_width: int = 0               # RG-LRU lane width (0 -> d_model)
+    # modality frontends (stub: precomputed embeddings)
+    num_prefix: int = 0              # vlm: image patches prepended
+    frontend_stub: bool = False      # audio/vlm: inputs are embeddings
+    frame_stride: int = 1            # audio: seq_len // stride frames
+    # runtime
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    microbatches: int = 1            # gradient-accumulation chunks per step
+    opt_state_dtype: str = "float32"  # Adam moment dtype (bf16 at 100B+ scale)
+    # perf-iteration knobs (see EXPERIMENTS.md §Perf)
+    attn_sharding: str = "auto"      # auto | batch (pin batch-only) | seq
+    ssd_bf16_intra: bool = False     # mamba2 intra-chunk products in bf16
+    attn_chunk_threshold: int = 8192
+    attn_block_q: int = 1024
+    attn_block_kv: int = 1024
+    # which shape cells this arch supports; others are recorded skips
+    supported_shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skip_reasons: tuple[tuple[str, str], ...] = ()
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def rnn_dim(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        h, hd = self.d_model, self.resolved_head_dim
+        n = 0
+        n += self.vocab_size * h                       # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * h                   # lm head
+        L = self.num_layers
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            attn = h * (self.num_heads * hd) + 2 * h * (self.num_kv_heads * hd) \
+                + (self.num_heads * hd) * h
+            if self.qkv_bias:
+                attn += (self.num_heads + 2 * self.num_kv_heads) * hd
+            if self.num_experts:
+                mlp_one = (2 * h * self.d_ff + self.d_ff * h
+                           if self.act in ("swiglu", "geglu")
+                           else 2 * h * self.d_ff)
+                mlp = self.num_experts * mlp_one + h * self.num_experts
+            else:
+                mlp = (3 * h * self.d_ff if self.act in ("swiglu", "geglu")
+                       else 2 * h * self.d_ff)
+            n += L * (attn + mlp + 2 * h)
+        elif self.family == "mamba2":
+            d_in = self.d_inner
+            proj_in = h * (2 * d_in + 2 * self.ssm_ngroups * self.ssm_state
+                           + self.ssm_heads)
+            n += L * (proj_in + d_in * h + 2 * h + d_in
+                      + self.conv_width * (d_in + 2 * self.ssm_ngroups * self.ssm_state))
+        elif self.family == "griffin":
+            d_r = self.rnn_dim
+            n_attn = L // max(self.attn_every, 1)
+            n_rec = L - n_attn
+            attn = h * (self.num_heads * hd) + 2 * h * (self.num_kv_heads * hd) \
+                + (self.num_heads * hd) * h
+            rec = 2 * h * d_r + d_r * h + self.conv_width * d_r + 2 * d_r + d_r
+            mlp = 3 * h * self.d_ff
+            n += n_attn * (attn + mlp + 2 * h) + n_rec * (rec + mlp + 2 * h)
+        return n
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE counts top_k of num_experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        h = self.d_model
+        mlp_one = (2 * h * self.d_ff + self.d_ff * h
+                   if self.act in ("swiglu", "geglu") else 2 * h * self.d_ff)
+        dense_like = self.param_count() - self.num_layers * (
+            self.num_experts - self.top_k) * mlp_one
+        return dense_like
+
+    def supports(self, shape_name: str) -> bool:
+        return shape_name in self.supported_shapes
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        for s, r in self.skip_reasons:
+            if s == shape_name:
+                return r
+        return None
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        base = dict(
+            name=self.name + "-smoke", family=self.family,
+            # griffin needs one full (rec, rec, attn) period to cover both
+            # block kinds; everything else smokes with 2 layers.
+            num_layers=3 if self.family == "griffin" else 2,
+            d_model=64,
+            num_heads=4, num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=16, d_ff=128, vocab_size=256,
+            act=self.act, norm=self.norm, qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta, tie_embeddings=True,
+            causal=self.causal,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_expand=self.ssm_expand, ssm_headdim=16 if self.ssm_state else 64,
+            ssm_ngroups=self.ssm_ngroups, conv_width=self.conv_width,
+            ssm_chunk=8,
+            window=min(self.window, 8) if self.window else 0,
+            attn_every=self.attn_every, rnn_width=64 if self.rnn_width else 0,
+            num_prefix=min(self.num_prefix, 4) if self.num_prefix else 0,
+            frontend_stub=self.frontend_stub, frame_stride=self.frame_stride,
+            dtype="float32", remat=False, scan_layers=self.scan_layers,
+            attn_chunk_threshold=self.attn_chunk_threshold,
+            supported_shapes=self.supported_shapes,
+            skip_reasons=self.skip_reasons,
+        )
+        base.update(overrides)
+        return ModelConfig(**base)
+
+
+FULL_ATTENTION_SKIP = (
+    ("long_500k", "quadratic full attention; 524288-token KV/score "
+                  "infeasible — per assignment, skipped for pure "
+                  "full-attention archs"),
+)
+ENCODER_SKIP = (
+    ("decode_32k", "encoder-only architecture has no autoregressive decode"),
+    ("long_500k", "encoder-only architecture has no autoregressive decode"),
+)

@@ -1,0 +1,170 @@
+"""Affine equivalent-transformation parameters (the paper's contribution).
+
+An AffineQuant transform at a linear layer's input is an invertible matrix
+``A`` (plus an optional translation ``shift``):
+
+    y = x @ w  =  ((x - shift) @ inv(A)) @ (A @ w)  +  (bias + shift @ w)
+
+The *transformed* weight ``A @ w`` is what gets quantized; the activation-side
+factor ``inv(A)`` (and shift) are merged away at deployment (see
+``repro.core.equivalence``).
+
+Parameterizations
+-----------------
+* ``full``     — dense (h, h) matrix, gradually unmasked by the GM schedule.
+* ``diagonal`` — h-vector (OmniQuant's learnable equivalent scale; also the
+                 alpha -> 0 limit of the full transform). Used after
+                 LayerNorm in weight-activation mode so it merges into LN.
+* ``headwise`` — (num_heads, head_dim, head_dim) block-diagonal matrix for
+                 the v_proj -> out_proj boundary inside attention.
+
+Weight convention everywhere: ``w`` is (in_features, out_features) and the
+transform LEFT-multiplies it: ``w_t = a @ w`` (with ``a`` (in, in)).  On the
+activation side that corresponds to RIGHT-multiplication by ``inv(a)``:
+``x_t = (x - shift) @ inv(a)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradual_mask as gm
+
+Kind = Literal["full", "diagonal", "headwise"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineSpec:
+    """Static description of one transform site inside a block."""
+    name: str                  # e.g. "ln_attn", "vo", "ln_mlp"
+    kind: Kind
+    dim: int                   # full/diagonal: hidden size; headwise: head_dim
+    num_heads: int = 1         # headwise only
+    with_shift: bool = False   # learnable translation (Outlier Suppression+)
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def smoothquant_diag(act_absmax: jax.Array, w_absmax: jax.Array,
+                     migration: float = 0.5, eps: float = 1e-5) -> jax.Array:
+    """SmoothQuant-style diagonal initialization (paper §A.7).
+
+    ``s_j = act_max_j^m / w_max_j^(1-m)``; the affine matrix starts as
+    diag(1/s) on the activation side == diag(s) applied to weights.  We
+    return the *weight-side* diagonal (the thing stored in ``A``).
+    """
+    a = jnp.maximum(act_absmax.astype(jnp.float32), eps) ** migration
+    w = jnp.maximum(w_absmax.astype(jnp.float32), eps) ** (1.0 - migration)
+    s = jnp.clip(a / w, 1e-5, 1e5)
+    # Weights are multiplied by A: to *shrink* big activations we scale the
+    # corresponding weight rows UP by s and activations down by 1/s.
+    return s
+
+
+def init_params(spec: AffineSpec, diag_init: Optional[jax.Array] = None,
+                dtype=jnp.float32) -> dict:
+    """Create the learnable pytree for one transform site.
+
+    The full/headwise matrix is stored densely but *initialized diagonal*
+    (strictly diagonally dominant by construction), as the GM schedule
+    requires.
+    """
+    if diag_init is None:
+        diag_init = jnp.ones((spec.dim,), dtype)
+    diag_init = diag_init.astype(dtype)
+    params: dict = {}
+    if spec.kind == "diagonal":
+        params["a_diag"] = diag_init
+    elif spec.kind == "full":
+        params["a"] = jnp.diag(diag_init)
+    elif spec.kind == "headwise":
+        eye = jnp.eye(spec.dim, dtype=dtype)
+        params["a"] = jnp.broadcast_to(eye, (spec.num_heads, spec.dim, spec.dim)).copy()
+    else:
+        raise ValueError(spec.kind)
+    if spec.with_shift:
+        hidden = spec.dim if spec.kind != "headwise" else spec.dim * spec.num_heads
+        params["shift"] = jnp.zeros((hidden,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# effective (masked) matrices and inverses
+# ---------------------------------------------------------------------------
+
+def effective_matrix(spec: AffineSpec, params: dict,
+                     mask: Optional[jax.Array] = None) -> jax.Array:
+    """Materialize A* = A o GM for this site (paper Eq. 7).
+
+    For ``diagonal`` sites the mask is irrelevant (identity on the diagonal).
+    For ``headwise`` sites the same (head_dim, head_dim) mask applies to every
+    head block.
+    """
+    if spec.kind == "diagonal":
+        return params["a_diag"]
+    a = params["a"]
+    if mask is not None:
+        a = gm.apply_mask(a, mask)
+    return a
+
+
+def invert(spec: AffineSpec, a_eff: jax.Array,
+           solve_dtype=jnp.float32) -> jax.Array:
+    """Inverse of the effective transform.
+
+    Strict diagonal dominance (maintained by GM) keeps ``A`` well-conditioned,
+    so an fp32 solve is accurate; fp64 is supported for the paper's Table-4
+    precision ablation (enable via ``solve_dtype=jnp.float64`` under
+    ``jax.config.update('jax_enable_x64', True)``).
+    """
+    if spec.kind == "diagonal":
+        return 1.0 / a_eff.astype(solve_dtype)
+    eye = jnp.eye(spec.dim, dtype=solve_dtype)
+    if spec.kind == "headwise":
+        return jax.vmap(lambda m: jnp.linalg.solve(m.astype(solve_dtype), eye))(a_eff)
+    return jnp.linalg.solve(a_eff.astype(solve_dtype), eye)
+
+
+# ---------------------------------------------------------------------------
+# applying transforms (calibration-time, differentiable)
+# ---------------------------------------------------------------------------
+
+def transform_weight(spec: AffineSpec, a_eff: jax.Array, w: jax.Array) -> jax.Array:
+    """w_t = A @ w (left-multiply along the input-features axis)."""
+    if spec.kind == "diagonal":
+        return a_eff[:, None] * w
+    if spec.kind == "headwise":
+        # w: (num_heads * head_dim, d_out) -> per-head left multiply.
+        h, d = spec.num_heads, spec.dim
+        wh = w.reshape(h, d, -1)
+        return jnp.einsum("hij,hjo->hio", a_eff.astype(w.dtype), wh).reshape(w.shape)
+    return (a_eff.astype(w.dtype) @ w.astype(a_eff.dtype)).astype(w.dtype)
+
+
+def transform_activation(spec: AffineSpec, a_inv: jax.Array, x: jax.Array,
+                         shift: Optional[jax.Array] = None) -> jax.Array:
+    """x_t = (x - shift) @ inv(A) (right-multiply along features)."""
+    if shift is not None:
+        x = x - shift.astype(x.dtype)
+    if spec.kind == "diagonal":
+        return x * a_inv.astype(x.dtype)
+    if spec.kind == "headwise":
+        h, d = spec.num_heads, spec.dim
+        xh = x.reshape(*x.shape[:-1], h, d)
+        out = jnp.einsum("...hd,hde->...he", xh, a_inv.astype(x.dtype))
+        return out.reshape(x.shape)
+    return (x @ a_inv.astype(x.dtype))
+
+
+def shift_bias_correction(shift: jax.Array, w: jax.Array,
+                          bias: Optional[jax.Array]) -> jax.Array:
+    """bias' = bias + shift @ w (Eq. 4's ``b + delta W`` term)."""
+    corr = shift.astype(jnp.float32) @ w.astype(jnp.float32)
+    if bias is None:
+        return corr.astype(w.dtype)
+    return (bias.astype(jnp.float32) + corr).astype(w.dtype)

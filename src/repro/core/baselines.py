@@ -1,0 +1,261 @@
+"""PTQ baselines the paper compares against: RTN, AWQ, GPTQ, SmoothQuant.
+
+All baselines consume the same calibration stream as AffineQuant and emit
+fake-quant effective weights into the same dense-block parameter structure,
+so every method is evaluated by the identical model code (fair comparison,
+as in the paper's tables).
+
+* RTN          — round-to-nearest min/max grid, no calibration.
+* AWQ          — per-input-channel scale s = act_max^alpha, alpha grid-
+                 searched per layer against the layer-output MSE (Lin et
+                 al., 2023, simplified: scale search without the clip
+                 search).
+* GPTQ         — second-order column-by-column quantization with Cholesky-
+                 factored Hessian error compensation (Frantar et al., 2022).
+* SmoothQuant  — fixed alpha=0.5 activation->weight difficulty migration
+                 (Xiao et al., 2023); the weight-activation baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import QuantConfig, fake_quant_weight
+from repro.models import layers
+from repro.utils import logger
+
+# dense-block linear sites: (weight key, input kind)
+#   input kinds: "ln_attn" (post attention norm), "attn_out", "ln_mlp",
+#   "mlp_inner"
+DENSE_LINEARS = [
+    ("wq", "ln_attn"), ("wk", "ln_attn"), ("wv", "ln_attn"),
+    ("wo", "attn_out"),
+    ("mlp/w_gate", "ln_mlp"), ("mlp/w_up", "ln_mlp"),
+    ("mlp/w_down", "mlp_inner"),
+]
+
+
+def _get(tree, path):
+    node = tree
+    for p in path.split("/"):
+        node = node[p]
+    return node
+
+
+def _set(tree, path, val):
+    node = tree
+    parts = path.split("/")
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] = val
+
+
+def block_linear_inputs(block_params: dict, x: jax.Array, cfg,
+                        positions) -> dict:
+    """Run one fp block and capture the input activation of every linear."""
+    from repro.models import attention as attn_lib
+    caps: dict = {}
+    h = layers.apply_norm(block_params["ln_attn"], x, cfg.norm)
+    caps["ln_attn"] = h
+    q = h @ block_params["wq"]
+    k = h @ block_params["wk"]
+    v = h @ block_params["wv"]
+    if "bq" in block_params:
+        q, k, v = (q + block_params["bq"], k + block_params["bk"],
+                   v + block_params["bv"])
+    b, t = x.shape[0], x.shape[1]
+    hd = cfg.resolved_head_dim
+    q = q.reshape(b, t, cfg.num_heads, hd)
+    k = k.reshape(b, t, cfg.num_kv_heads, hd)
+    v = v.reshape(b, t, cfg.num_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    attn = attn_lib.attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                              chunked_threshold=cfg.attn_chunk_threshold)
+    attn = attn.reshape(b, t, -1)
+    caps["attn_out"] = attn
+    x = x + attn @ block_params["wo"]
+    h2 = layers.apply_norm(block_params["ln_mlp"], x, cfg.norm)
+    caps["ln_mlp"] = h2
+    if cfg.act in ("swiglu", "geglu"):
+        gate_fn = (jax.nn.silu if cfg.act == "swiglu"
+                   else lambda z: jax.nn.gelu(z, approximate=True))
+        inner = gate_fn(h2 @ block_params["mlp"]["w_gate"]) * (
+            h2 @ block_params["mlp"]["w_up"])
+    elif cfg.act == "gelu":
+        inner = jax.nn.gelu(h2 @ block_params["mlp"]["w_up"], approximate=True)
+    else:
+        inner = jax.nn.relu(h2 @ block_params["mlp"]["w_up"])
+    caps["mlp_inner"] = inner
+    return caps
+
+
+# ---------------------------------------------------------------------------
+# RTN
+# ---------------------------------------------------------------------------
+
+def rtn_quantize_weight(w: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    cfg0 = dataclasses.replace(qcfg, lwc=False)
+    if w.ndim == 3:
+        return jax.vmap(lambda wi: fake_quant_weight(wi, cfg0))(w)
+    return fake_quant_weight(w, cfg0)
+
+
+# ---------------------------------------------------------------------------
+# AWQ (scale search)
+# ---------------------------------------------------------------------------
+
+def awq_quantize_weight(w: jax.Array, x: jax.Array, qcfg: QuantConfig,
+                        grid: int = 11) -> jax.Array:
+    """Search s = act_max^alpha over alpha in [0,1]; return fused fake-quant
+    effective weight diag(1/s) Q(diag(s) W)."""
+    cfg0 = dataclasses.replace(qcfg, lwc=False)
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    act_max = jnp.maximum(jnp.max(jnp.abs(xf), axis=0), 1e-5)
+    wf = w.astype(jnp.float32)
+    y_ref = xf @ wf
+
+    best = (jnp.inf, wf)
+    for i in range(grid):
+        alpha = i / (grid - 1)
+        s = jnp.clip(act_max ** alpha, 1e-4, 1e4)
+        w_eff = (1.0 / s)[:, None] * fake_quant_weight(s[:, None] * wf, cfg0)
+        err = jnp.mean(jnp.square(xf @ w_eff - y_ref))
+        if float(err) < float(best[0]):
+            best = (err, w_eff)
+    return best[1].astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ
+# ---------------------------------------------------------------------------
+
+def gptq_quantize_weight(w: jax.Array, x: jax.Array, qcfg: QuantConfig,
+                         block_size: int = 64,
+                         percdamp: float = 0.01) -> jax.Array:
+    """GPTQ with Cholesky error compensation.
+
+    ``w``: (d_in, d_out); ``x``: (..., d_in) calibration inputs. Runs in
+    numpy float64 (it is a one-shot offline solve; the paper's artifact does
+    the same on CPU for the Hessian path).
+    """
+    wf = np.asarray(w, np.float64).copy()
+    xf = np.asarray(x, np.float64).reshape(-1, w.shape[0])
+    d_in, d_out = wf.shape
+    h = 2.0 * (xf.T @ xf)
+
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    wf[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(h))
+    h[np.diag_indices(d_in)] += damp
+
+    # Hinv via Cholesky: upper triangular factor of inv(H)
+    hinv = np.linalg.inv(h)
+    hinv = np.linalg.cholesky(hinv, upper=True)
+
+    g = qcfg.group_size or d_in
+    q_out = np.zeros_like(wf)
+    for b0 in range(0, d_in, block_size):
+        b1 = min(b0 + block_size, d_in)
+        w_blk = wf[b0:b1, :].copy()
+        err_blk = np.zeros_like(w_blk)
+        for i in range(b1 - b0):
+            gi = b0 + i
+            # per-group quantization grid computed from the *current* w
+            g0 = (gi // g) * g
+            g1 = min(g0 + g, d_in)
+            seg = wf[g0:g1, :]
+            wmax = seg.max(axis=0)
+            wmin = seg.min(axis=0)
+            scale = np.maximum(wmax - wmin, 1e-8) / (2 ** qcfg.w_bits - 1)
+            zp = np.round(-wmin / scale)
+            qv = np.clip(np.round(w_blk[i] / scale) + zp, 0,
+                         2 ** qcfg.w_bits - 1)
+            dq = (qv - zp) * scale
+            q_out[gi, :] = dq
+            d = hinv[gi, gi]
+            err = (w_blk[i] - dq) / d
+            # compensate remaining columns in the block
+            if i + 1 < b1 - b0:
+                w_blk[i + 1:] -= np.outer(hinv[gi, b0 + i + 1:b1], err)
+            err_blk[i] = err
+        wf[b0:b1, :] = w_blk
+        if b1 < d_in:
+            wf[b1:, :] -= hinv[b0:b1, b1:].T @ err_blk
+    return jnp.asarray(q_out, dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant (weight-activation)
+# ---------------------------------------------------------------------------
+
+def smoothquant_transform(w: jax.Array, act_max: jax.Array,
+                          alpha: float = 0.5
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Returns (scaled weight s*W, activation divisor s)."""
+    wf = w.astype(jnp.float32)
+    w_max = jnp.maximum(jnp.max(jnp.abs(wf), axis=1), 1e-5)
+    s = jnp.clip(act_max ** alpha / w_max ** (1 - alpha), 1e-4, 1e4)
+    return (s[:, None] * wf).astype(w.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# whole-model drivers (dense family)
+# ---------------------------------------------------------------------------
+
+def quantize_model_baseline(params: dict, cfg, qcfg: QuantConfig,
+                            calib_tokens: jax.Array, method: str,
+                            log: bool = False) -> dict:
+    """Apply a weight-only baseline (rtn | awq | gptq) to a dense LM."""
+    from repro.models import transformer
+
+    if cfg.scan_layers:
+        blocks = [jax.tree_util.tree_map(lambda t, i=i: t[i], params["layers"])
+                  for i in range(cfg.num_layers)]
+    else:
+        blocks = list(params["layers"])
+
+    x = jnp.take(params["embed"], calib_tokens, axis=0)
+    if cfg.rope_theta == 0:
+        x = x + transformer._sinusoidal(x.shape[1], cfg.d_model
+                                        ).astype(x.dtype)[None]
+    positions = jnp.arange(calib_tokens.shape[1])[None, :]
+    new_blocks = []
+    for li, bp in enumerate(blocks):
+        caps = (block_linear_inputs(bp, x, cfg, positions)
+                if method in ("awq", "gptq") else None)
+        nbp = jax.tree_util.tree_map(lambda t: t, bp)
+        for wkey, in_kind in DENSE_LINEARS:
+            try:
+                w = _get(bp, wkey)
+            except KeyError:
+                continue
+            if method == "rtn":
+                wq = rtn_quantize_weight(w, qcfg)
+            elif method == "awq":
+                wq = awq_quantize_weight(w, caps[in_kind], qcfg)
+            elif method == "gptq":
+                wq = gptq_quantize_weight(w, caps[in_kind], qcfg)
+            else:
+                raise ValueError(method)
+            _set(nbp, wkey, wq)
+        new_blocks.append(nbp)
+        # stream forward through the quantized block
+        x, _, _ = transformer.apply_block_full(nbp, x, cfg, positions, 0,
+                                               cfg.window, False)
+        if log:
+            logger.info("%s block %d/%d done", method, li + 1, len(blocks))
+
+    out = dict(params)
+    if cfg.scan_layers:
+        out["layers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                               *new_blocks)
+    else:
+        out["layers"] = new_blocks
+    return out

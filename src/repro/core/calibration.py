@@ -1,0 +1,580 @@
+"""Block-wise AffineQuant calibration (paper Eq. 4 + §3.2 Gradual Mask).
+
+Pipeline (per transformer block, sequentially, OmniQuant-style two streams):
+
+    fp_out    = block_fp(fp_in)                      # target
+    quant_out = block_q(quant_in; A, delta, lwc)     # optimized
+    loss      = || fp_out - quant_out ||_F^2 / numel
+    ... Adam over (A, delta, lwc) for `epochs`, GM bandwidth grows per epoch
+    quant_in  <- block_q(quant_in) ; fp_in <- block_fp(fp_in)
+
+The quantized block computes *effective* weights each step:
+
+    Wq_eff   = Q( A1 @ Wq )          (consumers of the ln_attn transform)
+    Wv_eff   = Q( A1 @ Wv @ blockdiag(inv(A2)) )     (vo producer side)
+    Wo_eff   = Q( blockdiag(A2) @ Wo )               (vo consumer side)
+    Wg/Wu_eff= Q( A3 @ Wg/Wu ) ;  W_down_eff = Q(W_down)   (fc2 excluded)
+
+and transformed activations  h_t = (h - delta) @ inv(A1)  after each norm
+(per-token fake-quantized in weight-activation mode).
+
+Everything is differentiable (STE through Q, solve through inv) and jit-ed;
+the calibration batch axis shards over the "data" mesh axis when a mesh is
+bound, making calibration itself data-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core import equivalence as eq
+from repro.core import gradual_mask as gm
+from repro.core.quantizer import (QuantConfig, fake_quant_activation,
+                                  fake_quant_weight, init_lwc_params)
+from repro.core.sites import block_sites
+from repro.models import attention as attn_lib
+from repro.models import layers
+from repro.utils import logger
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibConfig:
+    """Calibration hyper-parameters (defaults track OmniQuant/AffineQuant)."""
+    epochs: int = 20
+    lr_affine: float = 5e-3
+    lr_shift: float = 1e-3
+    lr_lwc: float = 1e-2
+    alpha: float = 1.0            # GM stability factor (paper Table 5)
+    use_gradual_mask: bool = True
+    use_affine: bool = True       # False -> OmniQuant-diag (alpha -> 0 limit)
+    use_shift: bool = True
+    solve_dtype: str = "float32"  # fp64 reproduces the paper's Table-4 row
+    batch_size: int = 8           # calibration samples per step
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization for one block
+# ---------------------------------------------------------------------------
+
+def init_block_quant_params(block_params: dict, cfg, qcfg: QuantConfig,
+                            ccfg: CalibConfig,
+                            act_stats: Optional[dict] = None) -> dict:
+    """Learnable pytree: affine matrices, shifts, LWC clip logits."""
+    weight_only = not qcfg.quantize_acts
+    sites = {s.name: s for s in block_sites(cfg, weight_only)}
+    params: dict = {"affine": {}, "lwc": {}}
+
+    def diag_init(site_name: str, w_key: str) -> jax.Array:
+        if act_stats and site_name in act_stats:
+            w = _get(block_params, w_key)
+            if w.ndim == 3:      # stacked experts (E, d_in, d_out)
+                w_absmax = jnp.max(jnp.abs(w), axis=(0, 2))
+            else:                # (d_in, d_out)
+                w_absmax = jnp.max(jnp.abs(w), axis=1)
+            return af.smoothquant_diag(act_stats[site_name], w_absmax)
+        dim = sites[site_name].dim
+        return jnp.ones((dim,), jnp.float32)
+
+    if not ccfg.use_affine:
+        # OmniQuant-diag: force every non-headwise site diagonal
+        sites = {n: (dataclasses.replace(s, kind="diagonal")
+                     if s.kind == "full" else s)
+                 for n, s in sites.items()}
+
+    used_sites: dict = {}
+    for name, spec in sites.items():
+        if spec.kind == "headwise" and not ccfg.use_affine:
+            continue  # OmniQuant has no headwise transform
+        init = None
+        if name == "ln_attn":
+            init = diag_init(name, "wq")
+        elif name == "ln_mlp":
+            key = "moe/w_up" if cfg.num_experts else "mlp/w_up"
+            init = diag_init(name, key)
+        spec2 = spec if ccfg.use_shift else dataclasses.replace(
+            spec, with_shift=False)
+        params["affine"][name] = af.init_params(spec2, init)
+        used_sites[name] = spec2
+    params["_sites"] = {n: dataclasses.asdict(s) for n, s in used_sites.items()}
+
+    if qcfg.lwc:
+        for wname in _weight_names(cfg):
+            w = _get(block_params, wname)
+            shape2d = (w.shape[-2], w.shape[-1])
+            lwc = init_lwc_params(shape2d, qcfg.group_size)
+            if w.ndim == 3:   # stacked experts
+                lwc = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (w.shape[0],) + x.shape).copy(), lwc)
+            params["lwc"][wname] = lwc
+    return params
+
+
+def _weight_names(cfg) -> list[str]:
+    from repro.core.sites import quantized_weights
+    return quantized_weights(cfg)
+
+
+def _get(tree: dict, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _specs_from(params: dict) -> dict:
+    return {n: af.AffineSpec(**d) for n, d in params["_sites"].items()}
+
+
+# ---------------------------------------------------------------------------
+# effective (transformed + fake-quantized) weights
+# ---------------------------------------------------------------------------
+
+def _masks(cfg, specs: dict, epoch: int, ccfg: CalibConfig) -> dict:
+    """GM matrices per site for the current epoch (paper Eq. 6)."""
+    out = {}
+    for name, spec in specs.items():
+        if spec.kind == "diagonal":
+            out[name] = None
+        elif spec.kind == "headwise":
+            out[name] = gm.gradual_mask(
+                spec.dim, epoch if ccfg.use_gradual_mask else ccfg.epochs,
+                ccfg.epochs, ccfg.alpha)
+        else:
+            out[name] = gm.gradual_mask(
+                spec.dim, epoch if ccfg.use_gradual_mask else ccfg.epochs,
+                ccfg.epochs, ccfg.alpha)
+    return out
+
+
+def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
+                      ccfg: CalibConfig, masks: dict) -> dict:
+    """Compute every transformed + pseudo-quantized weight of the block."""
+    specs = _specs_from(qp)
+    solve_dt = jnp.dtype(ccfg.solve_dtype)
+    out: dict = {}
+
+    def a_of(name):
+        spec = specs[name]
+        a_eff = af.effective_matrix(spec, qp["affine"][name],
+                                    masks.get(name))
+        return spec, a_eff
+
+    def quant(w, name):
+        lwc = qp["lwc"].get(name)
+        if w.ndim == 3:   # (E, d, f): vmap the per-matrix quantizer
+            if lwc is None:
+                return jax.vmap(lambda wi: fake_quant_weight(wi, qcfg))(w)
+            return jax.vmap(lambda wi, li: fake_quant_weight(wi, qcfg, li)
+                            )(w, lwc)
+        return fake_quant_weight(w, qcfg, lwc)
+
+    # --- attention side ---
+    if "ln_attn" in specs:
+        spec1, a1 = a_of("ln_attn")
+        wq = af.transform_weight(spec1, a1, block_params["wq"])
+        wk = af.transform_weight(spec1, a1, block_params["wk"])
+        wv = af.transform_weight(spec1, a1, block_params["wv"])
+        if "vo" in specs:
+            spec2, a2 = a_of("vo")
+            a2_inv = af.invert(spec2, a2, solve_dt).astype(wv.dtype)
+            hd = spec2.dim
+            wv_h = wv.reshape(wv.shape[0], cfg.num_kv_heads, hd)
+            wv = jnp.einsum("dkh,khe->dke", wv_h, a2_inv).reshape(wv.shape)
+            wo = eq_headwise_left(a2, block_params["wo"], cfg)
+        else:
+            wo = block_params["wo"]
+        out["wq"], out["wk"], out["wv"] = (quant(wq, "wq"), quant(wk, "wk"),
+                                           quant(wv, "wv"))
+        out["wo"] = quant(wo, "wo")
+        # shift-corrected biases (b + delta @ W) — Eq. 4's last term
+        shift1 = qp["affine"]["ln_attn"].get("shift")
+        for wname, bname in (("wq", "bq"), ("wk", "bk"), ("wv", "bv")):
+            b = block_params.get(bname)
+            if shift1 is not None:
+                # bias correction uses the *pre-transform* weight (exact:
+                # delta@W == (delta A^-1)@(A W))
+                b = af.shift_bias_correction(shift1, block_params[wname], b)
+            if b is not None:
+                out[bname] = b
+
+    # --- mlp side ---
+    mlp_site = "ln_mlp" if "ln_mlp" in specs else None
+    prefix = "moe" if cfg.num_experts else "mlp"
+    for sub in (("w_gate", "w_up", "w_down") if cfg.act in ("swiglu", "geglu")
+                else ("w_up", "w_down")):
+        w = block_params[prefix][sub]
+        name = f"{prefix}/{sub}"
+        if mlp_site and sub in ("w_gate", "w_up"):
+            spec3, a3 = a_of(mlp_site)
+            if w.ndim == 3:
+                w = jax.vmap(lambda wi: af.transform_weight(spec3, a3, wi))(w)
+            else:
+                w = af.transform_weight(spec3, a3, w)
+        out[name] = quant(w, name)
+    if cfg.num_experts:
+        out["moe/router"] = block_params["moe"]["router"]
+        if mlp_site:
+            spec3, a3 = a_of(mlp_site)
+            out["moe/router"] = af.transform_weight(spec3, a3,
+                                                    out["moe/router"])
+    elif mlp_site:
+        shift3 = qp["affine"][mlp_site].get("shift")
+        if shift3 is not None:
+            for sub in (("w_gate", "b_gate"), ("w_up", "b_up")):
+                if sub[0] in block_params["mlp"]:
+                    out[f"mlp/{sub[1]}"] = af.shift_bias_correction(
+                        shift3, block_params["mlp"][sub[0]], None)
+    return out
+
+
+def eq_headwise_left(a2: jax.Array, wo: jax.Array, cfg) -> jax.Array:
+    """blockdiag(A2) @ Wo with GQA group tying (A2 per KV head)."""
+    hd = a2.shape[-1]
+    group = cfg.num_heads // cfg.num_kv_heads
+    wo_h = wo.reshape(cfg.num_kv_heads, group, hd, -1)
+    wo_t = jnp.einsum("khe,kgeo->kgho", a2.astype(wo.dtype), wo_h)
+    return wo_t.reshape(wo.shape)
+
+
+# ---------------------------------------------------------------------------
+# the quantized block forward
+# ---------------------------------------------------------------------------
+
+def quant_block_forward(block_params: dict, qp: dict, x: jax.Array, cfg,
+                        qcfg: QuantConfig, ccfg: CalibConfig, masks: dict,
+                        positions: jax.Array) -> jax.Array:
+    """One transformer block with transformed+quantized weights (Eq. 4 RHS)."""
+    specs = _specs_from(qp)
+    solve_dt = jnp.dtype(ccfg.solve_dtype)
+    ws = effective_weights(block_params, qp, cfg, qcfg, ccfg, masks)
+
+    def aq(t):   # activation pseudo-quant (weight-activation mode)
+        return fake_quant_activation(t, qcfg)
+
+    # attention half
+    h = layers.apply_norm(block_params["ln_attn"], x, cfg.norm)
+    if "ln_attn" in specs:
+        spec1 = specs["ln_attn"]
+        a1 = af.effective_matrix(spec1, qp["affine"]["ln_attn"],
+                                 masks.get("ln_attn"))
+        a1_inv = af.invert(spec1, a1, solve_dt)
+        h = af.transform_activation(spec1, a1_inv, h,
+                                    qp["affine"]["ln_attn"].get("shift"))
+    h = aq(h)
+
+    def bias(name):
+        if name in ws:
+            return ws[name]
+        return block_params.get(name, None)
+
+    q = h @ ws["wq"]
+    k = h @ ws["wk"]
+    v = h @ ws["wv"]
+    if bias("bq") is not None:
+        q, k, v = q + bias("bq"), k + bias("bk"), v + bias("bv")
+    b, t = x.shape[0], x.shape[1]
+    hd = cfg.resolved_head_dim
+    q = q.reshape(b, t, cfg.num_heads, hd)
+    k = k.reshape(b, t, cfg.num_kv_heads, hd)
+    v = v.reshape(b, t, cfg.num_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    attn = attn_lib.attention(q, k, v, causal=cfg.causal,
+                              window=cfg.window,
+                              chunked_threshold=cfg.attn_chunk_threshold)
+    attn = attn.reshape(b, t, -1)
+    x = x + aq(attn) @ ws["wo"]
+
+    # mlp half
+    h2 = layers.apply_norm(block_params["ln_mlp"], x, cfg.norm)
+    if "ln_mlp" in specs:
+        spec3 = specs["ln_mlp"]
+        a3 = af.effective_matrix(spec3, qp["affine"]["ln_mlp"],
+                                 masks.get("ln_mlp"))
+        a3_inv = af.invert(spec3, a3, solve_dt)
+        h2 = af.transform_activation(spec3, a3_inv, h2,
+                                     qp["affine"]["ln_mlp"].get("shift"))
+    h2 = aq(h2)
+    if cfg.num_experts:
+        from repro.models import moe as moe_lib
+        moe_params = {"router": ws["moe/router"], "w_up": ws["moe/w_up"],
+                      "w_down": ws["moe/w_down"]}
+        if "moe/w_gate" in ws:
+            moe_params["w_gate"] = ws["moe/w_gate"]
+        y, _ = moe_lib.apply_moe(moe_params, h2, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+    else:
+        def mlin(wn, bn):
+            y = h2 @ ws[f"mlp/{wn}"]
+            if f"mlp/{bn}" in ws:
+                y = y + ws[f"mlp/{bn}"]
+            return y
+
+        if cfg.act in ("swiglu", "geglu"):
+            gate_fn = (jax.nn.silu if cfg.act == "swiglu"
+                       else lambda z: jax.nn.gelu(z, approximate=True))
+            inner = gate_fn(mlin("w_gate", "b_gate")) * mlin("w_up", "b_up")
+        elif cfg.act == "gelu":
+            inner = jax.nn.gelu(mlin("w_up", "b_up"), approximate=True)
+        else:
+            inner = jax.nn.relu(mlin("w_up", "b_up"))
+        y = aq(inner) @ ws["mlp/w_down"]
+    return x + y
+
+
+def fp_block_forward(block_params: dict, x: jax.Array, cfg,
+                     positions: jax.Array) -> jax.Array:
+    from repro.models import transformer
+    out, _, _ = transformer.apply_block_full(
+        block_params, x, cfg, positions, 0, cfg.window, False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the per-block optimization loop
+# ---------------------------------------------------------------------------
+
+def calibrate_block(block_params: dict, fp_in: jax.Array, quant_in: jax.Array,
+                    cfg, qcfg: QuantConfig, ccfg: CalibConfig,
+                    act_stats: Optional[dict] = None,
+                    log_every: int = 0) -> tuple[dict, list[float]]:
+    """Optimize one block's (A, delta, lwc). Returns (quant_params, losses)."""
+    positions = jnp.arange(fp_in.shape[1])[None, :]
+    qp = init_block_quant_params(block_params, cfg, qcfg, ccfg, act_stats)
+    specs = _specs_from(qp)
+    fp_out = fp_block_forward(block_params, fp_in, cfg, positions)
+
+    # Adam state per learnable group (sites + lwc), simple flat implementation
+    learnable = {"affine": qp["affine"], "lwc": qp["lwc"]}
+    m = jax.tree_util.tree_map(jnp.zeros_like, learnable)
+    v = jax.tree_util.tree_map(jnp.zeros_like, learnable)
+
+    def lr_of(path_str: str) -> float:
+        if "shift" in path_str:
+            return ccfg.lr_shift
+        if path_str.startswith("lwc"):
+            return ccfg.lr_lwc
+        return ccfg.lr_affine
+
+    @jax.jit
+    def step(learnable, m, v, count, xq, target, masks):
+        def loss_fn(lp):
+            qp_full = {"affine": lp["affine"], "lwc": lp["lwc"],
+                       "_sites": qp["_sites"]}
+            out = quant_block_forward(block_params, qp_full, xq, cfg, qcfg,
+                                      ccfg, masks, positions)
+            return jnp.mean(jnp.square(out.astype(jnp.float32)
+                                       - target.astype(jnp.float32)))
+
+        loss, grads = jax.value_and_grad(loss_fn)(learnable)
+        count = count + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        bias1 = 1 - b1 ** count
+        bias2 = 1 - b2 ** count
+
+        flat_g, tdef = jax.tree_util.tree_flatten_with_path(grads)
+        flat_m, _ = jax.tree_util.tree_flatten(m)
+        flat_v, _ = jax.tree_util.tree_flatten(v)
+        flat_p, _ = jax.tree_util.tree_flatten(learnable)
+        new_p, new_m, new_v = [], [], []
+        for (path, g), mm, vv, pp in zip(flat_g, flat_m, flat_v, flat_p):
+            path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+            mm = b1 * mm + (1 - b1) * g
+            vv = b2 * vv + (1 - b2) * jnp.square(g)
+            upd = (mm / bias1) / (jnp.sqrt(vv / bias2) + eps)
+            new_p.append(pp - lr_of(path_str) * upd)
+            new_m.append(mm)
+            new_v.append(vv)
+        treedef = jax.tree_util.tree_structure(learnable)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                jax.tree_util.tree_unflatten(treedef, new_m),
+                jax.tree_util.tree_unflatten(treedef, new_v), count, loss)
+
+    count = jnp.zeros((), jnp.int32)
+    n = fp_in.shape[0]
+    bs = min(ccfg.batch_size, n)
+    losses = []
+    for epoch in range(ccfg.epochs):
+        # masks passed as arrays: one jit compilation across all epochs
+        masks = _masks(cfg, specs, epoch + 1, ccfg)
+        epoch_loss = 0.0
+        nb = 0
+        for i in range(0, n - bs + 1, bs):
+            learnable, m, v, count, loss = step(
+                learnable, m, v, count, quant_in[i:i + bs],
+                fp_out[i:i + bs], masks)
+            epoch_loss += float(loss)
+            nb += 1
+        losses.append(epoch_loss / max(nb, 1))
+        if log_every and (epoch + 1) % log_every == 0:
+            logger.info("  epoch %d/%d loss %.6f", epoch + 1, ccfg.epochs,
+                        losses[-1])
+        if not jnp.isfinite(jnp.asarray(losses[-1])):
+            logger.warning("  calibration diverged (NaN) at epoch %d", epoch)
+            break
+
+    qp_final = {"affine": learnable["affine"], "lwc": learnable["lwc"],
+                "_sites": qp["_sites"]}
+    return qp_final, losses
+
+
+# ---------------------------------------------------------------------------
+# whole-model pipeline
+# ---------------------------------------------------------------------------
+
+def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
+                         ccfg: CalibConfig, calib_tokens: jax.Array,
+                         log: bool = True) -> tuple[dict, dict]:
+    """Sequential block-wise PTQ of a dense/moe LM.
+
+    Returns (new_params with fake-quant effective weights merged in,
+             info dict with per-block loss curves).
+    """
+    from repro.models import transformer
+
+    if cfg.scan_layers:
+        block_list = [
+            jax.tree_util.tree_map(lambda x, i=i: x[i], params["layers"])
+            for i in range(cfg.num_layers)]
+    else:
+        block_list = list(params["layers"])
+
+    x = jnp.take(params["embed"], calib_tokens, axis=0)
+    if cfg.rope_theta == 0:
+        x = x + transformer._sinusoidal(x.shape[1], cfg.d_model
+                                        ).astype(x.dtype)[None]
+    positions = jnp.arange(calib_tokens.shape[1])[None, :]
+    fp_in = x
+    quant_in = x
+    info = {"block_losses": [], "final_losses": []}
+    new_blocks = []
+
+    for li, bp in enumerate(block_list):
+        # per-site activation stats for SmoothQuant-style diagonal init
+        h1 = layers.apply_norm(bp["ln_attn"], quant_in, cfg.norm)
+        stats = {"ln_attn": jnp.max(jnp.abs(h1.reshape(-1, cfg.d_model)), 0)}
+        xa = fp_block_forward(bp, quant_in, cfg, positions)
+        h2 = layers.apply_norm(bp["ln_mlp"], xa, cfg.norm)  # approx stats
+        stats["ln_mlp"] = jnp.max(jnp.abs(h2.reshape(-1, cfg.d_model)), 0)
+
+        qp, losses = calibrate_block(bp, fp_in, quant_in, cfg, qcfg, ccfg,
+                                     act_stats=stats)
+        info["block_losses"].append(losses)
+        info["final_losses"].append(losses[-1] if losses else float("nan"))
+        if log:
+            logger.info("block %d/%d: loss %.6f -> %.6f", li + 1,
+                        len(block_list),
+                        losses[0] if losses else float("nan"),
+                        losses[-1] if losses else float("nan"))
+
+        new_bp = finalize_block(bp, qp, cfg, qcfg, ccfg)
+        new_blocks.append(new_bp)
+
+        # advance the two streams
+        masks = _masks(cfg, _specs_from(qp), ccfg.epochs, ccfg)
+        quant_in = quant_block_forward(bp, qp, quant_in, cfg, qcfg, ccfg,
+                                       masks, positions)
+        fp_in = fp_block_forward(bp, fp_in, cfg, positions)
+
+    new_params = dict(params)
+    if cfg.scan_layers:
+        new_params["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_blocks)
+    else:
+        new_params["layers"] = new_blocks
+    return new_params, info
+
+
+def finalize_block(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
+                   ccfg: CalibConfig) -> dict:
+    """Merge transforms away -> deployable block (fake-quant weights).
+
+    Diagonal sites merge into the norm; full sites produce the fused
+    effective weight inv(A) @ Q(A W); the vo transform merges into wv/wo.
+    The result evaluates *identically* to the calibrated quantized block
+    (paper §3.3 zero-overhead deployment).
+    """
+    specs = _specs_from(qp)
+    solve_dt = jnp.dtype(ccfg.solve_dtype)
+    masks = _masks(cfg, specs, ccfg.epochs, ccfg)
+    ws = effective_weights(block_params, qp, cfg, qcfg, ccfg, masks)
+
+    new_bp = jax.tree_util.tree_map(lambda x: x, block_params)  # copy
+
+    def site_matrix(name):
+        spec = specs[name]
+        a_eff = af.effective_matrix(spec, qp["affine"][name], masks.get(name))
+        return spec, a_eff, af.invert(spec, a_eff, solve_dt)
+
+    # attention-side site
+    if "ln_attn" in specs:
+        spec1, a1, a1_inv = site_matrix("ln_attn")
+        shift1 = qp["affine"]["ln_attn"].get("shift")
+        if spec1.kind == "diagonal":
+            g, bta = eq.merge_diag_into_norm(
+                block_params["ln_attn"]["scale"],
+                block_params["ln_attn"].get("bias"), a1, shift1)
+            new_bp["ln_attn"] = {"scale": g}
+            if bta is not None:
+                new_bp["ln_attn"]["bias"] = bta
+            for wn in ("wq", "wk", "wv"):
+                new_bp[wn] = ws[wn]
+        else:
+            # fused fake-quant deployment: W_eff = inv(A) @ Q(A W)
+            for wn in ("wq", "wk", "wv"):
+                new_bp[wn] = eq.fuse_effective_weight(ws[wn],
+                                                      a1_inv.astype(jnp.float32))
+            if shift1 is not None:
+                for wn, bn in (("wq", "bq"), ("wk", "bk"), ("wv", "bv")):
+                    corr = af.shift_bias_correction(
+                        shift1, block_params[wn], block_params.get(bn))
+                    new_bp[bn] = corr
+        for bn in ("bq", "bk", "bv"):
+            if bn in ws and specs["ln_attn"].kind == "diagonal":
+                new_bp[bn] = ws[bn]
+        new_bp["wo"] = ws["wo"]
+
+    # mlp-side site
+    if "ln_mlp" in specs:
+        spec3, a3, a3_inv = site_matrix("ln_mlp")
+        shift3 = qp["affine"]["ln_mlp"].get("shift")
+        prefix = "moe" if cfg.num_experts else "mlp"
+        if spec3.kind == "diagonal":
+            g, btm = eq.merge_diag_into_norm(
+                block_params["ln_mlp"]["scale"],
+                block_params["ln_mlp"].get("bias"), a3, shift3)
+            new_bp["ln_mlp"] = {"scale": g}
+            if btm is not None:
+                new_bp["ln_mlp"]["bias"] = btm
+            for sub in ("w_gate", "w_up"):
+                if f"{prefix}/{sub}" in ws:
+                    new_bp[prefix][sub] = ws[f"{prefix}/{sub}"]
+            for sub in ("b_gate", "b_up"):
+                if f"{prefix}/{sub}" in ws:
+                    new_bp[prefix][sub] = ws[f"{prefix}/{sub}"]
+            if cfg.num_experts:
+                new_bp[prefix]["router"] = ws["moe/router"]
+        else:
+            for sub in ("w_gate", "w_up"):
+                name = f"{prefix}/{sub}"
+                if name in ws:
+                    w_q = ws[name]
+                    if w_q.ndim == 3:
+                        new_bp[prefix][sub] = jax.vmap(
+                            lambda wi: eq.fuse_effective_weight(
+                                wi, a3_inv.astype(jnp.float32)))(w_q)
+                    else:
+                        new_bp[prefix][sub] = eq.fuse_effective_weight(
+                            w_q, a3_inv.astype(jnp.float32))
+            if cfg.num_experts:
+                new_bp[prefix]["router"] = eq.fuse_effective_weight(
+                    ws["moe/router"], a3_inv.astype(jnp.float32))
+        new_bp[prefix]["w_down"] = ws[f"{prefix}/w_down"]
+    return new_bp

@@ -1,0 +1,141 @@
+"""Zero-overhead merging of affine transforms into existing parameters.
+
+After calibration, every transform disappears into neighbouring parameters
+(paper §3.3 "Inference Efficiency"):
+
+* a **diagonal** transform after LayerNorm/RMSNorm folds into the norm's
+  scale/bias (weight-activation mode),
+* a **full** transform whose activation side is produced by a *linear* op
+  folds ``inv(A)`` into that producer's weight/bias (e.g. the per-head
+  v_proj -> out_proj boundary),
+* in weight-only mode a full transform after a norm is deployed as a fused
+  effective weight ``inv(A) @ Q(A @ W)`` (fake-quant evaluation — identical
+  math to the paper's released code; the low-bit tensor is what would ship
+  to disk/edge).
+
+Every function returns *new* parameter values; nothing is mutated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# norm-side merges (diagonal transforms)
+# ---------------------------------------------------------------------------
+
+def merge_diag_into_norm(norm_scale: jax.Array,
+                         norm_bias: Optional[jax.Array],
+                         a_diag: jax.Array,
+                         shift: Optional[jax.Array] = None
+                         ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Fold x_t = (norm(x) - shift) * (1/a) into the norm's parameters.
+
+    norm(x) = g * xhat + beta  ==>  g' = g / a,  beta' = (beta - shift) / a.
+    RMSNorm has no beta; a shift then *requires* introducing one (returned
+    as a new bias) — the framework's norm layers accept an optional bias.
+    """
+    a = a_diag.astype(jnp.float32)
+    g = norm_scale.astype(jnp.float32) / a
+    beta = None
+    if norm_bias is not None or shift is not None:
+        b = jnp.zeros_like(a) if norm_bias is None else norm_bias.astype(jnp.float32)
+        if shift is not None:
+            b = b - shift.astype(jnp.float32)
+        beta = (b / a).astype(norm_scale.dtype)
+    return g.astype(norm_scale.dtype), beta
+
+
+def merge_diag_into_weight(w: jax.Array, a_diag: jax.Array) -> jax.Array:
+    """w_t = diag(a) @ w — scale the weight's input rows."""
+    return (a_diag.astype(jnp.float32)[:, None] * w.astype(jnp.float32)).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear-linear boundary merges (full / headwise transforms)
+# ---------------------------------------------------------------------------
+
+def merge_inv_into_producer(w_prev: jax.Array,
+                            b_prev: Optional[jax.Array],
+                            a_inv: jax.Array,
+                            shift: Optional[jax.Array] = None
+                            ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Fold (y - shift) @ inv(A) into the producing linear y = u @ w_prev + b.
+
+    w' = w_prev @ inv(A);  b' = (b_prev - shift) @ inv(A).
+    """
+    ai = a_inv.astype(jnp.float32)
+    w = w_prev.astype(jnp.float32) @ ai
+    b = None
+    if b_prev is not None or shift is not None:
+        bb = (jnp.zeros(w_prev.shape[-1], jnp.float32) if b_prev is None
+              else b_prev.astype(jnp.float32))
+        if shift is not None:
+            bb = bb - shift.astype(jnp.float32)
+        b = (bb @ ai).astype(w_prev.dtype)
+    return w.astype(w_prev.dtype), b
+
+
+def merge_full_into_weight(w: jax.Array, a: jax.Array) -> jax.Array:
+    """w_t = A @ w (the consumer side of a full transform)."""
+    return (a.astype(jnp.float32) @ w.astype(jnp.float32)).astype(w.dtype)
+
+
+def merge_headwise_into_v_o(wv: jax.Array, wo: jax.Array,
+                            a: jax.Array, a_inv: jax.Array,
+                            num_kv_heads: int, num_q_heads: int
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Per-head affine at the v_proj -> out_proj boundary.
+
+    GQA note: ``a`` holds one (head_dim, head_dim) matrix **per KV head**,
+    shared by the ``num_q_heads // num_kv_heads`` query heads in its group —
+    this is the only tying under which the transform can be merged on both
+    sides (v_proj output columns are shared across the group).
+
+      wv: (d_model, num_kv_heads * head_dim)   -> wv' = wv @ blockdiag(inv(A))
+      wo: (num_q_heads * head_dim, d_model)    -> wo' = blockdiag(A) @ wo
+    """
+    d_model = wv.shape[0]
+    head_dim = a.shape[-1]
+    group = num_q_heads // num_kv_heads
+
+    wv_h = wv.reshape(d_model, num_kv_heads, head_dim).astype(jnp.float32)
+    wv_t = jnp.einsum("dkh,khe->dke", wv_h, a_inv.astype(jnp.float32))
+    wv_t = wv_t.reshape(wv.shape)
+
+    wo_h = wo.reshape(num_kv_heads, group, head_dim, -1).astype(jnp.float32)
+    wo_t = jnp.einsum("khe,kgeo->kgho", a.astype(jnp.float32), wo_h)
+    wo_t = wo_t.reshape(wo.shape)
+    return wv_t.astype(wv.dtype), wo_t.astype(wo.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused fake-quant deployment (weight-only full transforms)
+# ---------------------------------------------------------------------------
+
+def fuse_effective_weight(w_q: jax.Array, a_inv: jax.Array) -> jax.Array:
+    """W_eff = inv(A) @ Q(A @ W)  (single fp16/bf16 weight, zero overhead).
+
+    ``w_q`` is the already-(de)quantized transformed weight. The fp32/fp64
+    precision of this merge is the paper's Table-4 ablation; see
+    ``benchmarks/table4_precision.py``.
+    """
+    return (a_inv.astype(jnp.float32) @ w_q.astype(jnp.float32)).astype(w_q.dtype)
+
+
+def merge_error(x: jax.Array, w: jax.Array, a: jax.Array,
+                solve_dtype=jnp.float32) -> jax.Array:
+    """Mean-squared output error introduced by the inverse+merge numerics.
+
+    || (x @ inv(A)) @ (A @ w)  -  x @ w ||^2 / numel — with *no* quantizer in
+    the loop this isolates pure matrix-inverse round-off (paper Table 4).
+    """
+    eye = jnp.eye(a.shape[0], dtype=solve_dtype)
+    a_inv = jnp.linalg.solve(a.astype(solve_dtype), eye)
+    w_t = (a.astype(solve_dtype) @ w.astype(solve_dtype))
+    y_merged = (x.astype(solve_dtype) @ a_inv) @ w_t
+    y_ref = x.astype(solve_dtype) @ w.astype(solve_dtype)
+    return jnp.mean(jnp.square(y_merged - y_ref))

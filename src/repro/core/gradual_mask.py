@@ -1,0 +1,84 @@
+"""Gradual Mask (GM) — paper Eq. 6.
+
+The mask regulates which entries of the affine matrix ``A`` participate in
+optimization at epoch ``e`` of ``t``:
+
+    GM_ij = 1      if i == j
+          = alpha  if 0 < |i - j| <= (e / t) * hidden_size
+          = 0      otherwise
+
+Forward:  A* = A o GM  (Hadamard).  Backward (Eq. 9): the same Hadamard
+re-appears on the gradient, so off-diagonal entries learn at an
+``alpha``-damped rate and entries outside the band are frozen. With a small
+enough ``alpha`` the iterates stay strictly diagonally dominant, hence
+invertible (Levy-Desplanques; Appendix A.2 of the paper).
+
+The head-wise variant confines the band inside each attention head's
+``head_dim x head_dim`` diagonal block (paper: "Within the attention module,
+we apply a gradual mask in each attention head").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def band_width(epoch: int | jax.Array, total_epochs: int, hidden: int) -> jax.Array:
+    """Bandwidth (#off-diagonals unfrozen) at `epoch` of `total_epochs`."""
+    frac = jnp.asarray(epoch, jnp.float32) / float(max(total_epochs, 1))
+    return jnp.ceil(frac * hidden)
+
+
+def gradual_mask(hidden: int, epoch: int | jax.Array, total_epochs: int,
+                 alpha: float, dtype=jnp.float32) -> jax.Array:
+    """Dense (hidden, hidden) GM matrix for the given epoch."""
+    idx = jnp.arange(hidden)
+    dist = jnp.abs(idx[:, None] - idx[None, :])
+    bw = band_width(epoch, total_epochs, hidden)
+    off = jnp.where(dist <= bw, jnp.asarray(alpha, dtype), jnp.asarray(0.0, dtype))
+    return jnp.where(dist == 0, jnp.asarray(1.0, dtype), off)
+
+
+def gradual_mask_headwise(hidden: int, num_heads: int, epoch: int | jax.Array,
+                          total_epochs: int, alpha: float,
+                          dtype=jnp.float32) -> jax.Array:
+    """GM restricted to per-head diagonal blocks.
+
+    Entries whose (i, j) fall in different heads are always 0; inside a head
+    the band grows to ``head_dim`` (the per-head 'hidden size' in Eq. 6).
+    """
+    if hidden % num_heads != 0:
+        raise ValueError(f"hidden={hidden} not divisible by heads={num_heads}")
+    head_dim = hidden // num_heads
+    idx = jnp.arange(hidden)
+    same_head = (idx[:, None] // head_dim) == (idx[None, :] // head_dim)
+    dist = jnp.abs(idx[:, None] - idx[None, :])
+    bw = band_width(epoch, total_epochs, head_dim)
+    off = jnp.where((dist <= bw) & same_head,
+                    jnp.asarray(alpha, dtype), jnp.asarray(0.0, dtype))
+    return jnp.where(dist == 0, jnp.asarray(1.0, dtype), off)
+
+
+def apply_mask(a: jax.Array, mask: jax.Array) -> jax.Array:
+    """Forward GM application: A* = A o GM (Eq. 7).
+
+    Gradients flow through the Hadamard product, which reproduces Eq. 9
+    exactly (dL/dA = GM o dL/dA*): no custom VJP needed.
+    """
+    return a * mask
+
+
+def is_strictly_diagonally_dominant(a: jax.Array) -> jax.Array:
+    """Boolean check of Definition 1 (row-wise strict diagonal dominance)."""
+    abs_a = jnp.abs(a)
+    diag = jnp.diagonal(abs_a)
+    off_sum = jnp.sum(abs_a, axis=1) - diag
+    return jnp.all(diag > off_sum)
+
+
+def dominance_margin(a: jax.Array) -> jax.Array:
+    """min_i (|a_ii| - sum_{j != i} |a_ij|); > 0 <=> strictly diag dominant."""
+    abs_a = jnp.abs(a)
+    diag = jnp.diagonal(abs_a)
+    off_sum = jnp.sum(abs_a, axis=1) - diag
+    return jnp.min(diag - off_sum)

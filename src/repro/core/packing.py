@@ -1,0 +1,100 @@
+"""Sub-byte integer packing for deployed quantized weights.
+
+TPU HBM has no sub-byte addressable type before int4 support on v5p, so we
+store quantized codes packed into ``uint8`` containers and unpack inside the
+dequant-matmul kernel (VREG bit ops are cheap relative to the HBM stream).
+
+Layout: groups of 8 consecutive values along the *input-channel* axis are
+packed into ``bits`` bytes (8 values x b bits = b bytes exactly for any
+b <= 8). This keeps the packed tensor contiguous along the same axis the
+matmul streams, so a (bk, bn) weight block maps to a (bk*bits/8, bn) packed
+block — a clean BlockSpec for the Pallas kernel.
+
+All functions are jit-safe and shape-polymorphic in the leading dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK_GROUP = 8  # values per packing unit
+
+
+def packed_rows(d_in: int, bits: int) -> int:
+    """Number of packed uint8 rows for ``d_in`` unpacked rows."""
+    if d_in % PACK_GROUP != 0:
+        raise ValueError(f"d_in={d_in} must be a multiple of {PACK_GROUP}")
+    return d_in // PACK_GROUP * bits
+
+
+def pack(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack uint8 codes (d_in, d_out), values < 2**bits, into uint8 bytes.
+
+    Returns shape (d_in // 8 * bits, d_out).
+    """
+    if not (1 <= bits <= 8):
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
+    d_in, d_out = codes.shape
+    if d_in % PACK_GROUP != 0:
+        raise ValueError(f"d_in={d_in} must be a multiple of {PACK_GROUP}")
+    c = codes.astype(jnp.uint32).reshape(d_in // PACK_GROUP, PACK_GROUP, d_out)
+    # Accumulate 8 values of `bits` bits into one little-endian 64-bit lane,
+    # materialized as two uint32 halves to stay in 32-bit-friendly ops.
+    lo = jnp.zeros((d_in // PACK_GROUP, d_out), jnp.uint32)
+    hi = jnp.zeros((d_in // PACK_GROUP, d_out), jnp.uint32)
+    for k in range(PACK_GROUP):
+        s = k * bits
+        v = c[:, k, :]
+        if s < 32:
+            lo = lo | (v << jnp.uint32(s))
+            if s + bits > 32:  # straddles the 32-bit boundary
+                hi = hi | (v >> jnp.uint32(32 - s))
+        else:
+            hi = hi | (v << jnp.uint32(s - 32))
+    # Emit `bits` little-endian bytes of the 64-bit lane.
+    out = []
+    for byte_idx in range(bits):
+        bit_off = byte_idx * 8
+        if bit_off < 32:
+            b = (lo >> jnp.uint32(bit_off)) & jnp.uint32(0xFF)
+            if bit_off + 8 > 32:
+                b = b | ((hi << jnp.uint32(32 - bit_off)) & jnp.uint32(0xFF))
+        else:
+            b = (hi >> jnp.uint32(bit_off - 32)) & jnp.uint32(0xFF)
+        out.append(b.astype(jnp.uint8))
+    packed = jnp.stack(out, axis=1)  # (d_in//8, bits, d_out)
+    return packed.reshape(d_in // PACK_GROUP * bits, d_out)
+
+
+def unpack(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
+    """Inverse of :func:`pack`. Returns uint8 codes of shape (d_in, d_out)."""
+    if not (1 <= bits <= 8):
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
+    n_units = d_in // PACK_GROUP
+    d_out = packed.shape[-1]
+    p = packed.reshape(n_units, bits, d_out).astype(jnp.uint32)
+    # Rebuild the 64-bit lane (as two uint32 halves) from little-endian bytes.
+    lo = jnp.zeros((n_units, d_out), jnp.uint32)
+    hi = jnp.zeros((n_units, d_out), jnp.uint32)
+    for byte_idx in range(bits):
+        bit_off = byte_idx * 8
+        b = p[:, byte_idx, :]
+        if bit_off < 32:
+            lo = lo | (b << jnp.uint32(bit_off))
+            if bit_off + 8 > 32:
+                hi = hi | (b >> jnp.uint32(32 - bit_off))
+        else:
+            hi = hi | (b << jnp.uint32(bit_off - 32))
+    mask = jnp.uint32(2 ** bits - 1)
+    vals = []
+    for k in range(PACK_GROUP):
+        s = k * bits
+        if s + bits <= 32:
+            v = (lo >> jnp.uint32(s)) & mask
+        elif s >= 32:
+            v = (hi >> jnp.uint32(s - 32)) & mask
+        else:  # straddle
+            v = ((lo >> jnp.uint32(s)) | (hi << jnp.uint32(32 - s))) & mask
+        vals.append(v)
+    codes = jnp.stack(vals, axis=1)  # (n_units, 8, d_out)
+    return codes.reshape(d_in, d_out).astype(jnp.uint8)

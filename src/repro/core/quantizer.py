@@ -1,0 +1,243 @@
+"""Uniform affine pseudo-quantization (paper Eq. 1) with learnable clipping.
+
+This implements the quantization primitive shared by AffineQuant and every
+baseline (RTN / GPTQ / AWQ / OmniQuant-diag):
+
+    Q(x) = Delta * (clamp(round(x / Delta) + zp, 0, 2^n - 1) - zp)
+
+with
+
+  * per-tensor / per-channel / per-group granularity (``group_size``),
+  * optional learnable weight clipping (LWC, inherited from OmniQuant):
+    the group min/max are shrunk by ``sigmoid(gamma)`` / ``sigmoid(beta)``,
+  * a straight-through estimator on the rounding so the affine matrix and
+    clipping parameters receive gradients during block-wise calibration,
+  * per-token dynamic activation quantization for weight-activation modes.
+
+Conventions
+-----------
+Weights are stored ``(in_features, out_features)`` and multiply activations
+as ``y = x @ w``.  Quantization groups weights along the *input* dimension
+(axis 0) per output channel, matching GPTQ/AWQ/OmniQuant: each group is a
+contiguous slice of ``group_size`` input channels of one output column.
+``group_size == 0`` means one group per output channel (per-channel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import round_ste
+
+DEFAULT_GROUP = 0  # per-channel
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of a quantizer.
+
+    Attributes:
+      w_bits: weight bit-width (2/3/4/8/16). 16 disables weight quantization.
+      a_bits: activation bit-width (4/8/16). 16 disables activation quant.
+      group_size: input-channel group size for weight quant. 0 = per-channel.
+      symmetric: symmetric weight quantization (zp fixed at midpoint).
+      lwc: enable learnable weight clipping (OmniQuant LWC).
+      act_symmetric: symmetric per-token activation quantization.
+      kv_bits: KV-cache bit-width for serving (16 disables).
+    """
+    w_bits: int = 4
+    a_bits: int = 16
+    group_size: int = DEFAULT_GROUP
+    symmetric: bool = False
+    lwc: bool = True
+    act_symmetric: bool = True
+    kv_bits: int = 16
+
+    @property
+    def quantize_weights(self) -> bool:
+        return self.w_bits < 16
+
+    @property
+    def quantize_acts(self) -> bool:
+        return self.a_bits < 16
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.w_bits - 1
+
+    def tag(self) -> str:
+        g = f"g{self.group_size}" if self.group_size else ""
+        return f"w{self.w_bits}a{self.a_bits}{g}"
+
+
+# ---------------------------------------------------------------------------
+# grouping
+# ---------------------------------------------------------------------------
+
+def _to_groups(w: jax.Array, group_size: int) -> tuple[jax.Array, tuple[int, ...]]:
+    """Reshape (in, out) weights to (groups, group_size, out) for reduction.
+
+    Returns the grouped view and the original shape. ``group_size == 0``
+    treats the whole input dimension as one group (per-output-channel).
+    """
+    d_in, d_out = w.shape
+    g = group_size if group_size else d_in
+    if d_in % g != 0:
+        # graceful fallback: per-channel for matrices whose input dim the
+        # group does not divide (e.g. odd d_ff); matches GPTQ-style tooling
+        g = d_in
+    return w.reshape(d_in // g, g, d_out), w.shape
+
+
+def _from_groups(wg: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    return wg.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# clipping parameters (LWC)
+# ---------------------------------------------------------------------------
+
+def init_lwc_params(w_shape: tuple[int, int], group_size: int,
+                    init_value: float = 4.0) -> dict:
+    """Per-group learnable clipping logits.
+
+    ``sigmoid(4.0) ~= 0.982`` — we start with (almost) no clipping, as
+    OmniQuant does, and let the calibration loss pull the bounds in.
+    """
+    d_in, d_out = w_shape
+    g = group_size if group_size else d_in
+    n_groups = d_in // g
+    return {
+        "gamma": jnp.full((n_groups, 1, d_out), init_value, jnp.float32),
+        "beta": jnp.full((n_groups, 1, d_out), init_value, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# weight quantization
+# ---------------------------------------------------------------------------
+
+def weight_qparams(w: jax.Array, cfg: QuantConfig,
+                   lwc_params: Optional[dict] = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Compute per-group (scale, zero_point) for a weight matrix.
+
+    Returns (scale, zp) with shape (groups, 1, d_out); both float32.
+    zp is kept float and rounded at use-time (standard OmniQuant trick —
+    a float zp during optimization smooths the loss surface).
+    """
+    wg, _ = _to_groups(w.astype(jnp.float32), cfg.group_size)
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    if cfg.lwc and lwc_params is not None:
+        wmax = jax.nn.sigmoid(lwc_params["gamma"]) * wmax
+        wmin = jax.nn.sigmoid(lwc_params["beta"]) * wmin
+    if cfg.symmetric:
+        bound = jnp.maximum(jnp.abs(wmax), jnp.abs(wmin))
+        wmax, wmin = bound, -bound
+    # Guard degenerate all-equal groups.
+    rng = jnp.maximum(wmax - wmin, 1e-8)
+    scale = rng / (2 ** cfg.w_bits - 1)
+    zp = -wmin / scale
+    return scale, zp
+
+
+def fake_quant_weight(w: jax.Array, cfg: QuantConfig,
+                      lwc_params: Optional[dict] = None) -> jax.Array:
+    """Pseudo-quantize a weight matrix (differentiable via STE).
+
+    This is Eq. 1 of the paper applied per group. Returns a tensor of the
+    same shape/dtype as ``w`` holding the dequantized values.
+    """
+    if not cfg.quantize_weights:
+        return w
+    orig_dtype = w.dtype
+    wg, shape = _to_groups(w.astype(jnp.float32), cfg.group_size)
+    scale, zp = weight_qparams(w, cfg, lwc_params)
+    q = round_ste(wg / scale) + round_ste(zp)
+    q = jnp.clip(q, 0.0, float(2 ** cfg.w_bits - 1))
+    dq = (q - round_ste(zp)) * scale
+    return _from_groups(dq, shape).astype(orig_dtype)
+
+
+def quantize_weight_int(w: jax.Array, cfg: QuantConfig,
+                        lwc_params: Optional[dict] = None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Real (non-differentiable) weight quantization for deployment.
+
+    Returns (codes uint8 in [0, 2^bits-1] with shape (in, out),
+             scale (groups, d_out) float32, zp (groups, d_out) float32-rounded).
+    Packing to sub-byte containers lives in ``repro.core.packing``.
+    """
+    wg, shape = _to_groups(w.astype(jnp.float32), cfg.group_size)
+    scale, zp = weight_qparams(w, cfg, lwc_params)
+    zp = jnp.round(zp)
+    q = jnp.clip(jnp.round(wg / scale) + zp, 0, 2 ** cfg.w_bits - 1)
+    codes = q.reshape(shape).astype(jnp.uint8)
+    return codes, scale[:, 0, :], zp[:, 0, :]
+
+
+def dequantize_weight_int(codes: jax.Array, scale: jax.Array, zp: jax.Array,
+                          cfg: QuantConfig, out_dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_weight_int` (reference path)."""
+    d_in, d_out = codes.shape
+    g = cfg.group_size if cfg.group_size else d_in
+    cg = codes.reshape(d_in // g, g, d_out).astype(jnp.float32)
+    dq = (cg - zp[:, None, :]) * scale[:, None, :]
+    return dq.reshape(d_in, d_out).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# activation quantization (per-token dynamic)
+# ---------------------------------------------------------------------------
+
+def fake_quant_activation(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Per-token dynamic pseudo-quantization of activations.
+
+    The last dimension is the feature dimension; every leading position
+    (token) gets its own scale. Symmetric by default (TPU int8 MXU path).
+    Differentiable via STE.
+    """
+    if not cfg.quantize_acts:
+        return x
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.act_symmetric:
+        bound = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        bound = jnp.maximum(bound, 1e-8)
+        qmax = 2.0 ** (cfg.a_bits - 1) - 1.0
+        scale = bound / qmax
+        q = jnp.clip(round_ste(xf / scale), -qmax - 1.0, qmax)
+        dq = q * scale
+    else:
+        xmax = jnp.max(xf, axis=-1, keepdims=True)
+        xmin = jnp.min(xf, axis=-1, keepdims=True)
+        rng = jnp.maximum(xmax - xmin, 1e-8)
+        scale = rng / (2 ** cfg.a_bits - 1)
+        zp = round_ste(-xmin / scale)
+        q = jnp.clip(round_ste(xf / scale) + zp, 0.0, float(2 ** cfg.a_bits - 1))
+        dq = (q - zp) * scale
+    return dq.astype(orig_dtype)
+
+
+def quantize_activation_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Real per-token symmetric int8 activation quantization (serving path)."""
+    xf = x.astype(jnp.float32)
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-8)
+    scale = bound / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# error metrics
+# ---------------------------------------------------------------------------
+
+def quant_mse(w: jax.Array, cfg: QuantConfig,
+              lwc_params: Optional[dict] = None) -> jax.Array:
+    """Mean squared quantization error of a weight matrix."""
+    dq = fake_quant_weight(w, cfg, lwc_params)
+    return jnp.mean(jnp.square(w.astype(jnp.float32) - dq.astype(jnp.float32)))

@@ -1,0 +1,71 @@
+"""Transform-site placement policy per architecture family (paper §3.3/§4.1).
+
+A *site* is a location where an equivalent affine transform can be inserted
+and later merged away. Placement rules (faithful to the paper):
+
+  * ``ln_attn``  — after the attention norm, feeding q/k/v. Full matrix in
+    weight-only mode; **diagonal** in weight-activation mode (so it merges
+    into the norm — zero overhead with quantized activations).
+  * ``vo``       — between v_proj and out_proj, per **KV head** (GQA tying:
+    one head_dim^2 matrix per KV head, shared by its query group — the only
+    tying that merges on both sides; see DESIGN.md §4). Always full.
+  * ``ln_mlp``   — after the MLP norm, feeding fc1 (and the gate of gated
+    MLPs; both consume the same transformed activation). fc1 -> fc2 is
+    excluded per the paper (nonlinearity breaks equivalence; inflated dim is
+    unstable).
+  * shifts (delta) ride on the two norm sites (Outlier Suppression+ style).
+
+Families:
+  dense / vlm / audio — all three sites.
+  moe   — ln_attn + vo; ln_mlp is shared by the router and every expert w1
+          (they consume the same X), expert w2 untransformed.
+  mamba2 — norm -> in_proj full site; out_proj diagonal-only would not merge
+          (SSD nonlinearity upstream) => weight-only LWC there, no transform.
+  griffin — attention blocks as dense; recurrent blocks: norm -> (w_rec,
+          w_gate) full site; gates/recurrence are elementwise (diagonal
+          would not change quantization grid alignment) => LWC only.
+"""
+from __future__ import annotations
+
+from repro.core.affine import AffineSpec
+
+
+def block_sites(cfg, weight_only: bool) -> list[AffineSpec]:
+    """Transform sites for one block of the given architecture family."""
+    ln_kind = "full" if weight_only else "diagonal"
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        # shift (delta) only matters when activations are quantized; the MoE
+        # ln_mlp shift is disabled (per-expert bias plumbing not worth it for
+        # a correction that the shared router/expert transform already covers)
+        shift = not weight_only
+        sites = [
+            AffineSpec("ln_attn", ln_kind, cfg.d_model, with_shift=shift),
+            AffineSpec("vo", "headwise", hd, num_heads=cfg.num_kv_heads),
+            AffineSpec("ln_mlp", ln_kind, cfg.d_model,
+                       with_shift=shift and not cfg.num_experts),
+        ]
+        return sites
+    if cfg.family == "mamba2":
+        return [AffineSpec("ln_in", ln_kind, cfg.d_model,
+                           with_shift=not weight_only)]
+    if cfg.family == "griffin":
+        # per-layer site lists are resolved by the caller (hetero blocks)
+        return [AffineSpec("ln_attn", ln_kind, cfg.d_model, with_shift=True),
+                AffineSpec("vo", "headwise", hd, num_heads=cfg.num_kv_heads),
+                AffineSpec("ln_mlp", ln_kind, cfg.d_model, with_shift=True)]
+    raise ValueError(cfg.family)
+
+
+# weight matrices quantized in one dense/moe block (all get LWC params)
+def quantized_weights(cfg) -> list[str]:
+    ws = ["wq", "wk", "wv", "wo"]
+    if cfg.num_experts:
+        ws += ["moe/w_up", "moe/w_down"]
+        if cfg.act in ("swiglu", "geglu"):
+            ws += ["moe/w_gate"]
+    else:
+        ws += ["mlp/w_up", "mlp/w_down"]
+        if cfg.act in ("swiglu", "geglu"):
+            ws += ["mlp/w_gate"]
+    return ws

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (MarkovCorpus, TokenFileCorpus, make_batch_fn)
+
+__all__ = ["MarkovCorpus", "TokenFileCorpus", "make_batch_fn"]

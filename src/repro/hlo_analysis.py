@@ -1,0 +1,512 @@
+"""Static analysis of optimized HLO text: FLOPs, HBM bytes and collective
+traffic with while-loop trip-count multiplication.
+
+Why this exists: ``compiled.cost_analysis()`` counts each computation body
+ONCE — a scan-over-layers model (while loop) is undercounted by ~num_layers x
+num_microbatches, which would corrupt every roofline term. This module
+parses the optimized HLO text into a computation call graph, recovers loop
+trip counts from the loop-condition ``compare(iv, constant(N)), direction=LT``
+pattern, propagates multipliers from ENTRY, and accumulates:
+
+  * ``dot_flops``      — 2 * prod(out_dims) * prod(contracting_dims) per dot,
+  * ``memory_bytes``   — sum of operand+result bytes of top-level (fusion
+                         boundary) instructions — the standard HBM-traffic
+                         approximation,
+  * ``collective_*``   — wire bytes per collective kind with ring-algorithm
+                         factors ((n-1)/n, 2x for all-reduce) using the
+                         replica-group size.
+
+This is a *static* model of the program — exactly what a dry-run on CPU can
+provide — and it is consistent across optimization iterations, which is what
+the perf loop needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# instructions that do not move HBM bytes by themselves
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def shape_info(shape_str: str) -> tuple[float, list[int]]:
+    """(total_bytes, dims_of_first_array) for a shape literal (tuples summed)."""
+    total = 0.0
+    first_dims: Optional[list[int]] = None
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        if first_dims is None:
+            first_dims = dl
+    return total, (first_dims or [])
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str          # text after the opening paren of operands
+    line: str
+
+    @property
+    def out_bytes(self) -> float:
+        return shape_info(self.shape_str)[0]
+
+    @property
+    def out_dims(self) -> list[int]:
+        return shape_info(self.shape_str)[1]
+
+    def operands(self) -> list[str]:
+        # operand list terminates at the first ")," or ")" at depth 0
+        depth = 0
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return _OPERAND_RE.findall(self.rest[:end])
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instruction]
+    shapes: dict            # symbol -> shape_str
+    consts: dict            # symbol -> int value (scalar integer constants)
+    is_entry: bool = False
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._build_call_graph()
+        self._compute_multipliers()
+
+    # -- parsing ----------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = _COMMENT_RE.sub("", raw.rstrip())
+            stripped = line.strip()
+            if not stripped or stripped.startswith("//"):
+                continue
+            mc = _COMP_RE.match(line)
+            if mc and (stripped.endswith("{") or "{" in stripped.split("->")[-1]):
+                is_entry = stripped.startswith("ENTRY")
+                cur = Computation(mc.group(1), [], {}, {}, is_entry)
+                self.computations[cur.name] = cur
+                if is_entry:
+                    self.entry = cur.name
+                # signature params carry shapes
+                sig = stripped[stripped.find("(") + 1:]
+                for pm in _PARAM_RE.finditer(sig.split("->")[0]):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi and cur is not None:
+                name, shape_str, opcode, rest = mi.groups()
+                ins = Instruction(name, shape_str.strip(), opcode, rest, line)
+                cur.instrs.append(ins)
+                cur.shapes[name] = shape_str.strip()
+                if opcode == "constant":
+                    mk = _CONST_RE.search(line)
+                    if mk and "[]" in shape_str:
+                        cur.consts[name] = int(mk.group(1))
+
+    # -- call graph + trip counts -----------------------------------------
+    def _build_call_graph(self) -> None:
+        self.calls: dict[str, list[tuple[str, int]]] = defaultdict(list)
+        for comp in self.computations.values():
+            for ins in comp.instrs:
+                mult = 1
+                if ins.opcode == "while":
+                    body = _attr(ins.line, "body")
+                    cond = _attr(ins.line, "condition")
+                    trip = self._trip_count(cond) if cond else 1
+                    if body:
+                        self.calls[comp.name].append((body, trip))
+                    if cond:
+                        self.calls[comp.name].append((cond, trip + 1))
+                    continue
+                for attr in ("calls", "to_apply", "true_computation",
+                             "false_computation"):
+                    tgt = _attr(ins.line, attr)
+                    if tgt:
+                        self.calls[comp.name].append((tgt, mult))
+                bc = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if bc:
+                    for t in _OPERAND_RE.findall(bc.group(1)):
+                        self.calls[comp.name].append((t, 1))
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        # find compare direction=LT; bound is an integer constant operand,
+        # possibly routed through a fusion in the same computation.
+        for ins in comp.instrs:
+            if "direction=LT" in ins.line:
+                for op in ins.operands():
+                    if op in comp.consts:
+                        return comp.consts[op]
+                # compare might live inside a called computation (fusion):
+                # the caller's constant operand is the bound.
+        for ins in comp.instrs:
+            if ins.opcode == "fusion" and "compare" in ins.line.lower():
+                for op in ins.operands():
+                    if op in comp.consts:
+                        return comp.consts[op]
+        # fallback: any scalar s32 constant in the computation
+        if comp.consts:
+            return max(comp.consts.values())
+        return 1
+
+    def _compute_multipliers(self) -> None:
+        self.mult: dict[str, float] = defaultdict(float)
+        if self.entry is None:
+            return
+
+        def visit(name: str, m: float, depth: int = 0) -> None:
+            if depth > 64:
+                return
+            self.mult[name] += m
+            for child, k in self.calls.get(name, ()):  # noqa: B905
+                if child != name:
+                    visit(child, m * k, depth + 1)
+
+        visit(self.entry, 1.0)
+
+    # -- metrics -----------------------------------------------------------
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode not in ("dot", "convolution"):
+                    continue
+                out_n = 1
+                for d in ins.out_dims:
+                    out_n *= d
+                k = self._contracting_size(comp, ins)
+                total += m * 2.0 * out_n * k
+        return total
+
+    def _contracting_size(self, comp: Computation, ins: Instruction) -> float:
+        mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        ops = ins.operands()
+        if not mdims or not ops:
+            return 1.0
+        dims = [int(d) for d in mdims.group(1).split(",") if d]
+        lhs_shape = comp.shapes.get(ops[0])
+        if lhs_shape is None:
+            return 1.0
+        _, lhs_dims = shape_info(lhs_shape)
+        k = 1.0
+        for d in dims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return k
+
+    def _fusion_interiors(self) -> set:
+        """Computations called via calls=/to_apply — their instructions run
+        in-registers (fusion) or are tiny reduction lambdas: no HBM traffic
+        of their own; the call site accounts for I/O."""
+        out = set()
+        for comp in self.computations.values():
+            for ins in comp.instrs:
+                for attr in ("calls", "to_apply"):
+                    tgt = _attr(ins.line, attr)
+                    if tgt:
+                        out.add(tgt)
+        return out
+
+    def _param_index_map(self, comp: Computation) -> dict:
+        """param position -> param instruction name."""
+        out = {}
+        for ins in comp.instrs:
+            if ins.opcode == "parameter":
+                mi = re.match(r"(\d+)", ins.rest)
+                if mi:
+                    out[int(mi.group(1))] = ins.name
+        return out
+
+    def _param_consumers(self, comp: Computation, pname: str) -> list:
+        return [ins for ins in comp.instrs if pname in ins.operands()]
+
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+    # dtype converts / bitcasts are data-movement-free inside a fused kernel
+    # on TPU (the CPU backend materializes f32 round-trips for bf16 ops it
+    # cannot execute natively — an artifact that must not be billed as HBM)
+
+    def _effective_uses(self, called: Computation, pname: str
+                        ) -> list[tuple]:
+        """Consumers of a param, traversed through transparent ops.
+        Returns [(instruction, operand_position_of_the_traced_value)]."""
+        uses = []
+        stack = [pname]
+        seen = {pname}
+        while stack:
+            nm = stack.pop()
+            for cin in called.instrs:
+                ops = cin.operands()
+                if nm not in ops:
+                    continue
+                if cin.opcode in self._TRANSPARENT:
+                    if cin.name not in seen:
+                        seen.add(cin.name)
+                        stack.append(cin.name)
+                else:
+                    uses.append((cin, ops.index(nm)))
+        return uses
+
+    def _root_alias_param(self, called: Computation) -> Optional[str]:
+        """If the fused root is (transitively through transparent ops) a
+        dynamic-update-slice applied to a param, return that param name —
+        XLA aliases the output buffer with it (in-place update)."""
+        if not called.instrs:
+            return None
+        root = called.instrs[-1]
+        node = root
+        for _ in range(8):
+            if node.opcode == "dynamic-update-slice":
+                src = node.operands()[0] if node.operands() else None
+                # trace src back through transparent ops to a parameter
+                for _ in range(8):
+                    producer = next((i for i in called.instrs
+                                     if i.name == src), None)
+                    if producer is None:
+                        return src if src in {
+                            i.name for i in called.instrs
+                            if i.opcode == "parameter"} else None
+                    if producer.opcode == "parameter":
+                        return producer.name
+                    if producer.opcode in self._TRANSPARENT:
+                        src = (producer.operands() or [None])[0]
+                        continue
+                    return None
+            if node.opcode in self._TRANSPARENT and node.operands():
+                nxt = next((i for i in called.instrs
+                            if i.name == node.operands()[0]), None)
+                if nxt is None:
+                    return None
+                node = nxt
+                continue
+            return None
+        return None
+
+    def _fusion_bytes(self, comp: Computation, ins: Instruction) -> float:
+        """HBM bytes of one fusion call with slice/alias-aware semantics.
+
+        Per input param, traffic = sum over its consumers inside the fused
+        computation of: dynamic-slice -> slice bytes; dynamic-update-slice
+        (as the updated buffer) -> update bytes (in-place write); anything
+        else -> the full param once. Capped at the param's full size.
+        Output traffic excludes tuple elements whose shape matches an
+        in-place-updated or pass-through param (aliased, not re-written) —
+        this is what makes scan-over-layers stacked carries cost O(slice)
+        per iteration instead of O(whole stack)."""
+        called = self.computations.get(_attr(ins.line, "calls") or "")
+        ops = ins.operands()
+        if called is None:
+            b = ins.out_bytes
+            for op in ops:
+                s = comp.shapes.get(op)
+                if s is not None and "(" not in s:
+                    b += shape_info(s)[0]
+            return b
+        pmap = self._param_index_map(called)
+        alias_param = self._root_alias_param(called)
+        total = 0.0
+        aliased_shapes: list[str] = []
+        for idx, op in enumerate(ops):
+            s = comp.shapes.get(op)
+            if s is None or "(" in s:
+                continue
+            full = shape_info(s)[0]
+            pname = pmap.get(idx)
+            if pname is None:
+                total += full
+                continue
+            uses = self._effective_uses(called, pname)
+            if not uses:
+                # pass-through (threaded untouched to the root tuple)
+                aliased_shapes.append(called.shapes.get(pname, s).strip())
+                continue
+            cost = 0.0
+            saw_full = False
+            updated_in_place = False
+            for c, pos in uses:
+                if c.opcode == "dynamic-slice" and pos == 0:
+                    cost += c.out_bytes
+                elif c.opcode == "dynamic-update-slice" and pos == 0:
+                    cops = c.operands()
+                    us = called.shapes.get(cops[1]) if len(cops) > 1 else None
+                    cost += 2.0 * (shape_info(us)[0] if us else 0.0)
+                    updated_in_place = True
+                elif c.opcode == "dynamic-update-slice" and pos == 1:
+                    cost += float(full)          # the update tensor, read once
+                elif c.opcode in ("dynamic-slice", "dynamic-update-slice"):
+                    pass                          # index operand: free
+                else:
+                    saw_full = True
+            if saw_full:
+                cost = max(cost, float(full))
+            total += min(cost, 3.0 * full)        # sanity cap
+            if updated_in_place or pname == alias_param:
+                aliased_shapes.append(called.shapes.get(pname, s).strip())
+
+        # output: subtract aliased (in-place / pass-through) elements
+        out_b = ins.out_bytes
+        out_shape = ins.shape_str.strip()
+        for a in aliased_shapes:
+            if a:
+                # match dtype-insensitively: the CPU backend's f32 round-trip
+                # does not change what TPU aliases
+                dims = a.split("[")[-1].split("]")[0]
+                if f"[{dims}]" in out_shape:
+                    out_b -= shape_info(a)[0]
+        total += max(out_b, 0.0)
+        return total
+
+    def memory_bytes(self) -> float:
+        """Approximate HBM traffic at fusion boundaries, trip-multiplied."""
+        interiors = self._fusion_interiors()
+        total = 0.0
+        for comp in self.computations.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0 or comp.name in interiors:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode in _FREE_OPS:
+                    continue
+                if ins.opcode == "fusion":
+                    total += m * self._fusion_bytes(comp, ins)
+                    continue
+                if ins.opcode == "dynamic-slice":
+                    total += m * ins.out_bytes
+                    continue
+                if ins.opcode == "dynamic-update-slice":
+                    ops = ins.operands()
+                    upd = comp.shapes.get(ops[1]) if len(ops) > 1 else None
+                    total += m * (2.0 * shape_info(upd)[0] if upd
+                                  else ins.out_bytes)
+                    continue
+                b = ins.out_bytes
+                for op in ins.operands():
+                    s = comp.shapes.get(op)
+                    if s is not None and "(" not in s:
+                        b += shape_info(s)[0]
+                total += m * b
+        return total
+
+    def collectives(self) -> dict:
+        """Per-kind wire bytes (ring-model) and op counts, trip-multiplied."""
+        bytes_by_kind = {k: 0.0 for k in COLLECTIVE_KINDS}
+        count_by_kind = {k: 0 for k in COLLECTIVE_KINDS}
+        raw_by_kind = {k: 0.0 for k in COLLECTIVE_KINDS}
+        for comp in self.computations.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                kind = None
+                op = ins.opcode
+                if op.endswith("-start"):
+                    op = op[:-6]
+                if op in COLLECTIVE_KINDS:
+                    kind = op
+                if kind is None:
+                    continue
+                n = _group_size(ins.line)
+                out_b = ins.out_bytes
+                # CPU-backend artifact: bf16 all-reduces are *promoted* to
+                # f32 (`to_apply=%add..._promoted` + convert operands)
+                # because host CPUs lack bf16 arithmetic. TPU ICI reduces
+                # bf16 natively, so the real wire dtype is the pre-convert
+                # one: count promoted reductions at half their f32 bytes.
+                if kind in ("all-reduce", "reduce-scatter") and \
+                        "_promoted" in ins.line:
+                    out_b *= 0.5
+                if kind == "all-gather":
+                    wire = out_b * (n - 1) / max(n, 1)
+                elif kind == "all-reduce":
+                    wire = 2.0 * out_b * (n - 1) / max(n, 1)
+                elif kind == "reduce-scatter":
+                    wire = out_b * (n - 1)          # input = out * n
+                elif kind == "all-to-all":
+                    wire = out_b * (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    wire = out_b
+                bytes_by_kind[kind] += m * wire
+                raw_by_kind[kind] += m * out_b
+                count_by_kind[kind] += 1
+        return {"bytes_by_kind": bytes_by_kind,
+                "raw_bytes_by_kind": raw_by_kind,
+                "count_by_kind": count_by_kind,
+                "total_bytes": sum(bytes_by_kind.values())}
+
+
+def _attr(line: str, attr: str) -> Optional[str]:
+    m = re.search(attr + r"=%?([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str) -> int:
+    # replica_groups=[G,N]<=[total]  (iota form) or explicit {{0,1},{2,3}}
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def analyze_hlo(text: str) -> dict:
+    mod = HloModule(text)
+    coll = mod.collectives()
+    return {
+        "dot_flops": mod.dot_flops(),
+        "memory_bytes": mod.memory_bytes(),
+        "collectives": coll,
+    }

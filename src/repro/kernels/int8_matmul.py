@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: w8a8 int matmul with fused dynamic activation quant.
+
+    y = dequant( quant8(x) @ w_q )     x: (M, K) bf16/f32
+                                       w_q: (K, N) int8
+                                       w_scale: (N,) f32 per-channel
+
+Two kernels:
+  * ``int8_matmul``      — takes pre-quantized activations (x_q, x_scale);
+  * ``w8a8_matmul``      — fuses the per-token max/scale/round prologue, so
+                           activations stream HBM->VMEM once in bf16 and hit
+                           the MXU as int8 (v5e int8 path = 2x bf16 rate).
+
+The w4a4 deployment (paper Table 3) uses this kernel too: int4 values live
+in int8 lanes on the MXU (no int4 datapath on v5e); the *memory* win comes
+from the packed weight storage, the *compute* win from the int8 MXU rate —
+see DESIGN.md §3 hardware adaptation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 512
+
+
+def _int8_kernel(xq_ref, xs_ref, w_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        out = acc_ref[...].astype(jnp.float32) \
+            * xs_ref[...].astype(jnp.float32) \
+            * ws_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
+def int8_matmul(x_q: jax.Array, x_scale: jax.Array, w_q: jax.Array,
+                w_scale: jax.Array, *, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """x_q (M, K) int8, x_scale (M, 1) f32, w_q (K, N) int8, w_scale (N,)."""
+    m, k = x_q.shape
+    n = w_q.shape[-1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    ws2d = w_scale.reshape(1, n)
+
+    return pl.pallas_call(
+        functools.partial(_int8_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bm, 1), lambda i, j, ki: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, x_scale, w_q, ws2d)
+
+
+def _w8a8_kernel(x_ref, w_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # per-(token, K-slab) dynamic quantization: each slab's contribution is
+    # dequantized with its own scale before accumulation, so partial sums
+    # add exactly — finer-grained (error <=) than whole-row scales.
+    xf = x_ref[...].astype(jnp.float32)
+    slab_max = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-8)
+    scale = slab_max / 127.0
+    x_q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+    part = jax.lax.dot_general(
+        x_q, w_ref[...], dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    acc_ref[...] += part * scale
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * ws_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w8a8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
+                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """Fused dynamic per-token int8 quant + matmul.
+
+    NOTE: per-K-slab scale with running-max rescaling is *exactly* the
+    per-token whole-row quantizer when n_k == 1 (bk >= K); for n_k > 1 it is
+    a slightly finer-grained variant (per-slab scales) whose error is <= the
+    whole-row scheme — tests compare against the ref under bk >= K and
+    against an error bound otherwise.
+    """
+    m, k = x.shape
+    n = w_q.shape[-1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    ws2d = w_scale.reshape(1, n)
+    return pl.pallas_call(
+        functools.partial(_w8a8_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, ws2d)

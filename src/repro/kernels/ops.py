@@ -1,0 +1,109 @@
+"""Backend-dispatching jit wrappers around the Pallas kernels.
+
+``use_pallas='auto'`` (default) compiles the kernels on TPU and falls back
+to the pure-jnp reference math on CPU/GPU (identical results — the refs ARE
+the oracles). ``'interpret'`` forces pallas interpret mode (kernel body
+executed in Python — used by the test suite to validate the kernels on
+CPU). Wrappers also handle M-padding so callers can pass ragged token
+counts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dequant_matmul as dq
+from repro.kernels import int8_matmul as i8
+from repro.kernels import quantize_pack as qp
+from repro.kernels import ref
+from repro.utils import next_multiple
+
+Mode = Literal["auto", "pallas", "interpret", "ref"]
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _resolve(mode: Mode) -> str:
+    if mode == "auto":
+        return "pallas" if _backend() == "tpu" else "ref"
+    return mode
+
+
+def _pick_bm(m: int, bm: int) -> tuple[int, int]:
+    """Pad M to a legal block multiple; small-batch decode uses one block."""
+    if m >= bm:
+        return next_multiple(m, bm), bm
+    pad = next_multiple(m, 8)
+    return pad, pad
+
+
+def _clamp_blocks(k: int, n: int, blocks: dict, group: int) -> dict:
+    """Clamp bk/bn to the actual problem (small miniature models)."""
+    out = dict(blocks)
+    bk = out.get("bk", dq.DEFAULT_BK)
+    bn = out.get("bn", dq.DEFAULT_BN)
+    if k % bk != 0:
+        bk = k            # single K block (K of the miniatures is small)
+    if group and bk % group != 0 and group % bk != 0:
+        bk = k
+    if n % bn != 0:
+        bn = n
+    out["bk"], out["bn"] = bk, bn
+    return out
+
+
+def dequant_matmul(x, packed, scale, zp, *, bits: int, group_size: int,
+                   mode: Mode = "auto", **blocks):
+    """y = x @ dequant(packed). x (..., K); returns (..., N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    impl = _resolve(mode)
+    if impl == "ref" or bits == 3:   # 3-bit: storage-only format, ref math
+        out = ref.dequant_matmul_ref(x2, packed, scale, zp, bits=bits,
+                                     group_size=group_size)
+    else:
+        bm = blocks.pop("bm", dq.DEFAULT_BM)
+        m_pad, bm = _pick_bm(m, bm)
+        blocks = _clamp_blocks(k, packed.shape[-1], blocks, group_size)
+        x_p = jnp.pad(x2, ((0, m_pad - m), (0, 0))) if m_pad != m else x2
+        out = dq.dequant_matmul(x_p, packed, scale, zp, bits=bits,
+                                group_size=group_size, bm=bm,
+                                interpret=(impl == "interpret"), **blocks)
+        out = out[:m]
+    return out.reshape(*lead, out.shape[-1])
+
+
+def w8a8_matmul(x, w_q, w_scale, *, mode: Mode = "auto", **blocks):
+    """y = dyn_quant8(x) @ w_q * scales. x (..., K); returns (..., N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    impl = _resolve(mode)
+    if impl == "ref":
+        out = ref.w8a8_dynamic_ref(x2, w_q, w_scale)
+    else:
+        bm = blocks.pop("bm", i8.DEFAULT_BM)
+        m_pad, bm = _pick_bm(m, bm)
+        blocks = _clamp_blocks(k, w_q.shape[-1], blocks, 0)
+        x_p = jnp.pad(x2, ((0, m_pad - m), (0, 0))) if m_pad != m else x2
+        out = i8.w8a8_matmul(x_p, w_q, w_scale, bm=bm,
+                             interpret=(impl == "interpret"), **blocks)
+        out = out[:m]
+    return out.reshape(*lead, out.shape[-1])
+
+
+def quantize_pack(w, *, bits: int, group_size: int, mode: Mode = "auto",
+                  **blocks):
+    impl = _resolve(mode)
+    if impl == "ref" or bits == 3:
+        return ref.quantize_pack_ref(w, bits=bits, group_size=group_size)
+    return qp.quantize_pack(w, bits=bits, group_size=group_size,
+                            interpret=(impl == "interpret"), **blocks)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: per-group asymmetric quantize + sub-byte pack.
+
+Offline weight preparation for the serving path: streams a bf16/f32 weight
+through VMEM once and emits packed uint8 codes + per-group scale/zp. The
+group axis is K (input features), matching the dequant-matmul layout.
+
+    grid (K/g, N/bn)       one program per (group, N-block)
+    w block  (g, bn)       VMEM in
+    packed   (g//8*bits, bn) VMEM out
+    scale/zp (1, bn)       VMEM out
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_block(codes: jax.Array, bits: int) -> jax.Array:
+    """(g, bn) uint8 codes -> (g//8*bits, bn) uint8 bytes (little-endian
+    8-value groups; inverse of dequant_matmul._unpack_block)."""
+    g, bn = codes.shape
+    cu = codes.reshape(g // 8, 8, bn).astype(jnp.uint32)
+    out = []
+    for byte_idx in range(bits):
+        acc = jnp.zeros((g // 8, bn), jnp.uint32)
+        for j in range(8):
+            bit_off = j * bits
+            lo, hi = bit_off // 8, (bit_off + bits - 1) // 8
+            if lo == byte_idx:
+                acc = acc | ((cu[:, j, :] << jnp.uint32(bit_off % 8))
+                             & jnp.uint32(0xFF))
+            elif hi == byte_idx and lo != hi:
+                acc = acc | (cu[:, j, :] >> jnp.uint32(8 - bit_off % 8))
+        out.append(acc.astype(jnp.uint8))
+    packed = jnp.stack(out, axis=1)          # (g//8, bits, bn)
+    return packed.reshape(g // 8 * bits, bn)
+
+
+def _kernel(w_ref, p_ref, s_ref, z_ref, *, bits: int):
+    wf = w_ref[...].astype(jnp.float32)
+    wmax = jnp.max(wf, axis=0, keepdims=True)
+    wmin = jnp.min(wf, axis=0, keepdims=True)
+    scale = jnp.maximum(wmax - wmin, 1e-8) / (2 ** bits - 1)
+    zp = jnp.round(-wmin / scale)
+    codes = jnp.clip(jnp.round(wf / scale) + zp, 0, 2 ** bits - 1
+                     ).astype(jnp.uint8)
+    p_ref[...] = _pack_block(codes, bits)
+    s_ref[...] = scale
+    z_ref[...] = zp
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bn",
+                                             "interpret"))
+def quantize_pack(w: jax.Array, *, bits: int, group_size: int,
+                  bn: int = 256, interpret: bool = False):
+    """Returns (packed (K//8*bits, N), scale (K//g, N) f32, zp (K//g, N))."""
+    k, n = w.shape
+    g = group_size if group_size else k
+    assert k % g == 0 and g % 8 == 0 and n % bn == 0, (k, g, n, bn)
+    rows = g // 8 * bits
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(k // g, n // bn),
+        in_specs=[pl.BlockSpec((g, bn), lambda gi, j: (gi, j))],
+        out_specs=[
+            pl.BlockSpec((rows, bn), lambda gi, j: (gi, j)),
+            pl.BlockSpec((1, bn), lambda gi, j: (gi, j)),
+            pl.BlockSpec((1, bn), lambda gi, j: (gi, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k // 8 * bits, n), jnp.uint8),
+            jax.ShapeDtypeStruct((k // g, n), jnp.float32),
+            jax.ShapeDtypeStruct((k // g, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` implements the exact math its kernel must reproduce; kernel
+tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack
+
+
+def dequant_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                       zp: jax.Array, *, bits: int, group_size: int,
+                       out_dtype=None) -> jax.Array:
+    """x (M, K) float  @  dequant(packed (K//8*bits, N)) -> (M, N).
+
+    scale/zp: (K // group_size, N) float32 (group along K).
+    """
+    m, k = x.shape
+    n = packed.shape[-1]
+    codes = unpack(packed, bits, k).astype(jnp.float32)       # (K, N)
+    g = group_size if group_size else k
+    cg = codes.reshape(k // g, g, n)
+    w = (cg - zp[:, None, :]) * scale[:, None, :]
+    w = w.reshape(k, n).astype(x.dtype)
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """int8 x (M, K) @ int8 w (K, N) -> float (M, N).
+
+    x_scale (M, 1) per-token, w_scale (N,) per-channel, both float32.
+    """
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale.astype(jnp.float32) \
+        * w_scale.astype(jnp.float32)[None, :]
+    return out.astype(out_dtype)
+
+
+def w8a8_dynamic_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                     out_dtype=None) -> jax.Array:
+    """Dynamic per-token activation quantization + int8 matmul."""
+    xf = x.astype(jnp.float32)
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-8)
+    x_scale = bound / 127.0
+    x_q = jnp.clip(jnp.round(xf / x_scale), -128, 127).astype(jnp.int8)
+    out = int8_matmul_ref(x_q, w_q, x_scale, w_scale)
+    return out.astype(out_dtype or x.dtype)
+
+
+def quantize_pack_ref(w: jax.Array, *, bits: int, group_size: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-group asymmetric quantize + pack. w (K, N) float.
+
+    Returns (packed (K//8*bits, N) uint8, scale (K//g, N) f32, zp same).
+    """
+    from repro.core.packing import pack
+    k, n = w.shape
+    g = group_size if group_size else k
+    wg = w.astype(jnp.float32).reshape(k // g, g, n)
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    scale = jnp.maximum(wmax - wmin, 1e-8) / (2 ** bits - 1)
+    zp = jnp.round(-wmin / scale)
+    codes = jnp.clip(jnp.round(wg / scale[:, None, :]) + zp[:, None, :],
+                     0, 2 ** bits - 1)
+    codes = codes.reshape(k, n).astype(jnp.uint8)
+    return pack(codes, bits), scale, zp

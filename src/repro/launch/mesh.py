@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set ``XLA_FLAGS`` before the first jax initialization.
+
+Single pod: (16, 16) over ("data", "model")   — 256 chips (v5e pod).
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+The "pod" axis is the outer data-parallel axis: gradients cross the
+inter-pod (DCN) boundary exactly once per step, while every latency-
+sensitive collective (TP all-gather/reduce-scatter, MoE dispatch) stays on
+in-pod ICI. Elastic scaling: any mesh whose axis names are a subset of
+{pod, data, model} works — checkpoints reshard on load (repro.train.checkpoints).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1) -> Mesh:
+    """Arbitrary mesh for elastic configurations and tests."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist, as a 1x1 (or 1xN) mesh — CPU tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

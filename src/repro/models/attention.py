@@ -1,0 +1,205 @@
+"""Attention: GQA/MQA, causal / prefix-LM / bidirectional / sliding-window,
+with a memory-efficient chunked (flash-style) path for long sequences.
+
+Shapes: q (B, T, Hq, D), k/v (B, S, Hkv, D). GQA broadcast is expressed by
+reshaping q to (B, T, Hkv, G, D) so XLA never materializes repeated K/V.
+
+The chunked path scans over KV blocks with a running (max, denominator,
+accumulator) triple — the standard online-softmax recurrence — bounding the
+score tensor to (block_q, block_kv) instead of (T, S). On TPU this is also
+what a Pallas flash kernel would tile; we keep the XLA version as the
+portable implementation and as the oracle for any future fused kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+
+NEG_INF = -1e30
+
+
+def _pin(x, mode: str, seq_axis: int = -1):
+    """Constrain attention-internal tensors (GSPMD left alone shards score
+    tensors across 'model' even with replicated q/k/v, paying a full-score
+    all-reduce per layer — measured ~48 GB/device/step on gemma-2b train).
+
+    mode="batch": batch-only (replicates attention over 'model').
+    mode="seq":   Megatron-SP style — shard the q-position dim over 'model'
+                  (rows of the causal score matrix are independent), keeping
+                  attention compute TP-sharded with only small boundary
+                  gathers. seq_axis names the q-position dim of x.
+    """
+    if mode == "batch":
+        return sharding.shard(x, "batch", *([None] * (x.ndim - 1)))
+    if mode == "seq" and seq_axis >= 0:
+        names = ["batch"] + [None] * (x.ndim - 1)
+        names[seq_axis] = "act_seq_tp"
+        return sharding.shard(x, *names)
+    if mode == "seq":
+        return sharding.shard(x, "batch", *([None] * (x.ndim - 1)))
+    return x
+
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+               window: int, prefix_len: int) -> jax.Array:
+    """(Tq, Skv) additive mask. window>0 = sliding window (causal);
+    prefix_len>0 = prefix-LM (bidirectional over the first prefix_len)."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        c = q_pos[:, None] >= kv_pos[None, :]
+        if prefix_len > 0:
+            c = c | (kv_pos[None, :] < prefix_len)
+        ok = ok & c
+    if window > 0:
+        ok = ok & (q_pos[:, None] - kv_pos[None, :] < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, prefix_len: int = 0,
+                    q_offset: int | jax.Array = 0,
+                    scale: Optional[float] = None,
+                    pin: str = "auto") -> jax.Array:
+    """Reference attention; materializes (B, Hkv, G, T, S) scores."""
+    b, t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qh = q.reshape(b, t, hkv, g, d)
+    # bf16 MXU inputs, fp32 accumulation (TPU-native mixed precision)
+    if pin != "auto":
+        qh = _pin(qh, pin, seq_axis=1)       # (b, t, hkv, g, d)
+        k = _pin(k, "batch")                 # KV replicated over 'model'
+        v = _pin(v, "batch")
+    scores = jnp.einsum("bthgd,bshd->bhgts", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    if pin != "auto":
+        scores = _pin(scores, pin, seq_axis=3)   # (b, hkv, g, t, s)
+    q_pos = jnp.arange(t) + q_offset
+    kv_pos = jnp.arange(s)
+    scores = scores + _mask_bias(q_pos, kv_pos, causal, window, prefix_len)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if pin != "auto":
+        probs = _pin(probs, pin, seq_axis=3)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    # cast BEFORE the sharding boundary: the reshard (and the backward
+    # cotangent psums it induces) then moves bf16, not the f32 accumulator
+    out = out.astype(q.dtype)
+    if pin != "auto":
+        out = _pin(out, pin, seq_axis=1)         # (b, t, hkv, g, d)
+    return out.reshape(b, t, hq, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0, prefix_len: int = 0,
+                      q_offset: int = 0, block_q: int = 1024,
+                      block_kv: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Flash-style online-softmax attention, O(block_q * block_kv) memory.
+
+    Requires T % block_q == 0 and S % block_kv == 0 (configs guarantee it).
+    """
+    b, t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    nq, nkv = t // block_q, s // block_kv
+
+    qh = q.reshape(b, nq, block_q, hkv, g, d)
+    kh = k.reshape(b, nkv, block_kv, hkv, d)
+    vh = v.reshape(b, nkv, block_kv, hkv, d)
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kv_idx, k_blk, v_blk = kv
+            kv_pos = kv_idx * block_kv + jnp.arange(block_kv)
+            sc = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+            bias = _mask_bias_dyn(q_pos, kv_pos, causal, window, prefix_len)
+            sc = sc + bias
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, d), jnp.float32)
+        kv_idx = jnp.arange(nkv)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kv_idx, jnp.moveaxis(kh, 1, 0), jnp.moveaxis(vh, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhgqd->bqhgd", out)
+
+    out_blocks = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), jnp.moveaxis(qh, 1, 0)))
+    out = jnp.moveaxis(out_blocks, 0, 1)  # (b, nq, block_q, hkv, g, d)
+    return out.reshape(b, t, hq, d).astype(q.dtype)
+
+
+def _mask_bias_dyn(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+                   window: int, prefix_len: int) -> jax.Array:
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        c = q_pos[:, None] >= kv_pos[None, :]
+        if prefix_len > 0:
+            c = c | (kv_pos[None, :] < prefix_len)
+        ok = ok & c
+    if window > 0:
+        ok = ok & (q_pos[:, None] - kv_pos[None, :] < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, *, window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """One-token decode: q (B, 1, Hq, D) against caches (B, S, Hkv, D).
+
+    ``cur_len`` (B,) int32 — number of valid cache positions per sequence.
+    Sliding-window caches are ring buffers; masking by validity covers both.
+    """
+    b, _, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qh = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache.astype(qh.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, :]                       # (1, S)
+    valid = pos < cur_len[:, None]                     # (B, S)
+    if window > 0:
+        valid = valid & (pos >= (cur_len[:, None] - window))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
+              chunked_threshold: int = 8192, block_q: int = 1024,
+              block_kv: int = 1024, scale=None, pin: str = "auto"):
+    """Dispatch dense vs chunked on sequence length."""
+    t, s = q.shape[1], k.shape[1]
+    if max(t, s) > chunked_threshold and t % block_q == 0 and s % block_kv == 0:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 prefix_len=prefix_len, q_offset=q_offset,
+                                 block_q=block_q, block_kv=block_kv, scale=scale)
+    return dense_attention(q, k, v, causal=causal, window=window,
+                           prefix_len=prefix_len, q_offset=q_offset,
+                           scale=scale, pin=pin)

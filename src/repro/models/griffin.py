@@ -1,0 +1,115 @@
+"""Griffin / RecurrentGemma blocks (arXiv:2402.19427).
+
+Layer pattern: 1 local (sliding-window) attention block per ``attn_every``
+layers, the rest are RG-LRU recurrent blocks. Each block is
+
+    u -> norm -> temporal mixer (attention | RG-LRU branch) -> +residual
+      -> norm -> gated MLP -> +residual
+
+RG-LRU recurrent branch:
+    x  = W_rec u_n;  gate = GeLU(W_gate u_n)
+    x  = SiLU(causal_conv(x))
+    r  = sigmoid(w_a * x + b_a)          (per-channel recurrence gate)
+    i  = sigmoid(w_x * x + b_x)          (per-channel input gate)
+    la = -c * softplus(Lambda) * r       (log recurrence coefficient, c=8)
+    h_t = exp(la_t) h_{t-1} + sqrt(1 - exp(2 la_t)) * (i_t * x_t)
+    out = W_out (h * gate)
+
+The diagonal linear recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth, sequence-parallel friendly), and with a single fused step for
+decode. The recurrent state is O(d_rnn) per sequence — this is why
+recurrentgemma *does* run the 500k-token long-context cell.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers
+from repro.models.mamba2 import causal_conv
+
+RG_LRU_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32) -> dict:
+    d, dr = cfg.d_model, cfg.rnn_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # Lambda init so that a = sigmoid-ish decay in [0.9, 0.999] at r=0.5
+    lam = jax.random.uniform(k4, (dr,), minval=0.9, maxval=0.999)
+    lam_raw = jnp.log(jnp.expm1(-jnp.log(lam) / (0.5 * RG_LRU_C)))
+    return {
+        "norm": layers.init_norm(d, cfg.norm, dtype),
+        "w_rec": layers.dense_init(k1, d, dr, dtype),
+        "w_gate": layers.dense_init(k2, d, dr, dtype),
+        "conv_w": (0.1 * jax.random.normal(k3, (cfg.conv_width, dr))).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "gate_a_w": jnp.zeros((dr,), dtype), "gate_a_b": jnp.zeros((dr,), dtype),
+        "gate_x_w": jnp.zeros((dr,), dtype), "gate_x_b": jnp.zeros((dr,), dtype),
+        "lam": lam_raw.astype(dtype),
+        "w_out": layers.dense_init(jax.random.fold_in(key, 9), dr, d, dtype),
+    }
+
+
+def _rglru_coeffs(params: dict, x: jax.Array):
+    """Per-step (log_a, beta*i*x) for the diagonal recurrence, in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["gate_a_w"].astype(jnp.float32) * xf
+                       + params["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(params["gate_x_w"].astype(jnp.float32) * xf
+                       + params["gate_x_b"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * xf
+
+
+def rglru_scan(params: dict, x: jax.Array,
+               h0: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU via associative scan. x (B, T, D)."""
+    log_a, b = _rglru_coeffs(params, x)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # Fold the initial state into the first step's additive term.
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(params: dict, x: jax.Array, h_prev: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """One decode step. x (B, 1, D), h_prev (B, D)."""
+    log_a, b = _rglru_coeffs(params, x)
+    h = jnp.exp(log_a[:, 0]) * h_prev.astype(jnp.float32) + b[:, 0]
+    return h.astype(x.dtype)[:, None, :], h
+
+
+def apply_rglru_block(params: dict, u: jax.Array, cfg,
+                      rnn_state: Optional[jax.Array] = None,
+                      conv_state: Optional[jax.Array] = None,
+                      decode: bool = False):
+    """Temporal-mixing half of a recurrent block (residual included)."""
+    hs = layers.apply_norm(params["norm"], u, cfg.norm)
+    gate = jax.nn.gelu(hs @ params["w_gate"], approximate=True)
+    x = hs @ params["w_rec"]
+    x = sharding.shard(x, "batch", None, "act_rnn")
+    x, new_conv = causal_conv(x, params["conv_w"], params["conv_b"], conv_state)
+    x = jax.nn.silu(x)
+    if decode:
+        y, new_state = rglru_step(params, x, rnn_state)
+    else:
+        y, new_state = rglru_scan(params, x, rnn_state)
+    out = (y * gate) @ params["w_out"]
+    return u + out, new_state, new_conv
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
+    return (jnp.zeros((batch, cfg.rnn_dim), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_dim), dtype))

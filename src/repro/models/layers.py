@@ -1,0 +1,142 @@
+"""Shared neural-net layers (pure JAX, no framework deps).
+
+All layers are function-style: ``init_*`` builds a param pytree, ``apply``
+functions are pure. Weight convention: linear weights are
+``(in_features, out_features)`` and apply as ``y = x @ w + b`` — this matches
+the (in, out) convention used by the quantization core (transforms
+left-multiply weights along axis 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (the zoo's default)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out))
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str,
+               eps: float = 1e-6) -> jax.Array:
+    """RMSNorm / LayerNorm. A ``bias`` entry is honoured for either kind —
+    merging a shifted affine transform into an RMSNorm introduces one."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        xhat = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xhat = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    out = xhat * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        out = out + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for RoPE; head_dim must be even."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (x[..2i], x[..2i+1]). x: (..., seq, heads, head_dim),
+    positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_up"] = dense_init(k1, d_model, d_ff, dtype)
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    else:
+        p["w_up"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    # optional biases (by key presence): quantization merging introduces them
+    def lin(w_key, b_key):
+        y = x @ params[w_key]
+        if b_key in params:
+            y = y + params[b_key]
+        return y
+
+    if act == "swiglu":
+        h = jax.nn.silu(lin("w_gate", "b_gate")) * lin("w_up", "b_up")
+    elif act == "geglu":
+        h = jax.nn.gelu(lin("w_gate", "b_gate"), approximate=True) \
+            * lin("w_up", "b_up")
+    elif act == "gelu":
+        h = jax.nn.gelu(lin("w_up", "b_up"), approximate=True)
+    elif act == "relu":
+        h = jax.nn.relu(lin("w_up", "b_up"))
+    else:
+        raise ValueError(act)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean softmax cross entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

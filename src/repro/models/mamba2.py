@@ -1,0 +1,261 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Layer structure (per block):
+    u -> RMSNorm -> in_proj -> [z | xBC | dt]
+    xBC -> causal conv1d(width=4) -> SiLU -> [x | B | C]
+    y = SSD(x, dt, A, B, C) + D * x
+    out = out_proj( RMSNormGated(y, z) )
+
+The SSD scan uses the chunked algorithm from the paper: within a chunk the
+recurrence is computed as a (chunk x chunk) masked attention-like product;
+across chunks a sequential ``lax.scan`` carries the (heads, headdim, state)
+running state. Memory is O(T/chunk * H * P * N) for boundary states instead
+of O(T * H * P * N).
+
+Shapes: x (B, T, H, P); B, C (B, T, G, N); dt (B, T, H); A (H,) negative.
+GQA-style: G state groups broadcast over H heads (H % G == 0).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_mamba2_block(key, cfg, dtype=jnp.float32) -> dict:
+    d, d_in = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = d_in + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + h   # z, xBC, dt
+    return {
+        "norm": layers.init_norm(d, cfg.norm, dtype),
+        "in_proj": layers.dense_init(k1, d, proj_out, dtype),
+        "conv_w": (0.1 * jax.random.normal(k2, (cfg.conv_width, conv_dim))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),   # A = -exp
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (h,), minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(dtype),
+        "gate_norm": layers.init_norm(d_in, "rmsnorm", dtype),
+        "out_proj": layers.dense_init(k4, d_in, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B, T, C); w (W, C). Returns (y, new_state)
+    where state holds the trailing (W-1, C) inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, T+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return y + b, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{k=j+1..i} log_a[k] for i >= j, -inf otherwise.
+    log_a: (..., T). Returns (..., T, T)."""
+    t = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # cs_i - cs_j
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                bf16_intra: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x (B,T,H,P); dt (B,T,H) post-softplus; a (H,) negative; b,c (B,T,G,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    # Pad T to a chunk multiple: dt=0 padding steps are exact no-ops on the
+    # state (decay exp(0)=1, update weight dt=0), so the final state and the
+    # first `t` outputs are unaffected.
+    t_orig = t
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+
+    # mixed precision (bf16_intra): the big (T, ...) streams x/B/C stay in
+    # the model dtype so their *cotangents* also flow bf16 (upcasting here
+    # was measured to push the whole backward of the block into f32 —
+    # ~200 GB/device/step of extra HBM traffic on the train_4k cell); the
+    # decay/recurrence math (small (B,T,H) tensors and (H,P,N) states)
+    # stays f32 for stability, as in the reference SSD kernels.
+    idt = x.dtype if bf16_intra else jnp.float32
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(idt)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, chunk, g, n).astype(idt)
+    cc = c.reshape(bsz, nc, chunk, g, n).astype(idt)
+
+    log_a = dtc * a[None, None, None, :]             # (B,nc,chunk,H), negative
+    log_a_h = jnp.moveaxis(log_a, -1, -2)            # (B,nc,H,chunk)
+    seg = _segsum(log_a_h)                           # (B,nc,H,chunk,chunk)
+
+    # intra-chunk (diagonal blocks): attention-like masked product
+    cb = jnp.einsum("bzihn,bzjhn->bzhij",
+                    _rep_g(cc, rep), _rep_g(bc, rep),
+                    preferred_element_type=jnp.float32)        # (B,nc,H,i,j)
+    m = cb * jnp.exp(seg) * jnp.moveaxis(dtc, -1, -2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", m.astype(idt), xc,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk terminal states: S_z = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    cs = jnp.cumsum(log_a, axis=2)                   # (B,nc,chunk,H)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)    # (B,nc,chunk,H)
+    s_chunk = jnp.einsum("bzjh,bzjhn,bzjhp->bzhpn",
+                         (decay_to_end * dtc).astype(idt), _rep_g(bc, rep),
+                         xc, preferred_element_type=jnp.float32)
+
+    # inter-chunk sequential recurrence over nc chunk states
+    chunk_decay = jnp.exp(jnp.sum(log_a, axis=2))    # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_z, dec = inp
+        s_new = s_prev * dec[..., None, None] + s_z
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    final_state, s_prevs = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)            # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_i += C_i . (exp(cs_i) * S_prev)
+    y_inter = jnp.einsum("bzihn,bzih,bzhpn->bzihp",
+                         _rep_g(cc, rep), jnp.exp(cs).astype(idt),
+                         s_prevs.astype(idt),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)[:, :t_orig]
+    return y.astype(x.dtype), final_state
+
+
+def _rep_g(z: jax.Array, rep: int) -> jax.Array:
+    """Broadcast (B,nc,chunk,G,N) state groups to H=G*rep heads."""
+    if rep == 1:
+        return z
+    return jnp.repeat(z, rep, axis=3)
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, state: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x (B,H,P); dt (B,H); b,c (B,G,N);
+    state (B,H,P,N)."""
+    h = x.shape[1]
+    rep = h // b.shape[1]
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)      # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    da = jnp.exp(dt.astype(jnp.float32) * a[None, :])        # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(jnp.float32), bh,
+                     x.astype(jnp.float32))
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj: jax.Array, cfg):
+    d_in, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * g * n]
+    dt = proj[..., 2 * d_in + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: jax.Array, cfg):
+    d_in, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in:d_in + g * n]
+    c = xbc[..., d_in + g * n:]
+    return x, b, c
+
+
+def apply_mamba2_block(params: dict, u: jax.Array, cfg,
+                       ssm_state: Optional[jax.Array] = None,
+                       conv_state: Optional[jax.Array] = None,
+                       decode: bool = False):
+    """Full block. Returns (out, new_ssm_state, new_conv_state)."""
+    bsz, t, _ = u.shape
+    h_heads, p, g, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+
+    res = u
+    hs = layers.apply_norm(params["norm"], u, cfg.norm)
+    proj = hs @ params["in_proj"]
+    proj = sharding.shard(proj, "batch", None, "act_inner")
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    xbc, new_conv = causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, b, c = _split_xbc(xbc, cfg)
+
+    x = x.reshape(bsz, t, h_heads, p)
+    b = b.reshape(bsz, t, g, n)
+    c = c.reshape(bsz, t, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if decode:
+        assert t == 1
+        y, new_state = ssd_decode_step(x[:, 0], dt[:, 0], a, b[:, 0], c[:, 0],
+                                       ssm_state)
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(x, dt, a, b, c, cfg.ssm_chunk, ssm_state,
+                                   bf16_intra=cfg.ssd_bf16_intra)
+
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(bsz, t, cfg.d_inner)
+    y = layers.apply_norm(params["gate_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return res + out, new_state, new_conv
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return (jnp.zeros((batch, h, p, n), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype))

@@ -1,0 +1,474 @@
+"""Unified model interface over all architecture families.
+
+``Model`` wraps a ``ModelConfig`` with a uniform API:
+
+    model.init(key)                       -> params
+    model.loss(params, batch)             -> scalar (train objective)
+    model.forward(params, batch)          -> logits (full sequence)
+    model.init_cache(batch, max_len)      -> decode cache pytree
+    model.prefill(params, batch, cache)   -> (logits, cache)
+    model.decode_step(params, tok, cache) -> (logits, cache)
+    model.param_logical_axes()            -> pytree of logical-axis tuples
+    model.input_specs(shape_cfg)          -> ShapeDtypeStruct batch (no alloc)
+
+Families: dense / moe / vlm / audio share the transformer trunk; mamba2 and
+griffin get their own block assembly (griffin interleaves local-attention and
+RG-LRU blocks per ``attn_every``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import griffin as griffin_lib
+from repro.models import layers, mamba2, transformer
+
+
+# ---------------------------------------------------------------------------
+# griffin assembly (heterogeneous layers -> per-layer param list)
+# ---------------------------------------------------------------------------
+
+def _griffin_is_attn(cfg: ModelConfig, i: int) -> bool:
+    return cfg.attn_every > 0 and (i % cfg.attn_every == cfg.attn_every - 1)
+
+
+def _init_griffin(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kemb, klyr, khead = jax.random.split(key, 3)
+    lkeys = jax.random.split(klyr, cfg.num_layers)
+    blocks = []
+    for i, k in enumerate(lkeys):
+        ka, kb = jax.random.split(k)
+        if _griffin_is_attn(cfg, i):
+            temporal = transformer.init_block(ka, cfg, dtype)
+            blocks.append({"kind_attn": temporal})
+        else:
+            blocks.append({"kind_rec": {
+                "rglru": griffin_lib.init_rglru_block(ka, cfg, dtype),
+                "ln_mlp": layers.init_norm(cfg.d_model, cfg.norm, dtype),
+                "mlp": layers.init_mlp(kb, cfg.d_model, cfg.d_ff, cfg.act,
+                                       dtype),
+            }})
+    params = {
+        "embed": layers.embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": blocks,
+        "ln_f": layers.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(khead, cfg.d_model, cfg.vocab_size,
+                                           dtype, scale=0.02)
+    return params
+
+
+def _griffin_forward(params, cfg: ModelConfig, tokens, collect_cache=False,
+                     last_only=False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    kv_list, rnn_list, conv_list = [], [], []
+
+    for i, blk in enumerate(params["layers"]):
+        if "kind_attn" in blk:
+            def attn_body(h, lp=blk["kind_attn"]):
+                return transformer.apply_block_full(
+                    lp, h, cfg, positions, 0, cfg.window, collect_cache)
+            if cfg.remat:
+                attn_body = jax.checkpoint(attn_body)
+            x, kv, _ = attn_body(x)
+            if collect_cache:
+                kv_list.append(kv)
+        else:
+            rec = blk["kind_rec"]
+
+            def rec_body(h, rec=rec):
+                h, rnn_s, conv_s = griffin_lib.apply_rglru_block(
+                    rec["rglru"], h, cfg)
+                m = layers.apply_norm(rec["ln_mlp"], h, cfg.norm)
+                h = h + layers.apply_mlp(rec["mlp"], m, cfg.act)
+                return h, rnn_s, conv_s
+            if cfg.remat:
+                rec_body = jax.checkpoint(rec_body)
+            x, rnn_s, conv_s = rec_body(x)
+            if collect_cache:
+                rnn_list.append(rnn_s)
+                conv_list.append(conv_s)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    cache = None
+    if collect_cache:
+        cache = {"rnn": jnp.stack(rnn_list), "conv": jnp.stack(conv_list)}
+        if kv_list:
+            ks = jnp.stack([kv[0] for kv in kv_list])
+            vs = jnp.stack([kv[1] for kv in kv_list])
+            # keep only the trailing window as the ring-buffer prefix
+            w = cfg.window
+            t = ks.shape[2]
+            if t > w:
+                ks, vs = ks[:, :, -w:], vs[:, :, -w:]
+            cache["k"], cache["v"] = ks, vs
+    return logits, cache
+
+
+def _griffin_decode(params, cfg: ModelConfig, token, cache):
+    x = jnp.take(params["embed"], token, axis=0)
+    cur_len = cache["len"]
+    ai, ri = 0, 0
+    new_k, new_v, new_rnn, new_conv = [], [], [], []
+    for i, blk in enumerate(params["layers"]):
+        if "kind_attn" in blk:
+            x, kc, vc = transformer.apply_block_decode(
+                blk["kind_attn"], x, cfg, cache["k"][ai], cache["v"][ai],
+                cur_len, cfg.window)
+            new_k.append(kc)
+            new_v.append(vc)
+            ai += 1
+        else:
+            rec = blk["kind_rec"]
+            x, rnn_s, conv_s = griffin_lib.apply_rglru_block(
+                rec["rglru"], x, cfg, cache["rnn"][ri], cache["conv"][ri],
+                decode=True)
+            m = layers.apply_norm(rec["ln_mlp"], x, cfg.norm)
+            x = x + layers.apply_mlp(rec["mlp"], m, cfg.act)
+            new_rnn.append(rnn_s)
+            new_conv.append(conv_s)
+            ri += 1
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    new_cache = {"k": jnp.stack(new_k) if new_k else cache["k"],
+                 "v": jnp.stack(new_v) if new_v else cache["v"],
+                 "rnn": jnp.stack(new_rnn), "conv": jnp.stack(new_conv),
+                 "len": cur_len + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# mamba2 assembly
+# ---------------------------------------------------------------------------
+
+def _init_mamba(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kemb, klyr, khead = jax.random.split(key, 3)
+    lkeys = jax.random.split(klyr, cfg.num_layers)
+    blocks = jax.vmap(lambda k: mamba2.init_mamba2_block(k, cfg, dtype))(lkeys)
+    params = {
+        "embed": layers.embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": blocks,
+        "ln_f": layers.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(khead, cfg.d_model, cfg.vocab_size,
+                                           dtype, scale=0.02)
+    return params
+
+
+def _mamba_forward(params, cfg: ModelConfig, tokens, collect_cache=False,
+                   last_only=False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.shard(x, "batch", "seq", "embed")
+
+    def body(h, lp):
+        h, ssm_s, conv_s = mamba2.apply_mamba2_block(lp, h, cfg)
+        ys = (ssm_s, conv_s) if collect_cache else None
+        return h, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    if last_only:
+        x = x[:, -1:, :]
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    cache = None
+    if collect_cache:
+        cache = {"ssm": states[0], "conv": states[1]}
+    return logits, cache
+
+
+def _mamba_decode(params, cfg: ModelConfig, token, cache):
+    x = jnp.take(params["embed"], token, axis=0)
+    cur_len = cache["len"]
+
+    def body(h, xs):
+        lp, ssm_s, conv_s = xs
+        h, ssm_n, conv_n = mamba2.apply_mamba2_block(
+            lp, h, cfg, ssm_s, conv_s, decode=True)
+        return h, (ssm_n, conv_n)
+
+    x, (ssm_new, conv_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    return logits, {"ssm": ssm_new, "conv": conv_new, "len": cur_len + 1}
+
+
+# ---------------------------------------------------------------------------
+# the Model wrapper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- construction ----
+    def init(self, key) -> dict:
+        if self.cfg.family == "mamba2":
+            return _init_mamba(key, self.cfg)
+        if self.cfg.family == "griffin":
+            return _init_griffin(key, self.cfg)
+        return transformer.init_lm(key, self.cfg)
+
+    # ---- training ----
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "mamba2":
+            logits, _ = _mamba_forward(params, cfg, batch["tokens"])
+            return layers.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        if cfg.family == "griffin":
+            logits, _ = _griffin_forward(params, cfg, batch["tokens"])
+            return layers.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        return transformer.lm_loss(params, cfg, batch)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "mamba2":
+            return _mamba_forward(params, cfg, batch["tokens"])[0]
+        if cfg.family == "griffin":
+            return _griffin_forward(params, cfg, batch["tokens"])[0]
+        logits, _, _ = transformer.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            prefix_embeds=batch.get("embeds", batch.get("prefix_embeds")))
+        return logits
+
+    # ---- serving ----
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.family == "mamba2":
+            ssm, conv = mamba2.init_mamba2_state(cfg, batch, dtype)
+            return {"ssm": jnp.broadcast_to(ssm, (cfg.num_layers,) + ssm.shape).copy(),
+                    "conv": jnp.broadcast_to(conv, (cfg.num_layers,) + conv.shape).copy(),
+                    "len": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "griffin":
+            n_attn = sum(_griffin_is_attn(cfg, i) for i in range(cfg.num_layers))
+            n_rec = cfg.num_layers - n_attn
+            hd = cfg.resolved_head_dim
+            w = min(max_len, cfg.window)
+            rnn, conv = griffin_lib.init_rglru_state(cfg, batch, dtype)
+            return {
+                "k": jnp.zeros((n_attn, batch, w, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((n_attn, batch, w, cfg.num_kv_heads, hd), dtype),
+                "rnn": jnp.broadcast_to(rnn, (n_rec,) + rnn.shape).copy(),
+                "conv": jnp.broadcast_to(conv, (n_rec,) + conv.shape).copy(),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def prefill(self, params, batch, max_len: int):
+        """Full-prompt forward that also builds the decode cache."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            raise ValueError("encoder-only architecture has no decode path")
+        tokens = batch["tokens"]
+        bsz, t = tokens.shape
+        if cfg.family == "mamba2":
+            logits, states = _mamba_forward(params, cfg, tokens,
+                                            collect_cache=True,
+                                            last_only=True)
+            cache = {"ssm": states["ssm"], "conv": states["conv"],
+                     "len": jnp.full((bsz,), t, jnp.int32)}
+            return logits, cache
+        if cfg.family == "griffin":
+            logits, cache = _griffin_forward(params, cfg, tokens,
+                                             collect_cache=True,
+                                             last_only=True)
+            full = self.init_cache(bsz, max_len)
+            new = {"rnn": cache["rnn"], "conv": cache["conv"],
+                   "len": jnp.full((bsz,), t, jnp.int32)}
+            if "k" in cache:
+                w = full["k"].shape[2]
+                n = min(t, w)
+                # ring buffer: entry for absolute position p lives at p % w
+                if t <= w:
+                    kc = full["k"].at[:, :, :n].set(cache["k"][:, :, -n:])
+                    vc = full["v"].at[:, :, :n].set(cache["v"][:, :, -n:])
+                else:
+                    roll = t % w
+                    kc = jnp.roll(cache["k"][:, :, -w:], roll, axis=2)
+                    vc = jnp.roll(cache["v"][:, :, -w:], roll, axis=2)
+                new["k"], new["v"] = kc, vc
+            else:
+                new["k"], new["v"] = full["k"], full["v"]
+            return logits, new
+        prefix = batch.get("prefix_embeds")
+        logits, kvs, _ = transformer.forward(params, cfg, tokens=tokens,
+                                             prefix_embeds=prefix,
+                                             collect_kv=True, last_only=True)
+        t_all = kvs["k"].shape[2]
+        # a VLM prompt is prefix_patches + text: the cache must hold both
+        max_len = max(max_len, t_all)
+        cache = self.init_cache(bsz, max_len)
+        kc = cache["k"].at[:, :, :t_all].set(kvs["k"].astype(cache["k"].dtype))
+        vc = cache["v"].at[:, :, :t_all].set(kvs["v"].astype(cache["v"].dtype))
+        return logits, {"k": kc, "v": vc,
+                        "len": jnp.full((bsz,), t_all, jnp.int32)}
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            raise ValueError("encoder-only architecture has no decode path")
+        if cfg.family == "mamba2":
+            return _mamba_decode(params, cfg, token, cache)
+        if cfg.family == "griffin":
+            return _griffin_decode(params, cfg, token, cache)
+        return transformer.decode_step(params, cfg, token, cache)
+
+    # ---- dry-run support ----
+    def input_specs(self, shape_cfg: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        f32 = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape_cfg.mode in ("train", "prefill"):
+            if cfg.family == "audio":
+                batch = {"embeds": sds((b, s, cfg.d_model), f32)}
+                if shape_cfg.mode == "train":
+                    batch["labels"] = sds((b, s), i32)
+                return batch
+            batch = {"tokens": sds((b, s), i32)}
+            if cfg.family == "vlm":
+                batch["prefix_embeds"] = sds((b, cfg.num_prefix, cfg.d_model),
+                                             f32)
+            return batch
+        # decode: one new token against a cache of length s
+        return {"token": sds((b, 1), i32),
+                "cache": self.cache_specs(b, s)}
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+
+    # ---- sharding ----
+    def param_logical_axes(self) -> Any:
+        """Pytree (same structure as params) of logical-axis name tuples."""
+        cfg = self.cfg
+        L = ("layers",)
+
+        def norm_ax(stacked: bool):
+            base = {"scale": (L if stacked else ()) + (None,)}
+            if cfg.norm == "layernorm":
+                base["bias"] = (L if stacked else ()) + (None,)
+            return base
+
+        def mlp_ax(stacked: bool):
+            pre = L if stacked else ()
+            ax = {"w_up": pre + ("fsdp_embed", "mlp"),
+                  "w_down": pre + ("mlp", "fsdp_embed")}
+            if cfg.act in ("swiglu", "geglu"):
+                ax["w_gate"] = pre + ("fsdp_embed", "mlp")
+            return ax
+
+        def attn_ax(stacked: bool):
+            pre = L if stacked else ()
+            ax = {
+                "ln_attn": norm_ax(stacked),
+                "wq": pre + ("fsdp_embed", "heads"),
+                "wk": pre + ("fsdp_embed", "kv_heads"),
+                "wv": pre + ("fsdp_embed", "kv_heads"),
+                "wo": pre + ("heads", "fsdp_embed"),
+                "ln_mlp": norm_ax(stacked),
+            }
+            if cfg.qkv_bias:
+                ax["bq"] = pre + ("heads",)
+                ax["bk"] = pre + ("kv_heads",)
+                ax["bv"] = pre + ("kv_heads",)
+            if cfg.num_experts:
+                ax["moe"] = {
+                    "router": pre + ("fsdp_embed", None),
+                    "w_up": pre + ("expert", "fsdp_embed", None),
+                    "w_down": pre + ("expert", None, "fsdp_embed"),
+                }
+                if cfg.act in ("swiglu", "geglu"):
+                    ax["moe"]["w_gate"] = pre + ("expert", "fsdp_embed", None)
+            else:
+                ax["mlp"] = mlp_ax(stacked)
+            return ax
+
+        if cfg.family == "mamba2":
+            lx = {
+                "norm": norm_ax(True),
+                "in_proj": L + ("fsdp_embed", "inner"),
+                "conv_w": L + (None, "inner"),
+                "conv_b": L + ("inner",),
+                "a_log": L + (None,),
+                "d_skip": L + (None,),
+                "dt_bias": L + (None,),
+                "gate_norm": {"scale": L + (None,)},
+                "out_proj": L + ("inner", "fsdp_embed"),
+            }
+        elif cfg.family == "griffin":
+            lx = []
+            for i in range(cfg.num_layers):
+                if _griffin_is_attn(cfg, i):
+                    lx.append({"kind_attn": attn_ax(False)})
+                else:
+                    lx.append({"kind_rec": {
+                        "rglru": {
+                            "norm": norm_ax(False),
+                            "w_rec": ("fsdp_embed", "rnn"),
+                            "w_gate": ("fsdp_embed", "rnn"),
+                            "conv_w": (None, "rnn"),
+                            "conv_b": ("rnn",),
+                            "gate_a_w": ("rnn",), "gate_a_b": ("rnn",),
+                            "gate_x_w": ("rnn",), "gate_x_b": ("rnn",),
+                            "lam": ("rnn",),
+                            "w_out": ("rnn", "fsdp_embed"),
+                        },
+                        "ln_mlp": norm_ax(False),
+                        "mlp": mlp_ax(False),
+                    }})
+        else:
+            lx = attn_ax(True)
+
+        axes = {
+            "embed": ("vocab", "fsdp_embed"),
+            "layers": lx,
+            "ln_f": norm_ax(False),
+        }
+        if not cfg.tie_embeddings:
+            axes["head"] = ("fsdp_embed", "vocab")
+        return axes
+
+    def cache_logical_axes(self, cache_specs: dict) -> dict:
+        """Logical axes for the decode cache (KV sequence sharded over TP)."""
+        cfg = self.cfg
+        axes: dict[str, Any] = {"len": ("batch",)}
+        if "k" in cache_specs:
+            axes["k"] = ("layers", "batch", "kv_seq", None, None)
+            axes["v"] = ("layers", "batch", "kv_seq", None, None)
+        if "ssm" in cache_specs:
+            axes["ssm"] = ("layers", "batch", "ssm_heads", None, None)
+            axes["conv"] = ("layers", "batch", None, "act_inner")
+        if "rnn" in cache_specs:
+            axes["rnn"] = ("layers", "batch", "act_rnn")
+            axes["conv"] = ("layers", "batch", None, "act_rnn")
+        return axes
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,326 @@
+"""Decoder / encoder transformer trunk for the dense, MoE, VLM and audio
+families.
+
+Production-shape decisions:
+  * **scan over layers** with stacked parameters — keeps HLO size O(1) in
+    depth (essential for the 40/48-layer archs at 512 devices) and lets
+    GSPMD pipeline per-layer collectives;
+  * optional **remat** (jax.checkpoint) around the block body;
+  * logical-axis sharding constraints on every major activation;
+  * one code path for train/prefill (full-sequence) and one for decode
+    (single token + KV cache), sharing block parameters.
+
+Cache layout: {"k": (L, B, S, Hkv, D), "v": same, "len": (B,) int32}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import attention as attn_lib
+from repro.models import layers, moe
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameters
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln_attn": layers.init_norm(d, cfg.norm, dtype),
+        "wq": layers.dense_init(ks[0], d, hq * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": layers.dense_init(ks[3], hq * hd, d, dtype),
+        "ln_mlp": layers.init_norm(d, cfg.norm, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.num_experts:
+        p["moe"] = moe.init_moe(ks[4], d, cfg.d_ff, cfg.num_experts, cfg.act,
+                                dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[4], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_lm(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kemb, klyr, khead = jax.random.split(key, 3)
+    if cfg.scan_layers:
+        lkeys = jax.random.split(klyr, cfg.num_layers)
+        block = jax.vmap(lambda k: init_block(k, cfg, dtype))(lkeys)
+    else:
+        block = [init_block(k, cfg, dtype)
+                 for k in jax.random.split(klyr, cfg.num_layers)]
+    params = {
+        "embed": layers.embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": block,
+        "ln_f": layers.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(khead, cfg.d_model, cfg.vocab_size,
+                                           dtype, scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _qkv(p, h, cfg):
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    # biases by presence, not config: quantization merging (shift -> b + dW)
+    # introduces biases on architectures that have none
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b, t = h.shape[0], h.shape[1]
+    hd = cfg.resolved_head_dim
+    q = q.reshape(b, t, cfg.num_heads, hd)
+    k = k.reshape(b, t, cfg.num_kv_heads, hd)
+    v = v.reshape(b, t, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def apply_block_full(p, x, cfg, positions, prefix_len: int,
+                     window: int, collect_kv: bool):
+    """Full-sequence block (train / prefill)."""
+    h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = sharding.shard(q, "batch", "seq", "act_heads", None)
+    k = sharding.shard(k, "batch", "seq", "act_kv_heads", None)
+    v = sharding.shard(v, "batch", "seq", "act_kv_heads", None)
+    out = attn_lib.attention(
+        q, k, v, causal=cfg.causal, window=window, prefix_len=prefix_len,
+        chunked_threshold=cfg.attn_chunk_threshold,
+        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+        pin=cfg.attn_sharding)
+    x = x + out.reshape(*x.shape[:2], -1) @ p["wo"]
+    x = sharding.shard(x, "batch", "seq", "embed")
+
+    h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        y, aux = moe.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        h2 = sharding.shard(h2, "batch", "seq", "embed")
+        y = layers.apply_mlp(p["mlp"], h2, cfg.act)
+    x = x + y
+    x = sharding.shard(x, "batch", "seq", "embed")
+    kv = (k, v) if collect_kv else None
+    return x, kv, aux
+
+
+def apply_block_decode(p, x, cfg, k_cache, v_cache, cur_len, window: int):
+    """One-token block. x (B, 1, d); caches (B, S, Hkv, D)."""
+    h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        # RoPE position = absolute position, also for ring-buffer windows.
+        pos = cur_len[:, None]
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    s = k_cache.shape[1]
+    write_idx = jnp.where(window > 0, cur_len % s, jnp.minimum(cur_len, s - 1))
+    bidx = jnp.arange(x.shape[0])
+    k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
+    # For ring buffers, validity is handled by decode_attention's window mask
+    # in *absolute* positions; reconstruct absolute slot positions.
+    if window > 0:
+        base = (cur_len // s) * s
+        pos_abs = jnp.arange(s)[None, :] + base[:, None]
+        pos_abs = jnp.where(jnp.arange(s)[None, :] <= (cur_len % s)[:, None],
+                            pos_abs, pos_abs - s)
+        valid = (pos_abs >= 0) & (pos_abs <= cur_len[:, None]) & \
+                (pos_abs > (cur_len[:, None] - window))
+        out = _masked_decode_attention(q, k_cache, v_cache, valid)
+    else:
+        out = attn_lib.decode_attention(q, k_cache, v_cache, cur_len + 1)
+    x = x + out.reshape(*x.shape[:2], -1) @ p["wo"]
+
+    h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+    if cfg.num_experts:
+        y, _ = moe.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        y = layers.apply_mlp(p["mlp"], h2, cfg.act)
+    return x + y, k_cache, v_cache
+
+
+def _masked_decode_attention(q, k_cache, v_cache, valid):
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache.astype(qh.dtype),
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    scores = jnp.where(valid[:, None, None, :], scores, attn_lib.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full-model forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, tokens, prefix_embeds):
+    """Token embedding + optional VLM prefix / audio stub embeddings."""
+    if cfg.family == "audio":
+        # frontend stub: inputs ARE embeddings (B, T, d_model)
+        x = prefix_embeds
+        t = x.shape[1]
+        pos = jnp.arange(t)
+        x = x + _sinusoidal(t, cfg.d_model).astype(x.dtype)[None]
+        return x, pos[None, :], 0
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.rope_theta == 0:
+        # no-RoPE decoder (OPT family): sinusoidal absolute positions
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    if cfg.family == "vlm" and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    else:
+        prefix_len = 0
+    t = x.shape[1]
+    pos = jnp.arange(t)[None, :]
+    return x, pos, prefix_len
+
+
+def _sinusoidal(t: int, d: int) -> jax.Array:
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def forward(params, cfg, tokens=None, prefix_embeds=None,
+            collect_kv: bool = False, window: Optional[int] = None,
+            last_only: bool = False):
+    """Full-sequence forward. Returns (logits, kv_stack | None, aux_loss).
+
+    kv_stack (if requested): ({"k": (L,B,T,Hkv,D), "v": ...}) for prefill.
+    """
+    window = cfg.window if window is None else window
+    x, positions, prefix_len = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    x = sharding.shard(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h, aux = carry
+        h, kv, aux_l = apply_block_full(lp, h, cfg, positions, prefix_len,
+                                        window, collect_kv)
+        ys = kv if collect_kv else None
+        return (h, aux + aux_l), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, aux), kvs = jax.lax.scan(body, (x, aux0), params["layers"])
+    else:
+        kv_list = []
+        aux = aux0
+        for lp in params["layers"]:
+            (x, aux), kv = body((x, aux), lp)
+            kv_list.append(kv)
+        kvs = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kv_list)
+               if collect_kv else None)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head", None)
+    logits = x @ (head if head is not None else params["embed"].T)
+    logits = sharding.shard(logits, "batch", "seq", "act_vocab")
+    kv_stack = None
+    if collect_kv:
+        kv_stack = {"k": kvs[0], "v": kvs[1]}
+    return logits, kv_stack, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    hd = cfg.resolved_head_dim
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    s = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, s, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, s, cfg.num_kv_heads, hd), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, token, cache):
+    """One decode step. token (B, 1) int32. Returns (logits, new_cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    cur_len = cache["len"]
+    if cfg.rope_theta == 0 and cfg.family != "audio":
+        d = cfg.d_model
+        i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+        ang = cur_len[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[:, None, :].astype(x.dtype)
+    x = sharding.shard(x, "batch", None, "embed")
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, kc, vc = apply_block_decode(lp, h, cfg, kc, vc, cur_len, cfg.window)
+        return h, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        k_list, v_list = [], []
+        for li, lp in enumerate(params["layers"]):
+            x, (kc, vc) = body(x, (lp, cache["k"][li], cache["v"][li]))
+            k_list.append(kc)
+            v_list.append(vc)
+        k_new, v_new = jnp.stack(k_list), jnp.stack(v_list)
+
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head", None)
+    logits = x @ (head if head is not None else params["embed"].T)
+    new_cache = {"k": k_new, "v": v_new, "len": cur_len + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg, batch) -> jax.Array:
+    """Next-token CE for LM families; frame CE for audio."""
+    if cfg.family == "audio":
+        logits, _, aux = forward(params, cfg, prefix_embeds=batch["embeds"])
+        return layers.cross_entropy(logits, batch["labels"],
+                                    batch.get("mask")) + 0.01 * aux
+    prefix = batch.get("prefix_embeds")
+    logits, _, aux = forward(params, cfg, tokens=batch["tokens"],
+                             prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    return layers.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                                batch.get("mask")) + 0.01 * aux

@@ -1,0 +1,5 @@
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["AdamConfig", "adam_init", "adam_update", "cosine_schedule",
+           "linear_warmup_cosine"]

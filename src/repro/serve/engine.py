@@ -1,0 +1,139 @@
+"""Batched serving engine: continuous-batching slots over a fixed-shape
+decode step.
+
+The engine owns a slot-table of ``max_batch`` sequences sharing one cache
+pytree (the jitted decode step is shape-stable — production TPU serving
+requirement). Requests queue; free slots are refilled by prefilling the
+prompt into the slot's cache region. Termination on EOS or ``max_new``.
+
+Quantized serving: pass a model whose params came from the AffineQuant
+pipeline (fake-quant effective weights — identical graph), or packed int4
+weights via ``repro.core.qlinear`` for the memory-bound decode win
+quantified in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.utils import logger
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    max_new: int = 64
+    eos_token: int = -1          # -1: never terminates early
+    temperature: float = 0.0     # 0 = greedy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+        self._queue: list[Request] = []
+        self._slots: list[Optional[Request]] = [None] * cfg.max_batch
+        self._cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self._last_tok = jnp.zeros((cfg.max_batch, 1), jnp.int32)
+        self._new_count = np.zeros(cfg.max_batch, np.int64)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray) -> Request:
+        req = Request(rid=len(self._queue), prompt=np.asarray(prompt,
+                                                              np.int32))
+        self._queue.append(req)
+        return req
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _admit(self) -> None:
+        """Prefill pending requests into free slots (one at a time — the
+        prefill is a separate jit with per-length compilation; production
+        would bucket prompt lengths)."""
+        for slot in self._free_slots():
+            pending = [r for r in self._queue if not r.done
+                       and r not in self._slots]
+            if not pending:
+                return
+            req = pending[0]
+            logits, cache1 = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
+                max_len=self.cfg.max_len)
+            # splice the single-sequence cache into the batch cache
+            def put(dst, src):
+                if dst.ndim == src.ndim and dst.shape[1] == len(self._slots):
+                    return dst.at[:, slot].set(src[:, 0])
+                return dst
+            for k in self._cache:
+                if k == "len":
+                    self._cache["len"] = self._cache["len"].at[slot].set(
+                        int(cache1["len"][0]))
+                else:
+                    # pad sequence dim to the batch cache's length
+                    src = cache1[k]
+                    dst = self._cache[k]
+                    if src.shape[2:] != dst.shape[2:] and src.ndim >= 3 \
+                            and src.shape[2] != dst.shape[2]:
+                        pad = dst.shape[2] - src.shape[2]
+                        if pad > 0:
+                            width = [(0, 0)] * src.ndim
+                            width[2] = (0, pad)
+                            src = jnp.pad(src, width)
+                    self._cache[k] = dst.at[:, slot].set(src[:, 0])
+            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            self._last_tok = self._last_tok.at[slot, 0].set(tok)
+            req.out_tokens.append(int(tok))
+            self._new_count[slot] = 1
+            self._slots[slot] = req
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit + one batched decode step.
+        Returns number of active sequences."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+        logits, self._cache = self._decode(self.params, self._last_tok,
+                                           self._cache)
+        if self.cfg.temperature > 0:
+            raise NotImplementedError("sampling: greedy only in this engine")
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        self._last_tok = nxt[:, None]
+        nxt_host = np.asarray(nxt)
+        for i in active:
+            req = self._slots[i]
+            tok = int(nxt_host[i])
+            req.out_tokens.append(tok)
+            self._new_count[i] += 1
+            cache_full = bool(self._cache["len"][i] >= self.cfg.max_len - 1)
+            if (tok == self.cfg.eos_token
+                    or self._new_count[i] >= self.cfg.max_new or cache_full):
+                req.done = True
+                self._slots[i] = None
+        return len(active)
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        while any(not r.done for r in self._queue):
+            n = self.step()
+            if n == 0 and all(r.done for r in self._queue):
+                break
+        return self._queue

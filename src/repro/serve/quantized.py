@@ -1,0 +1,263 @@
+"""Packed low-bit serving for dense/MoE LMs (the paper's deployment target).
+
+``quantize_lm_packed`` converts a calibrated (or raw) parameter tree into
+packed sub-byte storage:
+
+    weight (…, K, N) bf16  ->  {"packed": (…, K//8*bits, N) uint8,
+                                "scale": (…, K//g, N) f32,
+                                "zp":    (…, K//g, N) f32}
+
+``QuantizedModel`` exposes the same ``decode_step`` / ``prefill`` /
+``init_cache`` interface as ``repro.models.Model`` so the serving engine and
+the dry-run lower it unchanged. Matmuls route through
+``repro.kernels.ops.dequant_matmul`` (Pallas on TPU, reference math
+elsewhere — bit-identical results).
+
+Why this matters at scale: bf16 weights of a 132B MoE do not fit TP-only on
+a 256-chip v5e pod (16.5 GiB/device), forcing FSDP weight gathers on *every
+decode step*. At w4 the same weights are 4.1 GiB/device — resident, no
+per-step collective. That swing is quantified in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.core.quantizer import QuantConfig
+from repro.kernels import ops
+from repro.models import attention as attn_lib
+from repro.models import layers
+from repro.models.model import Model, build_model
+
+PACKED_WEIGHTS = ("wq", "wk", "wv", "wo")
+PACKED_MLP = ("w_gate", "w_up", "w_down")
+
+
+def _pack_one(w: jax.Array, bits: int, group: int) -> dict:
+    """Pack a (..., K, N) weight along K (vmapped over leading dims)."""
+    if w.ndim == 2:
+        packed, scale, zp = ops.quantize_pack(w, bits=bits, group_size=group,
+                                              mode="ref")
+        return {"packed": packed, "scale": scale, "zp": zp}
+    inner = lambda wi: _pack_one(wi, bits, group)
+    outs = jax.vmap(lambda wi: tuple(
+        ops.quantize_pack(wi, bits=bits, group_size=group, mode="ref")))(
+            w.reshape((-1,) + w.shape[-2:]))
+    lead = w.shape[:-2]
+    return {"packed": outs[0].reshape(lead + outs[0].shape[1:]),
+            "scale": outs[1].reshape(lead + outs[1].shape[1:]),
+            "zp": outs[2].reshape(lead + outs[2].shape[1:])}
+
+
+def quantize_lm_packed(params: dict, cfg: ModelConfig, qcfg: QuantConfig
+                       ) -> dict:
+    """Pack every block linear; embeddings/norms stay bf16 (standard)."""
+    bits, group = qcfg.w_bits, qcfg.group_size
+    out = {"embed": params["embed"], "ln_f": params["ln_f"]}
+    if "head" in params:
+        out["head"] = params["head"]
+    lp = params["layers"]
+    new_lp = {}
+    for k in ("ln_attn", "ln_mlp"):
+        new_lp[k] = lp[k]
+    for k in ("bq", "bk", "bv"):
+        if k in lp:
+            new_lp[k] = lp[k]
+    for k in PACKED_WEIGHTS:
+        new_lp[k] = _pack_one(lp[k], bits, group)
+    if cfg.num_experts:
+        new_lp["moe"] = {"router": lp["moe"]["router"]}
+        for k in PACKED_MLP:
+            if k in lp["moe"]:
+                new_lp["moe"][k] = _pack_one(lp["moe"][k], bits, group)
+    else:
+        new_lp["mlp"] = {}
+        for k in PACKED_MLP:
+            if k in lp["mlp"]:
+                new_lp["mlp"][k] = _pack_one(lp["mlp"][k], bits, group)
+        for k in ("b_gate", "b_up"):
+            if k in lp["mlp"]:
+                new_lp["mlp"][k] = lp["mlp"][k]
+    out["layers"] = new_lp
+    return out
+
+
+def _qmm(x: jax.Array, qw: dict, bits: int, group: int,
+         mode: str) -> jax.Array:
+    return ops.dequant_matmul(x, qw["packed"], qw["scale"], qw["zp"],
+                              bits=bits, group_size=group, mode=mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedModel:
+    """Model-compatible wrapper serving packed weights (dense/MoE decode)."""
+    cfg: ModelConfig
+    qcfg: QuantConfig
+    kernel_mode: str = "auto"
+
+    @property
+    def _bits(self):
+        return self.qcfg.w_bits
+
+    @property
+    def _group(self):
+        return self.qcfg.group_size
+
+    # cache API identical to Model
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return build_model(self.cfg).init_cache(batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        return build_model(self.cfg).cache_specs(batch, max_len)
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0)
+        cur_len = cache["len"]
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, kc, vc = self._block_decode(lp, h, kc, vc, cur_len)
+            return h, (kc, vc)
+
+        if cfg.scan_layers:
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+        else:
+            raise NotImplementedError("packed serving assumes scan layout")
+        x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+        head = params.get("head")
+        logits = x @ (head if head is not None else params["embed"].T)
+        return logits, {"k": k_new, "v": v_new, "len": cur_len + 1}
+
+    def _block_decode(self, p, x, k_cache, v_cache, cur_len):
+        cfg = self.cfg
+        mm = lambda h, qw: _qmm(h, qw, self._bits, self._group,
+                                self.kernel_mode)
+        h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+        q = mm(h, p["wq"])
+        k = mm(h, p["wk"])
+        v = mm(h, p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        b = x.shape[0]
+        hd = cfg.resolved_head_dim
+        q = q.reshape(b, 1, cfg.num_heads, hd)
+        k = k.reshape(b, 1, cfg.num_kv_heads, hd)
+        v = v.reshape(b, 1, cfg.num_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            pos = cur_len[:, None]
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        s = k_cache.shape[1]
+        write_idx = jnp.minimum(cur_len, s - 1)
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
+        out = attn_lib.decode_attention(q, k_cache, v_cache, cur_len + 1)
+        x = x + mm(out.reshape(b, 1, -1), p["wo"])
+
+        h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+        if cfg.num_experts:
+            x = x + self._moe_decode(p["moe"], h2)
+            return x, k_cache, v_cache
+        if cfg.act in ("swiglu", "geglu"):
+            gate_fn = (jax.nn.silu if cfg.act == "swiglu"
+                       else lambda z: jax.nn.gelu(z, approximate=True))
+            inner = gate_fn(mm(h2, p["mlp"]["w_gate"])) * mm(h2, p["mlp"]["w_up"])
+        elif cfg.act == "gelu":
+            inner = jax.nn.gelu(mm(h2, p["mlp"]["w_up"]), approximate=True)
+        else:
+            inner = jax.nn.relu(mm(h2, p["mlp"]["w_up"]))
+        return x + mm(inner, p["mlp"]["w_down"]), k_cache, v_cache
+
+    def _moe_decode(self, mp, h2):
+        """Dense-dispatch MoE decode on packed experts (few tokens: compute
+        every selected expert via gathered per-token expert weights would
+        need ragged gathers; at decode batch sizes the capacity path of
+        repro.models.moe dominates — reuse it with dequantized experts)."""
+        cfg = self.cfg
+        from repro.models import moe as moe_lib
+        bits, group = self._bits, self._group
+
+        def dq(qw):
+            from repro.core.packing import unpack
+            lead = qw["packed"].shape[:-2]
+            kp = qw["packed"].shape[-2] * 8 // bits
+
+            def one(pk, sc, z):
+                from repro.kernels.ref import dequant_matmul_ref  # noqa
+                codes = unpack(pk, bits, kp).astype(jnp.float32)
+                g = group if group else kp
+                cg = codes.reshape(kp // g, g, -1)
+                w = (cg - z[:, None, :]) * sc[:, None, :]
+                return w.reshape(kp, -1).astype(h2.dtype)
+            flat = jax.vmap(one)(
+                qw["packed"].reshape((-1,) + qw["packed"].shape[-2:]),
+                qw["scale"].reshape((-1,) + qw["scale"].shape[-2:]),
+                qw["zp"].reshape((-1,) + qw["zp"].shape[-2:]))
+            return flat.reshape(lead + flat.shape[1:])
+
+        params = {"router": mp["router"], "w_up": dq(mp["w_up"]),
+                  "w_down": dq(mp["w_down"])}
+        if "w_gate" in mp:
+            params["w_gate"] = dq(mp["w_gate"])
+        y, _ = moe_lib.apply_moe(params, h2, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+        return y
+
+    # ---- sharding for the dry-run ----
+    def param_logical_axes(self) -> dict:
+        cfg = self.cfg
+        L = ("layers",)
+
+        def norm_ax():
+            ax = {"scale": L + (None,)}
+            if cfg.norm == "layernorm":
+                ax["bias"] = L + (None,)
+            return ax
+
+        def q_ax(out_name):
+            # packed/scale/zp share the weight's (K, N) sharding; at serve
+            # time the K axis stays *unsharded over data* (weights resident,
+            # no FSDP gather per step) — the quantized memory footprint is
+            # what makes that possible.
+            return {"packed": L + (None, out_name),
+                    "scale": L + (None, out_name),
+                    "zp": L + (None, out_name)}
+
+        lx = {"ln_attn": norm_ax(), "ln_mlp": norm_ax(),
+              "wq": q_ax("heads"), "wk": q_ax("kv_heads"),
+              "wv": q_ax("kv_heads"), "wo": q_ax("fsdp_embed")}
+        if cfg.qkv_bias:
+            lx.update(bq=L + ("heads",), bk=L + ("kv_heads",),
+                      bv=L + ("kv_heads",))
+        if cfg.num_experts:
+            def qe_ax():
+                return {"packed": L + ("expert", None, None),
+                        "scale": L + ("expert", None, None),
+                        "zp": L + ("expert", None, None)}
+            lx["moe"] = {"router": L + (None, None), "w_up": qe_ax(),
+                         "w_down": qe_ax()}
+            if cfg.act in ("swiglu", "geglu"):
+                lx["moe"]["w_gate"] = qe_ax()
+        else:
+            lx["mlp"] = {"w_gate": q_ax("mlp"), "w_up": q_ax("mlp"),
+                         "w_down": q_ax("fsdp_embed")}
+            if cfg.act not in ("swiglu", "geglu"):
+                lx["mlp"].pop("w_gate")
+        axes = {"embed": ("vocab", None), "layers": lx, "ln_f": {"scale": (None,)}}
+        if self.cfg.norm == "layernorm":
+            axes["ln_f"]["bias"] = (None,)
+        if not cfg.tie_embeddings:
+            axes["head"] = (None, "vocab")
+        return axes
+
+    def cache_logical_axes(self, cache_specs: dict) -> dict:
+        return build_model(self.cfg).cache_logical_axes(cache_specs)

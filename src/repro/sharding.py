@@ -1,0 +1,177 @@
+"""Logical-axis sharding: MaxText-style rules, divisibility-safe resolution.
+
+Models annotate tensors with *logical* axis names ("batch", "embed", "mlp",
+"heads", "expert", ...). A per-run rule table maps logical names to mesh
+axes. Resolution is divisibility-safe: a mesh axis that does not evenly
+divide the tensor dimension is dropped (with a debug log) instead of letting
+GSPMD silently pad — padding would quietly inflate the HLO FLOP count and
+corrupt the roofline's useful-compute ratio.
+
+Usage:
+    rules = {"batch": ("pod", "data"), "embed": None, "mlp": "model", ...}
+    with use_mesh(mesh, rules):
+        y = jax.jit(step, in_shardings=..., out_shardings=...)(x)
+
+Inside model code:
+    x = shard(x, "batch", "seq", "embed")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import logger
+
+Axis = Union[None, str, tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "mesh"):
+        _state.mesh = None
+        _state.rules = {}
+    return _state
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict[str, Axis]] = None):
+    """Bind a mesh + logical rules for the enclosed region (thread-local)."""
+    ctx = _ctx()
+    prev = (ctx.mesh, ctx.rules)
+    ctx.mesh, ctx.rules = mesh, dict(rules or {})
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        ctx.mesh, ctx.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def current_rules() -> dict[str, Axis]:
+    return _ctx().rules
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[dict[str, Axis]] = None) -> P:
+    """Map logical names -> PartitionSpec, dropping non-dividing mesh axes.
+
+    For tuple-valued rules (e.g. batch -> ("pod", "data")) axes are dropped
+    from the tail until the remaining product divides the dimension.
+    """
+    mesh = mesh or current_mesh()
+    rules = rules if rules is not None else current_rules()
+    out: list[Axis] = []
+    used: set[str] = set()
+    for i, name in enumerate(names):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        axes = tuple(a for a in axes if a not in used)
+        if shape is not None and mesh is not None:
+            dim = shape[i]
+            while axes and dim % _axis_size(mesh, axes) != 0:
+                logger.debug("sharding: drop axis %s from dim %d (%s=%d)",
+                             axes[-1], i, name, dim)
+                axes = axes[:-1]
+        if not axes:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint if a mesh is bound; no-op otherwise."""
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or not rules:
+        return x
+    spec = resolve_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *names: Optional[str],
+                   shape: Optional[Sequence[int]] = None,
+                   rules: Optional[dict[str, Axis]] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(names, shape, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
+               seq_sharding: bool = False) -> dict[str, Axis]:
+    """Default logical->mesh mapping for the production meshes.
+
+    data-parallel over ("pod","data"); tensor/expert-parallel over "model";
+    FSDP shards the *embed/stack* axis of params over "data".
+    """
+    dp: Axis = ("pod", "data") if multi_pod else "data"
+    rules: dict[str, Axis] = {
+        # activations
+        "batch": dp,
+        "seq": dp if seq_sharding else None,      # SP for long-context decode
+        "embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_expert": "model",
+        "act_seq_tp": "model",                     # sequence-TP attention
+        "expert_cap": dp,                          # MoE dispatch capacity dim
+        "act_vocab": "model",
+        "act_rnn": "model",
+        "act_inner": "model",
+        # params: TP axis
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "rnn": "model",
+        "inner": "model",                          # mamba2 d_inner
+        # params: FSDP axis (input-feature / stacked-layer dims)
+        "fsdp_embed": "data" if fsdp else None,
+        "layers": None,
+        # serving
+        "kv_seq": "model",                         # distributed decode attention
+        "ssm_heads": "model",
+        # never sharded
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "group": None,
+        "mlp_local": None,
+        "qgroups": None,
+    }
+    return rules

@@ -1,0 +1,123 @@
+"""Atomic, resharding-capable checkpoints (numpy-backed, no orbax).
+
+Layout:  <dir>/step_<N>/
+            manifest.json     {step, leaf paths, shapes, dtypes, mesh meta}
+            arrays.npz        one entry per flattened leaf path
+
+Guarantees needed at scale and provided here:
+  * **atomicity** — written to ``step_<N>.tmp`` then ``os.rename``d; a crash
+    mid-write never corrupts the latest checkpoint;
+  * **keep-k retention** — old steps garbage-collected after a successful
+    write (never before);
+  * **elastic reshard-on-load** — arrays are stored unsharded (gathered);
+    ``restore`` device_puts each leaf with the *current* mesh/sharding, so a
+    checkpoint taken on (16,16) restores onto (8,8) or (2,16,16) unchanged;
+  * **fault-tolerance hook** — ``latest_step`` + deterministic data pipeline
+    (step-addressable batches) give exact-resume semantics.
+
+On a real multi-host deployment the npz write happens on host 0 after a
+jax.device_get (all-gather); per-host sharded writes would be the next step
+and the manifest format already carries the leaf metadata needed for it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import logger
+
+PyTree = Any
+_SEP = "||"
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: PyTree,
+         keep: int = 3, extra: Optional[dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    arrays = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    logger.info("checkpoint saved: %s", final)
+
+    # retention: delete oldest beyond keep (only after a successful write)
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    for old in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{old:08d}", ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if p.is_dir() and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, tree_like: PyTree, step: Optional[int] = None,
+            sharding_fn: Optional[Callable] = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``tree_like``.
+
+    ``sharding_fn(path_key, array) -> jax.sharding.Sharding | None`` places
+    each leaf on the *current* mesh (elastic reshard-on-load). Without it,
+    leaves are host numpy arrays (jit will place them).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    src = ckpt_dir / f"step_{step:08d}"
+    data = np.load(src / "arrays.npz")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, ref in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if sharding_fn is not None:
+            sh = sharding_fn(key, arr)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), step

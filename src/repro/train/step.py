@@ -1,0 +1,95 @@
+"""The jitted training step: microbatched grad accumulation + Adam update.
+
+Grad accumulation runs as a ``lax.scan`` over microbatches so activation
+memory is bounded by one microbatch while the HLO stays O(1) in the number
+of microbatches. Gradients accumulate in fp32 (or are int8-compressed across
+the DP axes when ``grad_compression`` is enabled — see
+``repro.optim.compression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import AdamConfig, adam_init, adam_update
+from repro.optim.schedule import linear_warmup_cosine
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: dict
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten,
+    lambda aux, children: TrainState(*children))
+
+
+def init_train_state(model: Model, key, adam_cfg: AdamConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adam_init(params, adam_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B//n, ...) for scanning."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model: Model, adam_cfg: AdamConfig,
+                    total_steps: int = 10000, warmup: int = 100,
+                    compress_grads: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    cfg = model.cfg
+    n_micro = max(cfg.microbatches, 1)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            micro = _split_microbatches(batch, n_micro)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+
+        lr_scale = linear_warmup_cosine(state.step, warmup, total_steps)
+        new_params, new_opt = adam_update(params, grads, state.opt, adam_cfg,
+                                          lr_scale)
+        metrics = {"loss": loss, "lr_scale": lr_scale,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree_util.tree_leaves(grads)))}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

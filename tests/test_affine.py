@@ -1,0 +1,85 @@
+"""Affine equivalent-transform invariants (the paper's core object)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import affine as af
+from repro.core import gradual_mask as gm
+
+
+def _sdd_matrix(key, h, off=0.3):
+    a = jnp.eye(h) + off * jax.random.normal(key, (h, h)) / h
+    return a
+
+
+@given(seed=st.integers(0, 2 ** 16),
+       h=st.sampled_from([8, 32]),
+       kind=st.sampled_from(["full", "diagonal"]))
+@settings(max_examples=25, deadline=None)
+def test_equivalence_preserved(seed, h, kind):
+    """Property (Eq. 2 LHS == RHS without Q): x A^-1 (A w) == x w."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    spec = af.AffineSpec("s", kind, h)
+    if kind == "diagonal":
+        a = jnp.exp(0.5 * jax.random.normal(k1, (h,)))
+    else:
+        a = _sdd_matrix(k1, h)
+    w = jax.random.normal(k2, (h, 2 * h))
+    x = jax.random.normal(k3, (4, h))
+    a_inv = af.invert(spec, a)
+    y1 = af.transform_activation(spec, a_inv, x) @ af.transform_weight(
+        spec, a, w)
+    np.testing.assert_allclose(y1, x @ w, rtol=2e-3, atol=2e-4)
+
+
+def test_headwise_equivalence_gqa():
+    """Per-KV-head transform with query-group tying preserves outputs."""
+    hd, n_kv = 8, 3
+    key = jax.random.PRNGKey(0)
+    spec = af.AffineSpec("vo", "headwise", hd, num_heads=n_kv)
+    a = jnp.stack([_sdd_matrix(jax.random.fold_in(key, i), hd)
+                   for i in range(n_kv)])
+    a_inv = af.invert(spec, a)
+    x = jax.random.normal(key, (5, n_kv * hd))
+    w = jax.random.normal(jax.random.fold_in(key, 9), (n_kv * hd, 16))
+    y1 = af.transform_activation(spec, a_inv, x) @ af.transform_weight(
+        spec, a, w)
+    np.testing.assert_allclose(y1, x @ w, rtol=2e-3, atol=2e-4)
+
+
+def test_shift_bias_correction():
+    """Eq. 4 term: (x - d) w + (b + d w) == x w + b."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (6, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (8,))
+    d = jax.random.normal(jax.random.fold_in(key, 3), (16,))
+    b2 = af.shift_bias_correction(d, w, b)
+    np.testing.assert_allclose((x - d) @ w + b2, x @ w + b,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_init_params_diagonal_dominant():
+    spec = af.AffineSpec("s", "full", 16)
+    p = af.init_params(spec, jnp.full((16,), 2.0))
+    assert bool(gm.is_strictly_diagonally_dominant(p["a"]))
+
+
+def test_smoothquant_diag_balances():
+    act = jnp.array([10.0, 1.0, 0.1])
+    wmax = jnp.array([0.1, 1.0, 10.0])
+    s = af.smoothquant_diag(act, wmax, migration=0.5)
+    # big activations -> big weight-side scale (shrinks activation side)
+    assert float(s[0]) > float(s[1]) > float(s[2])
+
+
+def test_invert_accuracy_sdd():
+    """GM-maintained strict diagonal dominance keeps fp32 inversion tight."""
+    key = jax.random.PRNGKey(7)
+    spec = af.AffineSpec("s", "full", 64)
+    a = _sdd_matrix(key, 64, off=0.5)
+    a_inv = af.invert(spec, a)
+    err = jnp.max(jnp.abs(a @ a_inv - jnp.eye(64)))
+    assert float(err) < 1e-4

@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, rank sharding, learnable structure."""
+import numpy as np
+
+from repro.data import MarkovCorpus, make_batch_fn
+
+
+def test_batches_deterministic_per_step():
+    c = MarkovCorpus(vocab=256, seed=3)
+    f = make_batch_fn(c, global_batch=8, seq_len=32)
+    a = f(5)["tokens"]
+    b = f(5)["tokens"]
+    assert (a == b).all()
+    assert not (f(5)["tokens"] == f(6)["tokens"]).all()
+
+
+def test_rank_sharding_disjoint_and_sized():
+    c = MarkovCorpus(vocab=256, seed=3)
+    f0 = make_batch_fn(c, 8, 32, rank=0, num_ranks=4)
+    f1 = make_batch_fn(c, 8, 32, rank=1, num_ranks=4)
+    a, b = f0(0)["tokens"], f1(0)["tokens"]
+    assert a.shape == (2, 32) and b.shape == (2, 32)
+    assert not (a == b).all()
+
+
+def test_markov_structure_learnable():
+    """Transitions are predictable: the true successor set covers almost all
+    next-tokens (branching 8 of vocab 256 => structure exists)."""
+    c = MarkovCorpus(vocab=256, branching=8, seed=0)
+    toks = c.sample(4, 256, seed=1)
+    hits = 0
+    total = 0
+    for row in toks:
+        for t in range(2, len(row)):
+            b = c._bucket(np.array([row[t - 2]]), np.array([row[t - 1]]))[0]
+            hits += row[t] in c.succ[b]
+            total += 1
+    assert hits / total > 0.9
+    assert c.entropy_floor() < np.log(256)
+
+
+def test_token_file_corpus(tmp_path):
+    from repro.data import TokenFileCorpus
+    arr = np.arange(10000, dtype=np.int32)
+    path = tmp_path / "toks.bin"
+    arr.tofile(path)
+    c = TokenFileCorpus(path)
+    s = c.sample(4, 64, seed=0)
+    assert s.shape == (4, 64)
+    # windows are contiguous slices
+    assert (np.diff(s, axis=1) == 1).all()

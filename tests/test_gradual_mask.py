@@ -1,0 +1,69 @@
+"""Gradual Mask (paper Eq. 6) + Levy-Desplanques invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gradual_mask as gm
+
+
+def test_schedule_monotone_band():
+    """The unfrozen band grows with the epoch."""
+    h, t = 32, 10
+    prev_open = -1
+    for e in range(1, t + 1):
+        m = gm.gradual_mask(h, e, t, alpha=0.5)
+        open_count = int(jnp.sum(m > 0))
+        assert open_count >= prev_open
+        prev_open = open_count
+    # final epoch: everything unfrozen
+    assert prev_open == h * h
+
+
+def test_mask_values():
+    m = gm.gradual_mask(16, 4, 8, alpha=0.25)
+    assert float(m[5, 5]) == 1.0
+    assert float(m[5, 6]) == 0.25          # inside band
+    assert float(m[0, 15]) == 0.0          # outside band
+
+
+def test_headwise_blocks():
+    m = gm.gradual_mask_headwise(16, 4, 8, 8, alpha=0.5)
+    # cross-head entries always zero
+    assert float(m[0, 4]) == 0.0
+    assert float(m[3, 4]) == 0.0
+    # in-head band present
+    assert float(m[0, 1]) == 0.5
+
+
+@given(seed=st.integers(0, 2 ** 16),
+       alpha=st.sampled_from([1e-3, 1e-2, 1e-1]))
+@settings(max_examples=20, deadline=None)
+def test_masked_matrix_stays_sdd(seed, alpha):
+    """Theorem 1 (paper A.2): with small alpha, A o GM stays strictly
+    diagonally dominant for bounded off-diagonal values."""
+    h = 24
+    key = jax.random.PRNGKey(seed)
+    a = jnp.eye(h) + jax.random.normal(key, (h, h)) * 0.5
+    a = a.at[jnp.diag_indices(h)].set(jnp.diag(jnp.eye(h)) + 1.0)
+    for e in range(1, 9):
+        mask = gm.gradual_mask(h, e, 8, alpha)
+        masked = gm.apply_mask(a, mask)
+        assert bool(gm.is_strictly_diagonally_dominant(masked)), e
+
+
+def test_gradient_matches_eq9():
+    """Backward of A o GM reproduces Eq. 9: dL/dA = GM o dL/dA*."""
+    h = 8
+    a = jax.random.normal(jax.random.PRNGKey(0), (h, h))
+    mask = gm.gradual_mask(h, 2, 4, alpha=0.3)
+    upstream = jax.random.normal(jax.random.PRNGKey(1), (h, h))
+    g = jax.grad(lambda m_a: jnp.sum(gm.apply_mask(m_a, mask) * upstream))(a)
+    np.testing.assert_allclose(g, mask * upstream, rtol=1e-6)
+
+
+def test_dominance_margin_sign():
+    good = jnp.eye(4) * 3 + 0.1
+    bad = jnp.ones((4, 4))
+    assert float(gm.dominance_margin(good)) > 0
+    assert float(gm.dominance_margin(bad)) <= 0

@@ -1,0 +1,72 @@
+"""HLO static analyzer: trip-count-corrected flops/bytes/collectives."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.hlo_analysis import HloModule, analyze_hlo, shape_info
+
+
+def _compile(fn, *specs, shardings=None):
+    j = jax.jit(fn) if shardings is None else jax.jit(fn,
+                                                      in_shardings=shardings)
+    return j.lower(*specs).compile()
+
+
+def test_shape_info():
+    b, dims = shape_info("f32[4,16]{1,0}")
+    assert b == 4 * 16 * 4 and dims == [4, 16]
+    b, _ = shape_info("(s32[], bf16[8,8])")
+    assert b == 4 + 128
+
+
+def test_scan_trip_count_multiplies_flops():
+    def fn(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    comp = _compile(fn, jax.ShapeDtypeStruct((6, 32, 32), jnp.float32),
+                    jax.ShapeDtypeStruct((4, 32), jnp.float32))
+    res = analyze_hlo(comp.as_text())
+    # 6 iterations x 2*4*32*32
+    assert res["dot_flops"] == pytest.approx(6 * 2 * 4 * 32 * 32, rel=0.01)
+
+
+def test_plain_matmul_flops():
+    comp = _compile(lambda a, b: a @ b,
+                    jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                    jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    res = analyze_hlo(comp.as_text())
+    assert res["dot_flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_memory_bytes_reasonable():
+    comp = _compile(lambda a, b: a @ b,
+                    jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                    jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    res = analyze_hlo(comp.as_text())
+    exact = (64 * 128 + 128 * 32 + 64 * 32) * 4
+    assert exact <= res["memory_bytes"] <= 3 * exact
+
+
+def test_no_collectives_on_single_device():
+    comp = _compile(lambda a: a * 2 + 1,
+                    jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    res = analyze_hlo(comp.as_text())
+    assert res["collectives"]["total_bytes"] == 0
+
+
+def test_nested_scan_multiplies():
+    def fn(x):
+        def outer(h, _):
+            def inner(g, _):
+                return jnp.tanh(g @ g), None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    comp = _compile(fn, jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    res = analyze_hlo(comp.as_text())
+    assert res["dot_flops"] == pytest.approx(15 * 2 * 16 ** 3, rel=0.01)

@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dequant_matmul import dequant_matmul
+from repro.kernels.int8_matmul import int8_matmul, w8a8_matmul
+from repro.kernels.quantize_pack import quantize_pack
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("m,k,n,g", [(64, 128, 64, 32), (128, 256, 128, 64),
+                                     (64, 128, 64, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_allclose(bits, m, k, n, g, dtype):
+    key = jax.random.PRNGKey(bits * 1000 + m)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    packed, scale, zp = ref.quantize_pack_ref(w, bits=bits, group_size=g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k)).astype(dtype)
+    y_ref = ref.dequant_matmul_ref(x, packed, scale, zp, bits=bits,
+                                   group_size=g)
+    y_ker = dequant_matmul(x, packed, scale, zp, bits=bits, group_size=g,
+                           bm=64, bn=64, bk=128, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(y_ker, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("k,n,g", [(128, 64, 32), (256, 128, 128)])
+def test_quantize_pack_kernel_matches_ref(bits, k, n, g):
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
+    p_ref, s_ref, z_ref = ref.quantize_pack_ref(w, bits=bits, group_size=g)
+    p, s, z = quantize_pack(w, bits=bits, group_size=g, bn=n, interpret=True)
+    assert (np.asarray(p) == np.asarray(p_ref)).all()
+    np.testing.assert_allclose(s, s_ref, rtol=1e-6)
+    np.testing.assert_allclose(z, z_ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 512, 128)])
+def test_int8_matmul_exact(m, k, n):
+    key = jax.random.PRNGKey(m + k)
+    xq = jax.random.randint(key, (m, k), -128, 128).astype(jnp.int8)
+    xs = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (m, 1))) + 0.1
+    wq = jax.random.randint(jax.random.fold_in(key, 2), (k, n), -128, 128
+                            ).astype(jnp.int8)
+    ws = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (n,))) + 0.1
+    y_ref = ref.int8_matmul_ref(xq, wq, xs, ws)
+    y_ker = int8_matmul(xq, xs, wq, ws, bm=64, bn=64, bk=128, interpret=True)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-5)
+
+
+def test_w8a8_fused_matches_ref_single_slab():
+    m, k, n = 64, 256, 64
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (m, k))
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -128, 128
+                            ).astype(jnp.int8)
+    ws = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,))) + 0.1
+    y_ref = ref.w8a8_dynamic_ref(x, wq, ws)
+    y_ker = w8a8_matmul(x, wq, ws, bm=64, bn=64, bk=256, interpret=True)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_w8a8_per_slab_error_bounded():
+    """bk < K uses per-slab scales: error vs exact fp must stay below the
+    whole-row scheme's worst case."""
+    m, k, n = 64, 512, 64
+    key = jax.random.PRNGKey(10)
+    x = jax.random.normal(key, (m, k))
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -128, 128
+                            ).astype(jnp.int8)
+    ws = jnp.full((n,), 0.01, jnp.float32)
+    y_fp = x @ wq.astype(jnp.float32) * ws[None, :]
+    y_slab = w8a8_matmul(x, wq, ws, bm=64, bn=64, bk=128, interpret=True)
+    rel = float(jnp.linalg.norm(y_slab - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.02
+
+
+def test_ops_dispatch_ragged_batch():
+    k, n, g = 128, 64, 32
+    key = jax.random.PRNGKey(11)
+    packed, scale, zp = ref.quantize_pack_ref(
+        jax.random.normal(key, (k, n)), bits=4, group_size=g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 37, k))
+    y_ref = ops.dequant_matmul(x, packed, scale, zp, bits=4, group_size=g,
+                               mode="ref")
+    y_int = ops.dequant_matmul(x, packed, scale, zp, bits=4, group_size=g,
+                               mode="interpret", bn=64, bk=128)
+    np.testing.assert_allclose(y_int, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ops_bits3_falls_back_to_ref():
+    k, n = 128, 64
+    w = jax.random.normal(jax.random.PRNGKey(12), (k, n))
+    packed, scale, zp = ops.quantize_pack(w, bits=3, group_size=0,
+                                          mode="interpret")
+    x = jax.random.normal(jax.random.PRNGKey(13), (8, k))
+    y = ops.dequant_matmul(x, packed, scale, zp, bits=3, group_size=0,
+                           mode="interpret")
+    y_ref = ref.dequant_matmul_ref(x, packed, scale, zp, bits=3, group_size=0)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5)

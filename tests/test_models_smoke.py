@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (assignment deliverable f): reduced configs,
+one forward/train step on CPU, output shapes + finiteness + decode parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model
+
+ARCHS = list_archs(assigned_only=True)
+
+
+def _batch(cfg, key, B=2, T=16):
+    if cfg.family == "audio":
+        return {"embeds": jax.random.normal(key, (B, T, cfg.d_model)),
+                "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+    b = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.num_prefix, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg, jax.random.fold_in(rng, 1))
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gn = sum(float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert gn > 0 and jnp.isfinite(gn), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, T = 2, 16
+    batch = _batch(cfg, jax.random.fold_in(rng, 2), B, T)
+    logits = model.forward(params, batch)
+    t_expect = T + (cfg.num_prefix if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, t_expect, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).family != "audio"])
+def test_decode_matches_forward(arch, rng):
+    """prefill(T) + decode(token T) == forward(T+1) at the last position."""
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.fold_in(rng, 3), (B, T + 1), 0,
+                              cfg.vocab_size)
+    bf = {"tokens": toks}
+    bp = {"tokens": toks[:, :T]}
+    if cfg.family == "vlm":
+        pe = jax.random.normal(rng, (B, cfg.num_prefix, cfg.d_model))
+        bf["prefix_embeds"] = pe
+        bp["prefix_embeds"] = pe
+    full = model.forward(params, bf)
+    _, cache = model.prefill(params, bp, max_len=T + cfg.num_prefix + 8)
+    lg, _ = model.decode_step(params, toks[:, T:T + 1], cache)
+    err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, -1])))
+    assert err < 5e-4, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_axes_structure_matches(arch, rng):
+    """Logical-axis tree must mirror the param tree (dry-run contract)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params_shapes = jax.eval_shape(lambda: model.init(rng))
+    axes = model.param_logical_axes()
+
+    def walk(ax, shp, path=""):
+        if ax is None or isinstance(ax, tuple):
+            assert hasattr(shp, "shape"), path
+            if ax is not None:
+                assert len(ax) == len(shp.shape), (path, ax, shp.shape)
+            return
+        assert isinstance(ax, (dict, list)), path
+        if isinstance(ax, dict):
+            assert set(ax) == set(shp), (path, set(ax) ^ set(shp))
+            for k in ax:
+                walk(ax[k], shp[k], f"{path}/{k}")
+        else:
+            for i, (a, s) in enumerate(zip(ax, shp)):
+                walk(a, s, f"{path}[{i}]")
+
+    walk(axes, params_shapes)
+
+
+def test_long_context_shapes_supported():
+    """Skip bookkeeping: exactly mamba2+recurrentgemma run long_500k, and
+    hubert skips decode (assignment rules)."""
+    runners = [a for a in ARCHS if get_config(a).supports("long_500k")]
+    assert sorted(runners) == ["mamba2-1.3b", "recurrentgemma-2b"]
+    assert not get_config("hubert-xlarge").supports("decode_32k")
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            assert cfg.supports(s) or cfg.skip_reason(s) or s == "decode_32k" \
+                or s == "long_500k", (a, s)
+
+
+@pytest.mark.parametrize("mode", ["batch", "seq"])
+def test_attn_sharding_modes_identical(mode, rng):
+    """Perf-knob invariance: sharding constraints change layout, not math."""
+    import numpy as np
+    cfg0 = get_config("gemma-2b").reduced()
+    toks = jax.random.randint(jax.random.fold_in(rng, 9), (2, 16), 0,
+                              cfg0.vocab_size)
+    m0 = build_model(cfg0)
+    p = m0.init(rng)
+    base = m0.forward(p, {"tokens": toks})
+    cfg = dataclasses.replace(cfg0, attn_sharding=mode)
+    out = build_model(cfg).forward(p, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=1e-5)
+
+
+def test_ssd_mixed_precision_close(rng):
+    """Perf-knob safety: mixed-precision SSD stays within bf16 tolerance."""
+    cfg = get_config("mamba2-1.3b").reduced(dtype="bfloat16")
+    toks = jax.random.randint(jax.random.fold_in(rng, 10), (2, 32), 0,
+                              cfg.vocab_size)
+    p = build_model(cfg).init(rng)
+    l0 = float(build_model(cfg).loss(p, {"tokens": toks}))
+    cfg_bf = dataclasses.replace(cfg, ssd_bf16_intra=True)
+    l1 = float(build_model(cfg_bf).loss(p, {"tokens": toks}))
+    assert abs(l0 - l1) / max(abs(l0), 1e-9) < 0.02

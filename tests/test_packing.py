@@ -1,0 +1,35 @@
+"""Property tests for sub-byte packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack, unpack, packed_rows
+
+
+@given(bits=st.integers(1, 8),
+       rows=st.sampled_from([8, 24, 64]),
+       cols=st.sampled_from([1, 7, 32]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrip(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, (rows, cols)).astype(np.uint8)
+    p = pack(jnp.asarray(codes), bits)
+    assert p.shape == (packed_rows(rows, bits), cols)
+    u = unpack(p, bits, rows)
+    assert (np.asarray(u) == codes).all()
+
+
+def test_pack_density():
+    codes = jnp.zeros((64, 16), jnp.uint8)
+    for bits in range(1, 9):
+        p = pack(codes, bits)
+        assert p.size * 8 == codes.size * bits  # exact bit density
+
+
+def test_pack_jit_compatible():
+    codes = jnp.ones((32, 8), jnp.uint8)
+    p = jax.jit(lambda c: pack(c, 4))(codes)
+    u = jax.jit(lambda p: unpack(p, 4, 32))(p)
+    assert (np.asarray(u) == 1).all()

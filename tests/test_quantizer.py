@@ -1,0 +1,95 @@
+"""Unit + property tests for the pseudo-quantizer (paper Eq. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizer import (QuantConfig, fake_quant_activation,
+                                  fake_quant_weight, init_lwc_params,
+                                  quantize_weight_int, dequantize_weight_int,
+                                  quantize_activation_int8, weight_qparams)
+
+
+def _w(key, m, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (m, n), jnp.float32)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("group", [0, 16])
+def test_fake_quant_matches_int_path(bits, group):
+    w = _w(0, 64, 32)
+    cfg = QuantConfig(w_bits=bits, group_size=group, lwc=False)
+    dq1 = fake_quant_weight(w, cfg)
+    codes, scale, zp = quantize_weight_int(w, cfg)
+    dq2 = dequantize_weight_int(codes, scale, zp, cfg)
+    np.testing.assert_allclose(dq1, dq2, atol=1e-6)
+
+
+@given(bits=st.sampled_from([2, 3, 4, 8]),
+       m=st.sampled_from([16, 64]),
+       n=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_quant_error_bound(bits, m, n, seed):
+    """Property: without clipping, |w - Q(w)| <= scale/2 per group."""
+    w = _w(seed, m, n)
+    cfg = QuantConfig(w_bits=bits, group_size=0, lwc=False)
+    dq = fake_quant_weight(w, cfg)
+    scale, _ = weight_qparams(w, cfg)
+    err = jnp.abs(w - dq)
+    bound = scale[0, 0, :] * 0.5 + 1e-6
+    assert bool(jnp.all(err <= bound[None, :]))
+
+
+def test_16bit_is_identity():
+    w = _w(1, 32, 32)
+    assert fake_quant_weight(w, QuantConfig(w_bits=16)) is w
+
+
+def test_lwc_clipping_shrinks_range():
+    w = _w(2, 64, 16)
+    cfg = QuantConfig(w_bits=4, group_size=0, lwc=True)
+    lwc = init_lwc_params((64, 16), 0, init_value=-2.0)   # sigmoid ~ 0.12
+    scale_clipped, _ = weight_qparams(w, cfg, lwc)
+    scale_full, _ = weight_qparams(w, cfg, None)
+    assert bool(jnp.all(scale_clipped <= scale_full + 1e-9))
+
+
+def test_lwc_gradients_flow():
+    w = _w(3, 32, 16)
+    cfg = QuantConfig(w_bits=3, group_size=0, lwc=True)
+    lwc = init_lwc_params((32, 16), 0)
+
+    def loss(lp):
+        return jnp.sum(jnp.square(fake_quant_weight(w, cfg, lp) - w))
+
+    g = jax.grad(loss)(lwc)
+    assert float(jnp.sum(jnp.abs(g["gamma"]))) > 0
+    assert float(jnp.sum(jnp.abs(g["beta"]))) > 0
+
+
+@given(seed=st.integers(0, 2 ** 16), bits=st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_activation_quant_error_bound(seed, bits):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 32))
+    cfg = QuantConfig(a_bits=bits)
+    dq = fake_quant_activation(x, cfg)
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / (2 ** (bits - 1) - 1)
+    assert bool(jnp.all(jnp.abs(dq - x) <= bound + 1e-6))
+
+
+def test_int8_activation_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 64))
+    q, scale = quantize_activation_int8(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(q * scale, x, atol=float(jnp.max(scale)))
+
+
+def test_ste_gradient_identity():
+    """STE: d/dw mean(Q(w)) == d/dw mean(w) away from clip boundaries."""
+    w = _w(6, 32, 16) * 0.5
+    cfg = QuantConfig(w_bits=8, group_size=0, lwc=False)
+    g = jax.grad(lambda t: jnp.sum(fake_quant_weight(t, cfg)))(w)
+    # interior elements get gradient ~1 (scale factors aside)
+    assert float(jnp.mean(g)) == pytest.approx(1.0, abs=0.15)

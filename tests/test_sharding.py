@@ -1,0 +1,70 @@
+"""Logical-axis resolution: divisibility safety, axis reuse, rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def test_resolve_divisible(mesh):
+    rules = {"batch": "data", "mlp": "model"}
+    spec = sharding.resolve_spec(["batch", None, "mlp"], (4, 7, 16), mesh,
+                                 rules)
+    assert spec == P("data", None, "model")
+
+
+def test_resolve_drops_nondividing_axis(mesh):
+    rules = {"heads": "model"}
+    # 7 heads with model-axis size len(devices)=1 divides trivially; force a
+    # fake 2-axis mesh check via explicit rules on a size-1 mesh is vacuous,
+    # so emulate with a virtual mesh.
+    import numpy as np
+    vmesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    spec = sharding.resolve_spec(["heads"], (7,), vmesh, rules)
+    assert spec in (P("model"), P())   # size-1 axis always divides
+
+
+def test_tuple_rule_tail_dropping():
+    import numpy as np
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, 1, 1), ("pod", "data", "model"))
+    rules = {"batch": ("pod", "data")}
+    spec = sharding.resolve_spec(["batch"], (6,), mesh, rules)
+    assert spec == P(("pod", "data"))
+
+
+def test_axis_not_reused(mesh):
+    rules = {"a": "model", "b": "model"}
+    spec = sharding.resolve_spec(["a", "b"], (8, 8), mesh, rules)
+    # second dim must not reuse the already-consumed axis
+    assert spec in (P("model"), P("model", None))
+
+
+def test_shard_noop_without_mesh():
+    x = jax.numpy.ones((4, 4))
+    y = sharding.shard(x, "batch", None)
+    assert (y == x).all()
+
+
+def test_make_rules_coverage():
+    r = sharding.make_rules(multi_pod=True)
+    assert r["batch"] == ("pod", "data")
+    assert r["mlp"] == "model"
+    assert r["expert"] == "model"
+    r2 = sharding.make_rules(multi_pod=False, fsdp=False)
+    assert r2["fsdp_embed"] is None
+
+
+def test_use_mesh_context(mesh):
+    rules = sharding.make_rules()
+    with sharding.use_mesh(mesh, rules):
+        assert sharding.current_mesh() is mesh
+        assert sharding.current_rules()["mlp"] == "model"
+    assert sharding.current_mesh() is None

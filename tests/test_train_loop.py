@@ -1,0 +1,77 @@
+"""Train-loop fault tolerance: NaN skip, divergence abort, straggler flag,
+checkpoint/resume integration."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainState
+from repro.utils import StepTimer
+
+
+def _state(v=0.0):
+    return TrainState(params={"w": jnp.asarray(v)},
+                      opt={"m": jnp.asarray(0.0)},
+                      step=jnp.asarray(0, jnp.int32))
+
+
+def test_nan_steps_skipped_and_counted(tmp_path):
+    calls = []
+
+    def step(state, batch):
+        i = len(calls)
+        calls.append(i)
+        loss = jnp.asarray(float("nan") if i in (1, 2) else 1.0)
+        new = TrainState({"w": state.params["w"] + 1}, state.opt,
+                         state.step + 1)
+        return new, {"loss": loss, "grad_norm": jnp.asarray(1.0)}
+
+    final = train_loop(_state(), step, lambda s: {}, LoopConfig(
+        total_steps=5, ckpt_every=100, ckpt_dir=str(tmp_path)))
+    # steps 1,2 skipped => only 3 updates applied
+    assert float(final.params["w"]) == 3.0
+
+
+def test_divergence_aborts(tmp_path):
+    def step(state, batch):
+        return state, {"loss": jnp.asarray(float("nan")),
+                       "grad_norm": jnp.asarray(1.0)}
+
+    with pytest.raises(RuntimeError):
+        train_loop(_state(), step, lambda s: {}, LoopConfig(
+            total_steps=20, max_bad_steps=3, ckpt_every=100,
+            ckpt_dir=str(tmp_path)))
+
+
+def test_resume_from_checkpoint(tmp_path):
+    def step(state, batch):
+        new = TrainState({"w": state.params["w"] + 1}, state.opt,
+                         state.step + 1)
+        return new, {"loss": jnp.asarray(0.5), "grad_norm": jnp.asarray(1.0)}
+
+    cfg = LoopConfig(total_steps=4, ckpt_every=2, ckpt_dir=str(tmp_path))
+    train_loop(_state(), step, lambda s: {}, cfg)
+    # second run continues to 8
+    cfg2 = LoopConfig(total_steps=8, ckpt_every=2, ckpt_dir=str(tmp_path))
+    final = train_loop(_state(), step, lambda s: {}, cfg2)
+    assert float(final.params["w"]) == 8.0
+
+
+def test_straggler_detector_fake_clock():
+    times = iter([0.0, 1.0,   # step 1: 1s
+                  2.0, 3.0,
+                  4.0, 5.0,
+                  6.0, 7.0,
+                  8.0, 9.0,
+                  10.0, 11.0,
+                  12.0, 13.0,
+                  14.0, 15.0,
+                  16.0, 30.0])  # step 9: 14s -> straggler
+    t = StepTimer(clock=lambda: next(times))
+    flagged = []
+    for _ in range(9):
+        t.start()
+        dt = t.stop()
+        flagged.append(t.is_straggler(dt, factor=2.0, min_samples=8))
+    assert flagged[-1] is True
+    assert not any(flagged[:-1])
