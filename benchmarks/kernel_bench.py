@@ -46,6 +46,47 @@ def run():
     _, us = common.timed(fn, x)
     rows.append(("kernel/w8a8_matmul", us,
                  f"weight_bytes={K * N};int8_mxu_rate=2x_bf16"))
+    rows += _decode_e2e()
+    return rows
+
+
+def _decode_e2e():
+    """End-to-end decode step: fp model vs packed QTensor serving.
+
+    CPU wall-times compare XLA fp matmuls against the reference dequant
+    math; the analytic weight-bytes ratio is the TPU-relevant quantity for
+    the memory-bound decode path (weights stream from HBM every step).
+    """
+    from repro.configs import get_config
+    from repro.core.quantizer import QuantConfig
+    from repro.models import build_model
+    from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+    from repro.utils import tree_bytes
+
+    cfg = get_config("llama-mini")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = 8
+    cache = model.init_cache(batch, 128)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+
+    rows = []
+    fp_step = jax.jit(model.decode_step)
+    (_, cache1), us_fp = common.timed(fp_step, params, tok, cache)
+    rows.append(("serve/decode_fp32", us_fp,
+                 f"batch={batch};weight_bytes={tree_bytes(params)}"))
+
+    for bits in (4, 8):
+        qcfg = QuantConfig(w_bits=bits, a_bits=16, group_size=64)
+        packed = quantize_lm_packed(params, cfg, qcfg)
+        qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+        q_step = jax.jit(qm.decode_step)
+        _, us_q = common.timed(q_step, packed, tok, cache)
+        wb = tree_bytes(packed)
+        rows.append((f"serve/decode_packed_w{bits}", us_q,
+                     f"batch={batch};weight_bytes={wb};"
+                     f"compression_vs_fp32={tree_bytes(params) / wb:.2f}x;"
+                     f"cpu_ref_overhead={us_q / us_fp:.2f}x"))
     return rows
 
 

@@ -67,17 +67,23 @@ def main():
 
     # --- calibrate (AffineQuant) ---
     qcfg = QuantConfig(w_bits=args.wbits, a_bits=16, group_size=64, lwc=True)
+    ccfg = CalibConfig(epochs=6, alpha=0.1)
     calib = jnp.asarray(corpus.sample(16, 96, seed=7))
     t0 = time.time()
-    qparams, info = quantize_dense_model(params, cfg, qcfg,
-                                         CalibConfig(epochs=6, alpha=0.1),
-                                         calib, log=False)
+    qparams, info = quantize_dense_model(params, cfg, qcfg, ccfg, calib,
+                                         log=False)
     print(f"AffineQuant calibration: {time.time()-t0:.1f}s, "
           f"block MSEs {['%.5f' % l for l in info['final_losses']]}")
 
-    packed = quantize_lm_packed(params, cfg, qcfg)
+    # --- real packed deployment: ONE quantization on the calibrated grid,
+    # reusing the calibration above (finalize only re-merges; same ccfg —
+    # the GM mask epoch enters the effective transform) ---
+    from repro.core.calibration import finalize_model
+    pparams = finalize_model(params, info["block_qps"], cfg, qcfg, ccfg,
+                             deploy="packed")
+    pparams = quantize_lm_packed(pparams, cfg, qcfg)  # adapter: pass-through
     print(f"weights: fp {human_bytes(tree_bytes(params))} -> "
-          f"packed int{args.wbits} {human_bytes(tree_bytes(packed))}")
+          f"packed int{args.wbits} {human_bytes(tree_bytes(pparams))}")
 
     # --- serve both models on the same prompts ---
     prompts = [corpus.sample(1, 24, seed=100 + i)[0]
@@ -85,8 +91,8 @@ def main():
     scfg = ServeConfig(max_batch=4, max_len=24 + args.max_new + 8,
                        max_new=args.max_new)
 
-    def serve(p, tag):
-        eng = Engine(model, p, scfg)
+    def serve(p, tag, serving_model=None):
+        eng = Engine(serving_model or model, p, scfg)
         for pr in prompts:
             eng.submit(pr)
         t0 = time.time()
@@ -97,9 +103,17 @@ def main():
 
     fp_out = serve(params, "fp")
     q_out = serve(qparams, f"affinequant w{args.wbits}")
-    agree = np.mean([np.mean(np.asarray(a) == np.asarray(b))
-                     for a, b in zip(fp_out, q_out)])
-    print(f"greedy-token agreement: {100*agree:.1f}%")
+    from repro.serve.quantized import QuantizedModel
+    p_out = serve(pparams, f"affinequant w{args.wbits} packed",
+                  QuantizedModel(cfg, qcfg))
+
+    def agreement(a_outs, b_outs):
+        return np.mean([np.mean(np.asarray(a) == np.asarray(b))
+                        for a, b in zip(a_outs, b_outs)])
+    print(f"greedy-token agreement fp vs fake-quant: "
+          f"{100*agreement(fp_out, q_out):.1f}%")
+    print(f"greedy-token agreement fp vs packed:     "
+          f"{100*agreement(fp_out, p_out):.1f}%")
 
 
 if __name__ == "__main__":

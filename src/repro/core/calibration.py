@@ -151,9 +151,16 @@ def _masks(cfg, specs: dict, epoch: int, ccfg: CalibConfig) -> dict:
     return out
 
 
-def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
-                      ccfg: CalibConfig, masks: dict) -> dict:
-    """Compute every transformed + pseudo-quantized weight of the block."""
+def transformed_weights(block_params: dict, qp: dict, cfg,
+                        ccfg: CalibConfig, masks: dict) -> dict:
+    """Every *transformed* (NOT yet quantized) weight/bias of the block.
+
+    This is the fp tensor the quantizer grid is computed on: both the
+    calibration forward (via :func:`effective_weights`) and the packed
+    deployment (via :func:`finalize_block` ``deploy="packed"``) quantize
+    exactly these values, which is what makes the two paths share one
+    rounding.
+    """
     specs = _specs_from(qp)
     solve_dt = jnp.dtype(ccfg.solve_dtype)
     out: dict = {}
@@ -163,15 +170,6 @@ def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
         a_eff = af.effective_matrix(spec, qp["affine"][name],
                                     masks.get(name))
         return spec, a_eff
-
-    def quant(w, name):
-        lwc = qp["lwc"].get(name)
-        if w.ndim == 3:   # (E, d, f): vmap the per-matrix quantizer
-            if lwc is None:
-                return jax.vmap(lambda wi: fake_quant_weight(wi, qcfg))(w)
-            return jax.vmap(lambda wi, li: fake_quant_weight(wi, qcfg, li)
-                            )(w, lwc)
-        return fake_quant_weight(w, qcfg, lwc)
 
     # --- attention side ---
     if "ln_attn" in specs:
@@ -188,9 +186,7 @@ def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
             wo = eq_headwise_left(a2, block_params["wo"], cfg)
         else:
             wo = block_params["wo"]
-        out["wq"], out["wk"], out["wv"] = (quant(wq, "wq"), quant(wk, "wk"),
-                                           quant(wv, "wv"))
-        out["wo"] = quant(wo, "wo")
+        out["wq"], out["wk"], out["wv"], out["wo"] = wq, wk, wv, wo
         # shift-corrected biases (b + delta @ W) — Eq. 4's last term
         shift1 = qp["affine"]["ln_attn"].get("shift")
         for wname, bname in (("wq", "bq"), ("wk", "bk"), ("wv", "bv")):
@@ -215,7 +211,7 @@ def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
                 w = jax.vmap(lambda wi: af.transform_weight(spec3, a3, wi))(w)
             else:
                 w = af.transform_weight(spec3, a3, w)
-        out[name] = quant(w, name)
+        out[name] = w
     if cfg.num_experts:
         out["moe/router"] = block_params["moe"]["router"]
         if mlp_site:
@@ -230,6 +226,27 @@ def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
                     out[f"mlp/{sub[1]}"] = af.shift_bias_correction(
                         shift3, block_params["mlp"][sub[0]], None)
     return out
+
+
+def _quant_site(w: jax.Array, lwc, qcfg: QuantConfig) -> jax.Array:
+    """Fake-quantize one (possibly expert-stacked) transformed weight."""
+    if w.ndim == 3:   # (E, d, f): vmap the per-matrix quantizer
+        if lwc is None:
+            return jax.vmap(lambda wi: fake_quant_weight(wi, qcfg))(w)
+        return jax.vmap(lambda wi, li: fake_quant_weight(wi, qcfg, li)
+                        )(w, lwc)
+    return fake_quant_weight(w, qcfg, lwc)
+
+
+def effective_weights(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
+                      ccfg: CalibConfig, masks: dict) -> dict:
+    """Compute every transformed + pseudo-quantized weight of the block."""
+    from repro.core.sites import quantized_weights
+    tw = transformed_weights(block_params, qp, cfg, ccfg, masks)
+    qnames = set(quantized_weights(cfg))
+    return {name: (_quant_site(w, qp["lwc"].get(name), qcfg)
+                   if name in qnames else w)
+            for name, w in tw.items()}
 
 
 def eq_headwise_left(a2: jax.Array, wo: jax.Array, cfg) -> jax.Array:
@@ -431,20 +448,21 @@ def calibrate_block(block_params: dict, fp_in: jax.Array, quant_in: jax.Array,
 
 def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
                          ccfg: CalibConfig, calib_tokens: jax.Array,
-                         log: bool = True) -> tuple[dict, dict]:
+                         log: bool = True,
+                         deploy: str = "fake") -> tuple[dict, dict]:
     """Sequential block-wise PTQ of a dense/moe LM.
 
-    Returns (new_params with fake-quant effective weights merged in,
-             info dict with per-block loss curves).
+    ``deploy="fake"`` merges fake-quant effective weights back into the fp
+    parameter structure (simulation; serve with the ordinary ``Model``).
+    ``deploy="packed"`` emits :class:`repro.core.qtensor.QTensor` leaves for
+    every quantized linear — the real low-bit deployment tree, served by
+    ``repro.serve.quantized.QuantizedModel`` with no re-quantization.
+
+    Returns (new_params, info dict with per-block loss curves).
     """
     from repro.models import transformer
 
-    if cfg.scan_layers:
-        block_list = [
-            jax.tree_util.tree_map(lambda x, i=i: x[i], params["layers"])
-            for i in range(cfg.num_layers)]
-    else:
-        block_list = list(params["layers"])
+    block_list = _unstack_layers(params, cfg)
 
     x = jnp.take(params["embed"], calib_tokens, axis=0)
     if cfg.rope_theta == 0:
@@ -453,7 +471,7 @@ def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
     positions = jnp.arange(calib_tokens.shape[1])[None, :]
     fp_in = x
     quant_in = x
-    info = {"block_losses": [], "final_losses": []}
+    info = {"block_losses": [], "final_losses": [], "block_qps": []}
     new_blocks = []
 
     for li, bp in enumerate(block_list):
@@ -466,6 +484,7 @@ def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
 
         qp, losses = calibrate_block(bp, fp_in, quant_in, cfg, qcfg, ccfg,
                                      act_stats=stats)
+        info["block_qps"].append(qp)
         info["block_losses"].append(losses)
         info["final_losses"].append(losses[-1] if losses else float("nan"))
         if log:
@@ -474,7 +493,7 @@ def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
                         losses[0] if losses else float("nan"),
                         losses[-1] if losses else float("nan"))
 
-        new_bp = finalize_block(bp, qp, cfg, qcfg, ccfg)
+        new_bp = finalize_block(bp, qp, cfg, qcfg, ccfg, deploy=deploy)
         new_blocks.append(new_bp)
 
         # advance the two streams
@@ -483,27 +502,71 @@ def quantize_dense_model(params: dict, cfg, qcfg: QuantConfig,
                                        masks, positions)
         fp_in = fp_block_forward(bp, fp_in, cfg, positions)
 
+    return _stack_layers(params, new_blocks, cfg), info
+
+
+def _unstack_layers(params: dict, cfg) -> list:
+    """params["layers"] -> list of per-block trees (scan or list layout)."""
+    if cfg.scan_layers:
+        return [jax.tree_util.tree_map(lambda x, i=i: x[i], params["layers"])
+                for i in range(cfg.num_layers)]
+    return list(params["layers"])
+
+
+def _stack_layers(params: dict, blocks: list, cfg) -> dict:
+    """Inverse of :func:`_unstack_layers`: new params with ``blocks`` in."""
     new_params = dict(params)
     if cfg.scan_layers:
         new_params["layers"] = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *new_blocks)
+            lambda *xs: jnp.stack(xs), *blocks)
     else:
-        new_params["layers"] = new_blocks
-    return new_params, info
+        new_params["layers"] = blocks
+    return new_params
+
+
+def finalize_model(params: dict, block_qps: list, cfg, qcfg: QuantConfig,
+                   ccfg: CalibConfig, deploy: str = "fake") -> dict:
+    """Re-finalize calibrated quant params under a different deployment.
+
+    ``block_qps`` is ``info["block_qps"]`` from :func:`quantize_dense_model`;
+    calibration (the expensive block-wise Adam loop) is NOT re-run — the
+    same learned (A, delta, lwc) produce either the fake-quant simulation
+    tree or the packed :class:`~repro.core.qtensor.QTensor` tree.
+    ``ccfg`` must be the config calibration ran with (the GM mask epoch
+    enters the effective transform).
+    """
+    new_blocks = [finalize_block(bp, qp, cfg, qcfg, ccfg, deploy=deploy)
+                  for bp, qp in zip(_unstack_layers(params, cfg), block_qps)]
+    return _stack_layers(params, new_blocks, cfg)
 
 
 def finalize_block(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
-                   ccfg: CalibConfig) -> dict:
-    """Merge transforms away -> deployable block (fake-quant weights).
+                   ccfg: CalibConfig, deploy: str = "fake") -> dict:
+    """Merge transforms away -> deployable block (paper §3.3).
 
-    Diagonal sites merge into the norm; full sites produce the fused
-    effective weight inv(A) @ Q(A W); the vo transform merges into wv/wo.
-    The result evaluates *identically* to the calibrated quantized block
-    (paper §3.3 zero-overhead deployment).
+    ``deploy="fake"`` (simulation): diagonal sites merge into the norm; full
+    sites produce the fused bf16 effective weight inv(A) @ Q(A W); the vo
+    transform merges into wv/wo. The result evaluates *identically* to the
+    calibrated quantized block through the ordinary ``Model`` graph.
+
+    ``deploy="packed"`` (real deployment): every quantized linear becomes a
+    :class:`repro.core.qtensor.QTensor` holding the codes of **the same
+    single rounding** the calibration loss optimized (LWC clips preserved —
+    no re-quantization). Diagonal sites still merge into the norm; full
+    sites keep their small activation-side factor explicit as
+    ``attn_t`` / ``mlp_t`` = {"a_inv", optional "shift"} (a (d, d) bf16
+    matrix cannot fold into per-group int scales without breaking the grid);
+    the vo transform is absorbed into wv/wo *before* quantization, so it
+    costs nothing. Norms / biases / router stay fp.
     """
+    if deploy not in ("fake", "packed"):
+        raise ValueError(f"deploy must be 'fake' or 'packed', got {deploy!r}")
     specs = _specs_from(qp)
     solve_dt = jnp.dtype(ccfg.solve_dtype)
     masks = _masks(cfg, specs, ccfg.epochs, ccfg)
+    if deploy == "packed":
+        return _finalize_block_packed(block_params, qp, cfg, qcfg, ccfg,
+                                      specs, masks, solve_dt)
     ws = effective_weights(block_params, qp, cfg, qcfg, ccfg, masks)
 
     new_bp = jax.tree_util.tree_map(lambda x: x, block_params)  # copy
@@ -577,4 +640,73 @@ def finalize_block(block_params: dict, qp: dict, cfg, qcfg: QuantConfig,
                 new_bp[prefix]["router"] = eq.fuse_effective_weight(
                     ws["moe/router"], a3_inv.astype(jnp.float32))
         new_bp[prefix]["w_down"] = ws[f"{prefix}/w_down"]
+    return new_bp
+
+
+def _set_path(tree: dict, path: str, val) -> None:
+    node = tree
+    parts = path.split("/")
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] = val
+
+
+def _finalize_block_packed(block_params: dict, qp: dict, cfg,
+                           qcfg: QuantConfig, ccfg: CalibConfig,
+                           specs: dict, masks: dict, solve_dt) -> dict:
+    """Packed deployment of one calibrated block (see finalize_block)."""
+    from repro.core.quantizer import quantize_codes
+    from repro.core.sites import quantized_weights
+
+    tw = transformed_weights(block_params, qp, cfg, ccfg, masks)
+    qnames = set(quantized_weights(cfg))
+    new_bp = jax.tree_util.tree_map(lambda x: x, block_params)  # copy
+
+    # ONE quantization: pack each transformed linear on the LWC grid the
+    # calibration loss saw; everything else (biases, router) passes through
+    # transformed but fp.
+    for name, w in tw.items():
+        if name in qnames:
+            _set_path(new_bp, name, quantize_codes(w, qcfg,
+                                                   qp["lwc"].get(name)))
+        else:
+            _set_path(new_bp, name, w)
+
+    def site_matrix(name):
+        spec = specs[name]
+        a_eff = af.effective_matrix(spec, qp["affine"][name], masks.get(name))
+        return spec, a_eff, af.invert(spec, a_eff, solve_dt)
+
+    # attention-side site: diagonal merges into the norm; full keeps the
+    # activation factor explicit (serve applies (h - shift) @ inv(A)).
+    if "ln_attn" in specs:
+        spec1, a1, a1_inv = site_matrix("ln_attn")
+        shift1 = qp["affine"]["ln_attn"].get("shift")
+        if spec1.kind == "diagonal":
+            g, bta = eq.merge_diag_into_norm(
+                block_params["ln_attn"]["scale"],
+                block_params["ln_attn"].get("bias"), a1, shift1)
+            new_bp["ln_attn"] = {"scale": g}
+            if bta is not None:
+                new_bp["ln_attn"]["bias"] = bta
+        else:
+            new_bp["attn_t"] = {"a_inv": a1_inv.astype(jnp.float32)}
+            if shift1 is not None:
+                new_bp["attn_t"]["shift"] = shift1.astype(jnp.float32)
+
+    # mlp-side site
+    if "ln_mlp" in specs:
+        spec3, a3, a3_inv = site_matrix("ln_mlp")
+        shift3 = qp["affine"]["ln_mlp"].get("shift")
+        if spec3.kind == "diagonal":
+            g, btm = eq.merge_diag_into_norm(
+                block_params["ln_mlp"]["scale"],
+                block_params["ln_mlp"].get("bias"), a3, shift3)
+            new_bp["ln_mlp"] = {"scale": g}
+            if btm is not None:
+                new_bp["ln_mlp"]["bias"] = btm
+        else:
+            new_bp["mlp_t"] = {"a_inv": a3_inv.astype(jnp.float32)}
+            if shift3 is not None:
+                new_bp["mlp_t"]["shift"] = shift3.astype(jnp.float32)
     return new_bp

@@ -28,23 +28,25 @@ def packed_rows(d_in: int, bits: int) -> int:
 
 
 def pack(codes: jax.Array, bits: int) -> jax.Array:
-    """Pack uint8 codes (d_in, d_out), values < 2**bits, into uint8 bytes.
+    """Pack uint8 codes (..., d_in, d_out), values < 2**bits, into bytes.
 
-    Returns shape (d_in // 8 * bits, d_out).
+    Returns shape (..., d_in // 8 * bits, d_out). Leading dims (stacked
+    experts, scan-layer stacks) pass through untouched.
     """
     if not (1 <= bits <= 8):
         raise ValueError(f"bits must be in [1, 8], got {bits}")
-    d_in, d_out = codes.shape
+    lead, (d_in, d_out) = codes.shape[:-2], codes.shape[-2:]
     if d_in % PACK_GROUP != 0:
         raise ValueError(f"d_in={d_in} must be a multiple of {PACK_GROUP}")
-    c = codes.astype(jnp.uint32).reshape(d_in // PACK_GROUP, PACK_GROUP, d_out)
+    c = codes.astype(jnp.uint32).reshape(
+        lead + (d_in // PACK_GROUP, PACK_GROUP, d_out))
     # Accumulate 8 values of `bits` bits into one little-endian 64-bit lane,
     # materialized as two uint32 halves to stay in 32-bit-friendly ops.
-    lo = jnp.zeros((d_in // PACK_GROUP, d_out), jnp.uint32)
-    hi = jnp.zeros((d_in // PACK_GROUP, d_out), jnp.uint32)
+    lo = jnp.zeros(lead + (d_in // PACK_GROUP, d_out), jnp.uint32)
+    hi = jnp.zeros(lead + (d_in // PACK_GROUP, d_out), jnp.uint32)
     for k in range(PACK_GROUP):
         s = k * bits
-        v = c[:, k, :]
+        v = c[..., k, :]
         if s < 32:
             lo = lo | (v << jnp.uint32(s))
             if s + bits > 32:  # straddles the 32-bit boundary
@@ -62,23 +64,23 @@ def pack(codes: jax.Array, bits: int) -> jax.Array:
         else:
             b = (hi >> jnp.uint32(bit_off - 32)) & jnp.uint32(0xFF)
         out.append(b.astype(jnp.uint8))
-    packed = jnp.stack(out, axis=1)  # (d_in//8, bits, d_out)
-    return packed.reshape(d_in // PACK_GROUP * bits, d_out)
+    packed = jnp.stack(out, axis=-2)  # (..., d_in//8, bits, d_out)
+    return packed.reshape(lead + (d_in // PACK_GROUP * bits, d_out))
 
 
 def unpack(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
-    """Inverse of :func:`pack`. Returns uint8 codes of shape (d_in, d_out)."""
+    """Inverse of :func:`pack`. Returns uint8 codes (..., d_in, d_out)."""
     if not (1 <= bits <= 8):
         raise ValueError(f"bits must be in [1, 8], got {bits}")
     n_units = d_in // PACK_GROUP
-    d_out = packed.shape[-1]
-    p = packed.reshape(n_units, bits, d_out).astype(jnp.uint32)
+    lead, d_out = packed.shape[:-2], packed.shape[-1]
+    p = packed.reshape(lead + (n_units, bits, d_out)).astype(jnp.uint32)
     # Rebuild the 64-bit lane (as two uint32 halves) from little-endian bytes.
-    lo = jnp.zeros((n_units, d_out), jnp.uint32)
-    hi = jnp.zeros((n_units, d_out), jnp.uint32)
+    lo = jnp.zeros(lead + (n_units, d_out), jnp.uint32)
+    hi = jnp.zeros(lead + (n_units, d_out), jnp.uint32)
     for byte_idx in range(bits):
         bit_off = byte_idx * 8
-        b = p[:, byte_idx, :]
+        b = p[..., byte_idx, :]
         if bit_off < 32:
             lo = lo | (b << jnp.uint32(bit_off))
             if bit_off + 8 > 32:
@@ -96,5 +98,5 @@ def unpack(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
         else:  # straddle
             v = ((lo >> jnp.uint32(s)) | (hi << jnp.uint32(32 - s))) & mask
         vals.append(v)
-    codes = jnp.stack(vals, axis=1)  # (n_units, 8, d_out)
-    return codes.reshape(d_in, d_out).astype(jnp.uint8)
+    codes = jnp.stack(vals, axis=-2)  # (..., n_units, 8, d_out)
+    return codes.reshape(lead + (d_in, d_out)).astype(jnp.uint8)

@@ -1,0 +1,97 @@
+"""The one quantized-weight representation shared by calibrate/pack/serve.
+
+``QTensor`` is a pytree-registered dataclass holding a packed sub-byte
+weight: integer ``codes`` in uint8 containers (``repro.core.packing``
+layout) plus the per-group affine grid (``scale``, ``zp``).  The same
+object flows through the whole deployment pipeline:
+
+    calibrate  -> finalize_block(deploy="packed")  emits QTensor leaves
+    pack       -> quantize_lm_packed               passes them through
+    serve      -> QuantizedModel / kernels.ops     consume them directly
+
+so the weights are quantized exactly **once**, on the LWC-learned clipping
+grid (paper §3.3 zero-overhead deployment).  Before this representation
+existed the serving path re-quantized the fake-quant floats from scratch —
+a second rounding the paper never pays.
+
+``bits`` and ``group_size`` are static (pytree aux data): jit/scan/vmap
+treat them as compile-time constants, and ``jax.lax.scan`` over a stacked
+per-layer tree of QTensors works out of the box.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """A packed quantized weight: ``w ~= (codes - zp) * scale``.
+
+    Attributes:
+      packed: (..., K // 8 * bits, N) uint8 — sub-byte codes, packing layout
+        of :mod:`repro.core.packing` (8 K-values per ``bits`` bytes).
+      scale:  (..., K // group_size, N) float32 per-group scale.
+      zp:     (..., K // group_size, N) float32 integer-valued zero point.
+      bits:   static bit-width of the codes (1..8).
+      group_size: static K-axis group length the grid was computed over
+        (always the *effective* size: nonzero, divides K).
+    """
+    packed: jax.Array
+    scale: jax.Array
+    zp: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+
+    # ---- shape accessors -------------------------------------------------
+    @property
+    def d_in(self) -> int:
+        return self.packed.shape[-2] * 8 // self.bits
+
+    @property
+    def d_out(self) -> int:
+        return self.packed.shape[-1]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.packed.shape[:-2] + (self.d_in, self.d_out)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.packed.nbytes + self.scale.nbytes + self.zp.nbytes)
+
+    # ---- reference dequantization ---------------------------------------
+    def codes(self) -> jax.Array:
+        """Unpacked integer codes, uint8 of shape (..., K, N)."""
+        return unpack(self.packed, self.bits, self.d_in)
+
+    def dequantize(self, out_dtype: Any = jnp.float32) -> jax.Array:
+        """(codes - zp) * scale — bit-identical to the fake-quant grid.
+
+        The op order (subtract, then scale, in float32) matches
+        ``repro.core.quantizer.fake_quant_weight`` exactly, so a weight
+        quantized by ``quantize_codes`` dequantizes to the very floats the
+        calibration loss saw.
+        """
+        k, n = self.d_in, self.d_out
+        lead = self.packed.shape[:-2]
+        g = self.group_size if self.group_size else k
+        cg = self.codes().astype(jnp.float32).reshape(lead + (k // g, g, n))
+        w = (cg - self.zp[..., None, :]) * self.scale[..., None, :]
+        return w.reshape(lead + (k, n)).astype(out_dtype)
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def tree_has_qtensor(tree: Any) -> bool:
+    """True if any leaf of ``tree`` is a QTensor (QTensors kept as leaves)."""
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_qtensor)
+    return any(is_qtensor(l) for l in leaves)

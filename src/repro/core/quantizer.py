@@ -77,6 +77,20 @@ class QuantConfig:
 # grouping
 # ---------------------------------------------------------------------------
 
+def effective_group_size(d_in: int, group_size: int) -> int:
+    """The group length actually used along a K-dim of ``d_in``.
+
+    ``group_size == 0`` (per-channel) and non-dividing groups both fall back
+    to one group spanning the whole input dimension (matches GPTQ-style
+    tooling). This is the value recorded in a deployed ``QTensor`` so the
+    serving grid is unambiguous.
+    """
+    g = group_size if group_size else d_in
+    if d_in % g != 0:
+        g = d_in
+    return g
+
+
 def _to_groups(w: jax.Array, group_size: int) -> tuple[jax.Array, tuple[int, ...]]:
     """Reshape (in, out) weights to (groups, group_size, out) for reduction.
 
@@ -84,11 +98,7 @@ def _to_groups(w: jax.Array, group_size: int) -> tuple[jax.Array, tuple[int, ...
     treats the whole input dimension as one group (per-output-channel).
     """
     d_in, d_out = w.shape
-    g = group_size if group_size else d_in
-    if d_in % g != 0:
-        # graceful fallback: per-channel for matrices whose input dim the
-        # group does not divide (e.g. odd d_ff); matches GPTQ-style tooling
-        g = d_in
+    g = effective_group_size(d_in, group_size)
     return w.reshape(d_in // g, g, d_out), w.shape
 
 
@@ -108,7 +118,7 @@ def init_lwc_params(w_shape: tuple[int, int], group_size: int,
     OmniQuant does, and let the calibration loss pull the bounds in.
     """
     d_in, d_out = w_shape
-    g = group_size if group_size else d_in
+    g = effective_group_size(d_in, group_size)
     n_groups = d_in // g
     return {
         "gamma": jnp.full((n_groups, 1, d_out), init_value, jnp.float32),
@@ -180,11 +190,47 @@ def quantize_weight_int(w: jax.Array, cfg: QuantConfig,
     return codes, scale[:, 0, :], zp[:, 0, :]
 
 
+def quantize_codes(w: jax.Array, cfg: QuantConfig,
+                   lwc_params: Optional[dict] = None) -> "QTensor":
+    """Quantize ONCE onto the calibrated grid and pack — returns a QTensor.
+
+    Shares the exact grid math with :func:`fake_quant_weight` (same
+    ``weight_qparams`` call, same rounding), so
+    ``quantize_codes(w, cfg, lwc).dequantize()`` is bit-identical to
+    ``fake_quant_weight(w, cfg, lwc)``: the single-rounding invariant the
+    deployment pipeline is built on.  Preserves LWC-learned clips via
+    ``lwc_params`` — this is what the old serve-path re-quantization threw
+    away.
+
+    Leading dims (stacked experts ``(E, K, N)``) are vmapped.
+    """
+    from repro.core.packing import pack
+    from repro.core.qtensor import QTensor
+
+    if w.ndim > 2:
+        flat = w.reshape((-1,) + w.shape[-2:])
+        if lwc_params is None:
+            qt = jax.vmap(lambda wi: quantize_codes(wi, cfg))(flat)
+        else:
+            lf = jax.tree_util.tree_map(
+                lambda x: x.reshape((-1,) + x.shape[-3:]), lwc_params)
+            qt = jax.vmap(lambda wi, li: quantize_codes(wi, cfg, li))(flat, lf)
+        lead = w.shape[:-2]
+        return QTensor(qt.packed.reshape(lead + qt.packed.shape[1:]),
+                       qt.scale.reshape(lead + qt.scale.shape[1:]),
+                       qt.zp.reshape(lead + qt.zp.shape[1:]),
+                       qt.bits, qt.group_size)
+
+    codes, scale, zp = quantize_weight_int(w, cfg, lwc_params)
+    g = effective_group_size(w.shape[0], cfg.group_size)
+    return QTensor(pack(codes, cfg.w_bits), scale, zp, cfg.w_bits, g)
+
+
 def dequantize_weight_int(codes: jax.Array, scale: jax.Array, zp: jax.Array,
                           cfg: QuantConfig, out_dtype=jnp.float32) -> jax.Array:
     """Inverse of :func:`quantize_weight_int` (reference path)."""
     d_in, d_out = codes.shape
-    g = cfg.group_size if cfg.group_size else d_in
+    g = effective_group_size(d_in, cfg.group_size)
     cg = codes.reshape(d_in // g, g, d_out).astype(jnp.float32)
     dq = (cg - zp[:, None, :]) * scale[:, None, :]
     return dq.reshape(d_in, d_out).astype(out_dtype)

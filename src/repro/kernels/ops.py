@@ -10,11 +10,12 @@ counts.
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.qtensor import QTensor
 from repro.kernels import dequant_matmul as dq
 from repro.kernels import int8_matmul as i8
 from repro.kernels import quantize_pack as qp
@@ -57,9 +58,31 @@ def _clamp_blocks(k: int, n: int, blocks: dict, group: int) -> dict:
     return out
 
 
-def dequant_matmul(x, packed, scale, zp, *, bits: int, group_size: int,
+def dequant_matmul(x, packed, scale=None, zp=None, *,
+                   bits: Optional[int] = None,
+                   group_size: Optional[int] = None,
                    mode: Mode = "auto", **blocks):
-    """y = x @ dequant(packed). x (..., K); returns (..., N)."""
+    """y = x @ dequant(packed). x (..., K); returns (..., N).
+
+    ``packed`` is either a :class:`repro.core.qtensor.QTensor` (scale / zp /
+    bits / group_size taken from it — the deployment fast path) or a raw
+    packed uint8 array with explicit ``scale``/``zp``/``bits``/``group_size``.
+    """
+    if isinstance(packed, QTensor):
+        qt = packed
+        packed, scale, zp = qt.packed, qt.scale, qt.zp
+        # the QTensor's static metadata is authoritative: explicit kwargs
+        # that disagree would unpack the codes on the wrong bit layout
+        if bits is not None and bits != qt.bits:
+            raise ValueError(f"bits={bits} conflicts with QTensor.bits="
+                             f"{qt.bits}")
+        if group_size is not None and group_size != qt.group_size:
+            raise ValueError(f"group_size={group_size} conflicts with "
+                             f"QTensor.group_size={qt.group_size}")
+        bits, group_size = qt.bits, qt.group_size
+    if bits is None or group_size is None or scale is None or zp is None:
+        raise TypeError("dequant_matmul needs a QTensor or explicit "
+                        "packed/scale/zp/bits/group_size")
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)

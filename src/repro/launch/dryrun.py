@@ -56,7 +56,17 @@ def _is_axes_leaf(x) -> bool:
 
 def shardings_for(axes_tree, shapes_tree, mesh, rules):
     """Zip a logical-axes tree with a ShapeDtypeStruct tree -> NamedShardings."""
+    from repro.core.qtensor import QTensor
+
     def walk(axes, shapes):
+        if isinstance(shapes, QTensor):
+            # axes for a packed weight stay a {"packed","scale","zp"} dict;
+            # rebuild a QTensor node (same static meta) so the sharding tree
+            # matches the params pytree structure for jit in_shardings.
+            return QTensor(packed=walk(axes["packed"], shapes.packed),
+                           scale=walk(axes["scale"], shapes.scale),
+                           zp=walk(axes["zp"], shapes.zp),
+                           bits=shapes.bits, group_size=shapes.group_size)
         if _is_axes_leaf(axes):
             spec = (P() if axes is None else
                     sharding.resolve_spec(axes, shapes.shape, mesh, rules))

@@ -1,11 +1,19 @@
 """Serving launcher: batched continuous-batching engine demo.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
-        --ckpt checkpoints/llama-mini --requests 8 --max-new 16 [--quantize]
+        --ckpt checkpoints/llama-mini --requests 8 --max-new 16 \
+        [--quantize] [--packed]
 
 ``--quantize`` runs the prompts through the AffineQuant-calibrated model
 (fake-quant effective weights — identical serving graph) and reports the
 agreement rate against the fp model.
+
+``--packed`` (implies ``--quantize``) additionally runs the REAL deployment
+pipeline: calibrate -> finalize(deploy="packed") -> QTensor tree ->
+QuantizedModel -> Engine. The decode path serves packed sub-byte codes
+quantized exactly once on the calibrated LWC grid (no fp-weight fallback),
+and the launcher reports token agreement vs fp plus the weight-memory
+compression.
 """
 from __future__ import annotations
 
@@ -35,6 +43,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve real packed QTensor weights (implies "
+                         "--quantize): calibrate -> pack -> Engine")
     ap.add_argument("--wbits", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -58,8 +69,8 @@ def main(argv=None) -> int:
                        max_len=args.prompt_len + args.max_new + 8,
                        max_new=args.max_new)
 
-    def run(p, tag):
-        eng = Engine(model, p, scfg)
+    def run(p, tag, serving_model=None):
+        eng = Engine(serving_model or model, p, scfg)
         for pr in prompts:
             eng.submit(pr)
         t0 = time.monotonic()
@@ -70,17 +81,42 @@ def main(argv=None) -> int:
                     tag, len(done), total_new, dt, total_new / dt)
         return [r.out_tokens for r in done]
 
+    def agreement(a_outs, b_outs):
+        return np.mean([np.mean(np.array(a[:len(b)]) == np.array(b[:len(a)]))
+                        for a, b in zip(a_outs, b_outs)])
+
     fp_out = run(params, "fp")
 
-    if args.quantize:
+    if args.quantize or args.packed:
         qcfg = QuantConfig(w_bits=args.wbits, a_bits=16, group_size=64)
+        ccfg = CalibConfig(epochs=5)
         calib = jnp.asarray(corpus.sample(16, args.prompt_len, seed=777))
-        qparams, _ = quantize_dense_model(
-            params, cfg, qcfg, CalibConfig(epochs=5), calib, log=False)
+        qparams, cal_info = quantize_dense_model(
+            params, cfg, qcfg, ccfg, calib, log=False)
         q_out = run(qparams, f"affinequant-w{args.wbits}")
-        agree = np.mean([np.mean(np.array(a[:len(b)]) == np.array(b[:len(a)]))
-                         for a, b in zip(fp_out, q_out)])
-        logger.info("greedy-token agreement fp vs quant: %.1f%%", 100 * agree)
+        logger.info("greedy-token agreement fp vs quant: %.1f%%",
+                    100 * agreement(fp_out, q_out))
+
+        if args.packed:
+            # real deployment: ONE quantization on the calibrated LWC grid,
+            # packed QTensor leaves served end-to-end by the engine (same
+            # calibration — finalize_model only re-merges, no second Adam)
+            from repro.core.calibration import finalize_model
+            from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+            from repro.utils import tree_bytes
+            pparams = finalize_model(params, cal_info["block_qps"], cfg,
+                                     qcfg, ccfg, deploy="packed")
+            pparams = quantize_lm_packed(pparams, cfg, qcfg)  # pass-through
+            qmodel = QuantizedModel(cfg, qcfg)
+            p_out = run(pparams, f"affinequant-w{args.wbits}-packed", qmodel)
+            logger.info("greedy-token agreement fp vs packed: %.1f%%",
+                        100 * agreement(fp_out, p_out))
+            logger.info("greedy-token agreement quant vs packed: %.1f%%",
+                        100 * agreement(q_out, p_out))
+            logger.info("weight memory: fp %.2f MiB -> packed %.2f MiB "
+                        "(%.2fx)", tree_bytes(params) / 2**20,
+                        tree_bytes(pparams) / 2**20,
+                        tree_bytes(params) / tree_bytes(pparams))
     return 0
 
 

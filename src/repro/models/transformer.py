@@ -211,6 +211,17 @@ def _sinusoidal(t: int, d: int) -> jax.Array:
     return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
 
 
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding at per-sequence decode positions (B,) -> (B, d).
+
+    Shared by the fp and packed decode paths (no-RoPE / OPT family) so the
+    position scheme cannot drift between them.
+    """
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = positions[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
 def forward(params, cfg, tokens=None, prefix_embeds=None,
             collect_kv: bool = False, window: Optional[int] = None,
             last_only: bool = False):
@@ -277,10 +288,7 @@ def decode_step(params, cfg, token, cache):
     x = jnp.take(params["embed"], token, axis=0)
     cur_len = cache["len"]
     if cfg.rope_theta == 0 and cfg.family != "audio":
-        d = cfg.d_model
-        i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
-        ang = cur_len[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        pe = sinusoidal_at(cur_len, cfg.d_model)
         x = x + pe[:, None, :].astype(x.dtype)
     x = sharding.shard(x, "batch", None, "embed")
 

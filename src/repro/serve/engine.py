@@ -7,9 +7,13 @@ requirement). Requests queue; free slots are refilled by prefilling the
 prompt into the slot's cache region. Termination on EOS or ``max_new``.
 
 Quantized serving: pass a model whose params came from the AffineQuant
-pipeline (fake-quant effective weights — identical graph), or packed int4
-weights via ``repro.core.qlinear`` for the memory-bound decode win
-quantified in EXPERIMENTS.md §Perf.
+pipeline — either fake-quant effective weights through the ordinary
+``Model`` (identical graph, simulation), or the real packed path: a
+``repro.serve.quantized.QuantizedModel`` over a
+``repro.core.qtensor.QTensor`` tree from
+``quantize_dense_model(..., deploy="packed")`` for the memory-bound decode
+win quantified in EXPERIMENTS.md §Perf. Both expose the same
+``prefill``/``decode_step`` interface, so the engine is oblivious.
 """
 from __future__ import annotations
 
@@ -77,10 +81,6 @@ class Engine:
                 self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
                 max_len=self.cfg.max_len)
             # splice the single-sequence cache into the batch cache
-            def put(dst, src):
-                if dst.ndim == src.ndim and dst.shape[1] == len(self._slots):
-                    return dst.at[:, slot].set(src[:, 0])
-                return dst
             for k in self._cache:
                 if k == "len":
                     self._cache["len"] = self._cache["len"].at[slot].set(

@@ -1,17 +1,28 @@
 """Packed low-bit serving for dense/MoE LMs (the paper's deployment target).
 
-``quantize_lm_packed`` converts a calibrated (or raw) parameter tree into
-packed sub-byte storage:
+The whole pipeline speaks ONE quantized-weight representation,
+:class:`repro.core.qtensor.QTensor` (packed sub-byte codes + per-group
+scale/zp, pytree-registered):
 
-    weight (…, K, N) bf16  ->  {"packed": (…, K//8*bits, N) uint8,
-                                "scale": (…, K//g, N) f32,
-                                "zp":    (…, K//g, N) f32}
+    calibrate : finalize_block(deploy="packed") quantizes each transformed
+                linear ONCE on its LWC-learned grid and emits QTensor leaves
+    pack      : quantize_lm_packed passes a calibrated tree through untouched
+                (no re-quantization); a raw fp tree is direct-quantized onto
+                the identical RTN grid
+    serve     : QuantizedModel reads QTensor fields; matmuls route through
+                repro.kernels.ops.dequant_matmul (Pallas on TPU, reference
+                math elsewhere — bit-identical results)
+
+so ``QuantizedModel.prefill/decode_step`` evaluate exactly the grid the
+calibration loss optimized — one rounding end-to-end (paper §3.3
+zero-overhead deployment). Full-matrix transform sites that cannot merge
+into a norm keep their activation-side factor as a small ``attn_t`` /
+``mlp_t`` = {"a_inv", optional "shift"} applied after the norm; every large
+linear stays packed (no fp-weight fallback in the decode path).
 
 ``QuantizedModel`` exposes the same ``decode_step`` / ``prefill`` /
-``init_cache`` interface as ``repro.models.Model`` so the serving engine and
-the dry-run lower it unchanged. Matmuls route through
-``repro.kernels.ops.dequant_matmul`` (Pallas on TPU, reference math
-elsewhere — bit-identical results).
+``init_cache`` interface as ``repro.models.Model`` so the continuous-
+batching ``Engine`` and the dry-run lower it unchanged.
 
 Why this matters at scale: bf16 weights of a 132B MoE do not fit TP-only on
 a 256-chip v5e pod (16.5 GiB/device), forcing FSDP weight gathers on *every
@@ -26,60 +37,58 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import sharding
 from repro.configs.base import ModelConfig
-from repro.core.quantizer import QuantConfig
+from repro.core.qtensor import QTensor, tree_has_qtensor
+from repro.core.quantizer import QuantConfig, quantize_codes
 from repro.kernels import ops
 from repro.models import attention as attn_lib
 from repro.models import layers
-from repro.models.model import Model, build_model
+from repro.models.model import build_model
+from repro.models.transformer import _sinusoidal, sinusoidal_at
 
 PACKED_WEIGHTS = ("wq", "wk", "wv", "wo")
 PACKED_MLP = ("w_gate", "w_up", "w_down")
 
 
-def _pack_one(w: jax.Array, bits: int, group: int) -> dict:
-    """Pack a (..., K, N) weight along K (vmapped over leading dims)."""
-    if w.ndim == 2:
-        packed, scale, zp = ops.quantize_pack(w, bits=bits, group_size=group,
-                                              mode="ref")
-        return {"packed": packed, "scale": scale, "zp": zp}
-    inner = lambda wi: _pack_one(wi, bits, group)
-    outs = jax.vmap(lambda wi: tuple(
-        ops.quantize_pack(wi, bits=bits, group_size=group, mode="ref")))(
-            w.reshape((-1,) + w.shape[-2:]))
-    lead = w.shape[:-2]
-    return {"packed": outs[0].reshape(lead + outs[0].shape[1:]),
-            "scale": outs[1].reshape(lead + outs[1].shape[1:]),
-            "zp": outs[2].reshape(lead + outs[2].shape[1:])}
-
-
 def quantize_lm_packed(params: dict, cfg: ModelConfig, qcfg: QuantConfig
                        ) -> dict:
-    """Pack every block linear; embeddings/norms stay bf16 (standard)."""
-    bits, group = qcfg.w_bits, qcfg.group_size
+    """Adapter to the packed-serving tree: QTensor leaves for every linear.
+
+    * A tree that already holds QTensor leaves (output of
+      ``quantize_dense_model(..., deploy="packed")``) passes through
+      untouched — the calibrated codes ARE the serving codes, there is no
+      second quantization.
+    * A raw fp tree is direct-quantized (RTN grid, identical math to
+      ``fake_quant_weight`` with ``lwc=False``) onto the same QTensor
+      representation.
+
+    Embeddings / norms / biases / router stay fp (standard).
+    """
+    if tree_has_qtensor(params):
+        return params
     out = {"embed": params["embed"], "ln_f": params["ln_f"]}
     if "head" in params:
         out["head"] = params["head"]
     lp = params["layers"]
     new_lp = {}
-    for k in ("ln_attn", "ln_mlp"):
-        new_lp[k] = lp[k]
+    for k in ("ln_attn", "ln_mlp", "attn_t", "mlp_t"):
+        if k in lp:
+            new_lp[k] = lp[k]
     for k in ("bq", "bk", "bv"):
         if k in lp:
             new_lp[k] = lp[k]
     for k in PACKED_WEIGHTS:
-        new_lp[k] = _pack_one(lp[k], bits, group)
+        new_lp[k] = quantize_codes(lp[k], qcfg)
     if cfg.num_experts:
         new_lp["moe"] = {"router": lp["moe"]["router"]}
         for k in PACKED_MLP:
             if k in lp["moe"]:
-                new_lp["moe"][k] = _pack_one(lp["moe"][k], bits, group)
+                new_lp["moe"][k] = quantize_codes(lp["moe"][k], qcfg)
     else:
         new_lp["mlp"] = {}
         for k in PACKED_MLP:
             if k in lp["mlp"]:
-                new_lp["mlp"][k] = _pack_one(lp["mlp"][k], bits, group)
+                new_lp["mlp"][k] = quantize_codes(lp["mlp"][k], qcfg)
         for k in ("b_gate", "b_up"):
             if k in lp["mlp"]:
                 new_lp["mlp"][k] = lp["mlp"][k]
@@ -87,26 +96,32 @@ def quantize_lm_packed(params: dict, cfg: ModelConfig, qcfg: QuantConfig
     return out
 
 
-def _qmm(x: jax.Array, qw: dict, bits: int, group: int,
-         mode: str) -> jax.Array:
-    return ops.dequant_matmul(x, qw["packed"], qw["scale"], qw["zp"],
-                              bits=bits, group_size=group, mode=mode)
+def _act_transform(t: Optional[dict], h: jax.Array) -> jax.Array:
+    """Apply a full-site activation factor h_t = (h - shift) @ inv(A)."""
+    if t is None:
+        return h
+    if "shift" in t:
+        h = h - t["shift"].astype(h.dtype)
+    return h @ t["a_inv"].astype(h.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantizedModel:
-    """Model-compatible wrapper serving packed weights (dense/MoE decode)."""
+    """Model-compatible wrapper serving QTensor trees (dense/MoE)."""
     cfg: ModelConfig
     qcfg: QuantConfig
     kernel_mode: str = "auto"
 
-    @property
-    def _bits(self):
-        return self.qcfg.w_bits
+    def __post_init__(self):
+        if self.cfg.window:
+            # the packed decode writes minimum(cur_len, s-1) and attends the
+            # full cache — sliding-window ring-buffer semantics (see
+            # transformer.apply_block_decode) are not implemented here
+            raise NotImplementedError(
+                "packed serving does not support sliding-window attention")
 
-    @property
-    def _group(self):
-        return self.qcfg.group_size
+    def _mm(self, x: jax.Array, qt: QTensor) -> jax.Array:
+        return ops.dequant_matmul(x, qt, mode=self.kernel_mode)
 
     # cache API identical to Model
     def init_cache(self, batch: int, max_len: int) -> dict:
@@ -115,10 +130,71 @@ class QuantizedModel:
     def cache_specs(self, batch: int, max_len: int) -> dict:
         return build_model(self.cfg).cache_specs(batch, max_len)
 
+    # ------------------------------------------------------------------
+    # prefill (batched token matmuls; dequant_matmul handles ragged M)
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int):
+        """Full-prompt forward building the decode cache on packed weights."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.rope_theta == 0:
+            x = x + _sinusoidal(t, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(t)[None, :]
+
+        def body(h, lp):
+            h, k, v = self._block_prefill(lp, h, positions)
+            return h, (k, v)
+
+        if cfg.scan_layers:
+            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        else:
+            raise NotImplementedError("packed serving assumes scan layout")
+        x = layers.apply_norm(params["ln_f"], x[:, -1:, :], cfg.norm)
+        head = params.get("head")
+        logits = x @ (head if head is not None else params["embed"].T)
+        max_len = max(max_len, t)
+        cache = self.init_cache(bsz, max_len)
+        kc = cache["k"].at[:, :, :t].set(ks.astype(cache["k"].dtype))
+        vc = cache["v"].at[:, :, :t].set(vs.astype(cache["v"].dtype))
+        return logits, {"k": kc, "v": vc,
+                        "len": jnp.full((bsz,), t, jnp.int32)}
+
+    def _block_prefill(self, p, x, positions):
+        cfg = self.cfg
+        h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+        h = _act_transform(p.get("attn_t"), h)
+        q = self._mm(h, p["wq"])
+        k = self._mm(h, p["wk"])
+        v = self._mm(h, p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        b, t = x.shape[0], x.shape[1]
+        hd = cfg.resolved_head_dim
+        q = q.reshape(b, t, cfg.num_heads, hd)
+        k = k.reshape(b, t, cfg.num_kv_heads, hd)
+        v = v.reshape(b, t, cfg.num_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+        out = attn_lib.attention(q, k, v, causal=cfg.causal,
+                                 window=cfg.window,
+                                 chunked_threshold=cfg.attn_chunk_threshold)
+        x = x + self._mm(out.reshape(b, t, -1), p["wo"])
+        x = x + self._mlp(p, x)
+        return x, k, v
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
     def decode_step(self, params, token, cache):
         cfg = self.cfg
         x = jnp.take(params["embed"], token, axis=0)
         cur_len = cache["len"]
+        if cfg.rope_theta == 0:
+            pe = sinusoidal_at(cur_len, cfg.d_model)
+            x = x + pe[:, None, :].astype(x.dtype)
 
         def body(h, xs):
             lp, kc, vc = xs
@@ -137,12 +213,11 @@ class QuantizedModel:
 
     def _block_decode(self, p, x, k_cache, v_cache, cur_len):
         cfg = self.cfg
-        mm = lambda h, qw: _qmm(h, qw, self._bits, self._group,
-                                self.kernel_mode)
         h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
-        q = mm(h, p["wq"])
-        k = mm(h, p["wk"])
-        v = mm(h, p["wv"])
+        h = _act_transform(p.get("attn_t"), h)
+        q = self._mm(h, p["wq"])
+        k = self._mm(h, p["wk"])
+        v = self._mm(h, p["wv"])
         if "bq" in p:
             q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
         b = x.shape[0]
@@ -160,53 +235,48 @@ class QuantizedModel:
         k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
         out = attn_lib.decode_attention(q, k_cache, v_cache, cur_len + 1)
-        x = x + mm(out.reshape(b, 1, -1), p["wo"])
+        x = x + self._mm(out.reshape(b, 1, -1), p["wo"])
+        x = x + self._mlp(p, x)
+        return x, k_cache, v_cache
 
+    # ------------------------------------------------------------------
+    # shared mlp half (prefill + decode)
+    # ------------------------------------------------------------------
+    def _mlp(self, p, x):
+        cfg = self.cfg
         h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+        h2 = _act_transform(p.get("mlp_t"), h2)
         if cfg.num_experts:
-            x = x + self._moe_decode(p["moe"], h2)
-            return x, k_cache, v_cache
+            return self._moe_apply(p["moe"], h2)
+        mp = p["mlp"]
+
+        def lin(wn, bn):
+            y = self._mm(h2, mp[wn])
+            if bn in mp:
+                y = y + mp[bn]
+            return y
+
         if cfg.act in ("swiglu", "geglu"):
             gate_fn = (jax.nn.silu if cfg.act == "swiglu"
                        else lambda z: jax.nn.gelu(z, approximate=True))
-            inner = gate_fn(mm(h2, p["mlp"]["w_gate"])) * mm(h2, p["mlp"]["w_up"])
+            inner = gate_fn(lin("w_gate", "b_gate")) * lin("w_up", "b_up")
         elif cfg.act == "gelu":
-            inner = jax.nn.gelu(mm(h2, p["mlp"]["w_up"]), approximate=True)
+            inner = jax.nn.gelu(lin("w_up", "b_up"), approximate=True)
         else:
-            inner = jax.nn.relu(mm(h2, p["mlp"]["w_up"]))
-        return x + mm(inner, p["mlp"]["w_down"]), k_cache, v_cache
+            inner = jax.nn.relu(lin("w_up", "b_up"))
+        return self._mm(inner, mp["w_down"])
 
-    def _moe_decode(self, mp, h2):
-        """Dense-dispatch MoE decode on packed experts (few tokens: compute
-        every selected expert via gathered per-token expert weights would
-        need ragged gathers; at decode batch sizes the capacity path of
-        repro.models.moe dominates — reuse it with dequantized experts)."""
+    def _moe_apply(self, mp, h2):
+        """MoE on packed experts: the dense-dispatch capacity path of
+        repro.models.moe dominates at decode batch sizes; expert weights are
+        dequantized from their (single-rounding) codes for the gather."""
         cfg = self.cfg
         from repro.models import moe as moe_lib
-        bits, group = self._bits, self._group
-
-        def dq(qw):
-            from repro.core.packing import unpack
-            lead = qw["packed"].shape[:-2]
-            kp = qw["packed"].shape[-2] * 8 // bits
-
-            def one(pk, sc, z):
-                from repro.kernels.ref import dequant_matmul_ref  # noqa
-                codes = unpack(pk, bits, kp).astype(jnp.float32)
-                g = group if group else kp
-                cg = codes.reshape(kp // g, g, -1)
-                w = (cg - z[:, None, :]) * sc[:, None, :]
-                return w.reshape(kp, -1).astype(h2.dtype)
-            flat = jax.vmap(one)(
-                qw["packed"].reshape((-1,) + qw["packed"].shape[-2:]),
-                qw["scale"].reshape((-1,) + qw["scale"].shape[-2:]),
-                qw["zp"].reshape((-1,) + qw["zp"].shape[-2:]))
-            return flat.reshape(lead + flat.shape[1:])
-
-        params = {"router": mp["router"], "w_up": dq(mp["w_up"]),
-                  "w_down": dq(mp["w_down"])}
+        params = {"router": mp["router"],
+                  "w_up": mp["w_up"].dequantize(h2.dtype),
+                  "w_down": mp["w_down"].dequantize(h2.dtype)}
         if "w_gate" in mp:
-            params["w_gate"] = dq(mp["w_gate"])
+            params["w_gate"] = mp["w_gate"].dequantize(h2.dtype)
         y, _ = moe_lib.apply_moe(params, h2, top_k=cfg.top_k,
                                  capacity_factor=cfg.capacity_factor,
                                  act=cfg.act)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.baselines import (awq_quantize_weight, gptq_quantize_weight,
                                   rtn_quantize_weight, smoothquant_transform)
@@ -18,6 +19,7 @@ def _correlated_acts(key, n, d):
     return x * outlier_scale
 
 
+@pytest.mark.slow
 def test_gptq_beats_rtn_output_mse():
     key = jax.random.PRNGKey(0)
     d, n_out = 64, 32

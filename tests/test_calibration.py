@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.core import gradual_mask as gm
 from repro.core.calibration import (CalibConfig, _masks, _specs_from,

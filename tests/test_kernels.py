@@ -41,6 +41,7 @@ def test_quantize_pack_kernel_matches_ref(bits, k, n, g):
 
 
 @pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 512, 128)])
+@pytest.mark.slow
 def test_int8_matmul_exact(m, k, n):
     key = jax.random.PRNGKey(m + k)
     xq = jax.random.randint(key, (m, k), -128, 128).astype(jnp.int8)
@@ -65,6 +66,7 @@ def test_w8a8_fused_matches_ref_single_slab():
     np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_w8a8_per_slab_error_bounded():
     """bk < K uses per-slab scales: error vs exact fp must stay below the
     whole-row scheme's worst case."""

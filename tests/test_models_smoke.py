@@ -11,6 +11,15 @@ from repro.models import build_model
 
 ARCHS = list_archs(assigned_only=True)
 
+# big miniatures (recurrent scan / 16-expert MoE) dominate the wall-time;
+# keep them out of the -m "not slow" smoke lane
+_SLOW_ARCHS = {"recurrentgemma-2b", "dbrx-132b", "mamba2-1.3b"}
+
+
+def _p(arch):
+    return (pytest.param(arch, marks=pytest.mark.slow)
+            if arch in _SLOW_ARCHS else arch)
+
 
 def _batch(cfg, key, B=2, T=16):
     if cfg.family == "audio":
@@ -24,6 +33,7 @@ def _batch(cfg, key, B=2, T=16):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_smoke_train_step(arch, rng):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
@@ -36,7 +46,7 @@ def test_smoke_train_step(arch, rng):
     assert gn > 0 and jnp.isfinite(gn), arch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", [_p(a) for a in ARCHS])
 def test_smoke_forward_shapes(arch, rng):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
@@ -51,6 +61,7 @@ def test_smoke_forward_shapes(arch, rng):
 
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if get_config(a).family != "audio"])
+@pytest.mark.slow
 def test_decode_matches_forward(arch, rng):
     """prefill(T) + decode(token T) == forward(T+1) at the last position."""
     cfg = get_config(arch).reduced()
@@ -128,6 +139,7 @@ def test_attn_sharding_modes_identical(mode, rng):
     np.testing.assert_allclose(np.asarray(out), np.asarray(base), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_ssd_mixed_precision_close(rng):
     """Perf-knob safety: mixed-precision SSD stays within bf16 tolerance."""
     cfg = get_config("mamba2-1.3b").reduced(dtype="bfloat16")

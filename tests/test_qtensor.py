@@ -1,0 +1,181 @@
+"""QTensor: the one quantized-weight representation (calibrate->pack->serve).
+
+The load-bearing invariant is **single rounding**: the packed codes a
+deployed model serves are exactly the codes the calibration loss optimized —
+``quantize_codes(w).dequantize()`` is bit-identical to
+``fake_quant_weight(w)``, LWC clips included, and
+``finalize_block(deploy="packed")`` preserves that through every transform
+site. Before this representation the serving path re-quantized fake-quant
+floats from scratch (a second rounding + discarded LWC grid).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.calibration import (CalibConfig, _masks, _specs_from,
+                                    effective_weights, finalize_block,
+                                    init_block_quant_params)
+from repro.core.qtensor import QTensor, tree_has_qtensor
+from repro.core.quantizer import (QuantConfig, fake_quant_weight,
+                                  init_lwc_params, quantize_codes)
+from repro.core.sites import quantized_weights
+from repro.kernels import ops, ref
+from repro.models import transformer
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("group", [0, 16])
+@pytest.mark.parametrize("lwc", [False, True])
+def test_quantize_codes_bit_identical_to_fake_quant(bits, group, lwc):
+    """Single-rounding invariant: dequantize(codes) == fake-quant, exactly."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 40), jnp.float32)
+    cfg = QuantConfig(w_bits=bits, group_size=group, lwc=lwc)
+    lp = None
+    if lwc:
+        lp = init_lwc_params(w.shape, group)
+        lp = jax.tree_util.tree_map(
+            lambda x: x + 0.7 * jax.random.normal(jax.random.PRNGKey(1),
+                                                  x.shape), lp)
+    fq = fake_quant_weight(w, cfg, lp)
+    qt = quantize_codes(w, cfg, lp)
+    assert qt.bits == bits
+    assert qt.shape == w.shape
+    assert np.array_equal(np.asarray(qt.dequantize(w.dtype)), np.asarray(fq))
+    # codes actually live on the advertised grid
+    codes = np.asarray(qt.codes())
+    assert codes.max() <= 2 ** bits - 1
+
+
+@pytest.mark.slow
+def test_quantize_codes_expert_stacked():
+    w = jax.random.normal(jax.random.PRNGKey(2), (3, 64, 24), jnp.float32)
+    cfg = QuantConfig(w_bits=4, group_size=16)
+    qt = quantize_codes(w, cfg)
+    assert qt.shape == w.shape
+    fq = jax.vmap(lambda wi: fake_quant_weight(wi, cfg))(w)
+    assert np.array_equal(np.asarray(qt.dequantize()), np.asarray(fq))
+
+
+def test_qtensor_is_a_pytree():
+    """jit / tree_map / layer-stacking must treat bits/group as static."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 16), jnp.float32)
+    qt = quantize_codes(w, QuantConfig(w_bits=4, group_size=16))
+    assert tree_has_qtensor({"layers": {"wq": qt}})
+    qt2 = jax.tree_util.tree_map(lambda x: x, qt)
+    assert isinstance(qt2, QTensor) and qt2.bits == 4
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), qt, qt)
+    assert stacked.packed.shape[0] == 2
+
+    @jax.jit
+    def f(q):
+        return q.dequantize().sum()
+    assert np.isfinite(float(f(qt)))
+
+
+def test_ops_dequant_matmul_accepts_qtensor():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64, 32), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 64), jnp.float32)
+    qt = quantize_codes(w, QuantConfig(w_bits=4, group_size=16))
+    y_qt = ops.dequant_matmul(x, qt, mode="ref")
+    y_raw = ref.dequant_matmul_ref(x, qt.packed, qt.scale, qt.zp, bits=4,
+                                   group_size=16)
+    np.testing.assert_array_equal(np.asarray(y_qt), np.asarray(y_raw))
+
+
+def _perturbed_block_qp(cfg, qcfg, ccfg, bp, seed=0):
+    """Quant params with non-trivial affine/LWC values (no optimization)."""
+    qp = init_block_quant_params(bp, cfg, qcfg, ccfg)
+    key = jax.random.PRNGKey(seed)
+
+    def jitter(x):
+        nonlocal key
+        key, k = jax.random.split(key)
+        return x + 0.05 * jax.random.normal(k, x.shape, x.dtype)
+
+    qp["affine"] = jax.tree_util.tree_map(jitter, qp["affine"])
+    qp["lwc"] = jax.tree_util.tree_map(jitter, qp["lwc"])
+    return qp
+
+
+@pytest.mark.slow
+def test_finalize_packed_single_rounding():
+    """finalize_block(deploy="packed") codes == the fake-quant grid exactly.
+
+    For every quantized linear the QTensor must dequantize to the very
+    tensor ``effective_weights`` (what the calibration loss saw) produces —
+    one quantization, zero re-quantization drift through the transform
+    merges.
+    """
+    cfg = get_config("llama-micro")
+    qcfg = QuantConfig(w_bits=4, a_bits=16, group_size=32)
+    ccfg = CalibConfig(epochs=2)
+    bp = transformer.init_block(jax.random.PRNGKey(0), cfg,
+                                jnp.dtype(cfg.dtype))
+    qp = _perturbed_block_qp(cfg, qcfg, ccfg, bp)
+    masks = _masks(cfg, _specs_from(qp), ccfg.epochs, ccfg)
+    ws = effective_weights(bp, qp, cfg, qcfg, ccfg, masks)
+
+    packed_bp = finalize_block(bp, qp, cfg, qcfg, ccfg, deploy="packed")
+    for name in quantized_weights(cfg):
+        node = packed_bp
+        for part in name.split("/"):
+            node = node[part]
+        assert isinstance(node, QTensor), name
+        assert np.array_equal(np.asarray(node.dequantize(jnp.float32)),
+                              np.asarray(ws[name].astype(jnp.float32))), name
+    # weight-only llama uses full after-norm sites: the activation factor
+    # must be kept (explicitly) rather than silently dropped
+    assert "attn_t" in packed_bp and "a_inv" in packed_bp["attn_t"]
+    assert "mlp_t" in packed_bp
+
+
+def test_finalize_rejects_unknown_deploy():
+    cfg = get_config("llama-micro")
+    qcfg = QuantConfig(w_bits=4, a_bits=16, group_size=32)
+    ccfg = CalibConfig(epochs=1)
+    bp = transformer.init_block(jax.random.PRNGKey(0), cfg,
+                                jnp.dtype(cfg.dtype))
+    qp = init_block_quant_params(bp, cfg, qcfg, ccfg)
+    with pytest.raises(ValueError):
+        finalize_block(bp, qp, cfg, qcfg, ccfg, deploy="int4")
+
+
+@pytest.mark.slow
+def test_calibrated_packed_pipeline_matches_fake_deploy():
+    """calibrate -> finalize(packed) serves the SAME math as the fake-quant
+    deployment (inv(A) association order is the only difference, ~1e-6)."""
+    from repro.core.calibration import quantize_dense_model
+    from repro.data import MarkovCorpus
+    from repro.models import build_model
+    from repro.serve.quantized import QuantizedModel
+
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(w_bits=4, a_bits=16, group_size=32)
+    ccfg = CalibConfig(epochs=2)
+    corpus = MarkovCorpus(vocab=cfg.vocab_size, seed=0)
+    calib = jnp.asarray(corpus.sample(8, 16, seed=7))
+
+    fake, info = quantize_dense_model(params, cfg, qcfg, ccfg, calib,
+                                      log=False)
+    # one calibration, two deployments: finalize_model re-merges only
+    from repro.core.calibration import finalize_model
+    packed = finalize_model(params, info["block_qps"], cfg, qcfg, ccfg,
+                            deploy="packed")
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+    toks = jnp.asarray(corpus.sample(2, 10, seed=9))
+    lg_f, cache_f = model.prefill(fake, {"tokens": toks}, max_len=24)
+    lg_p, cache_p = qm.prefill(packed, {"tokens": toks}, max_len=24)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_f),
+                               rtol=1e-4, atol=1e-4)
+    tok = jnp.argmax(lg_p[:, -1:], -1).astype(jnp.int32)
+    dg_f, _ = model.decode_step(fake, tok, cache_f)
+    dg_p, _ = qm.decode_step(packed, tok, cache_p)
+    np.testing.assert_allclose(np.asarray(dg_p), np.asarray(dg_f),
+                               rtol=1e-4, atol=1e-4)

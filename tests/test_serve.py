@@ -19,6 +19,7 @@ def model_and_params():
     return cfg, model, model.init(jax.random.PRNGKey(0))
 
 
+@pytest.mark.slow
 def test_engine_completes_all_requests(model_and_params):
     cfg, model, params = model_and_params
     eng = Engine(model, params, ServeConfig(max_batch=2, max_len=64,
@@ -32,6 +33,7 @@ def test_engine_completes_all_requests(model_and_params):
     assert all(len(r.out_tokens) == 8 for r in done)
 
 
+@pytest.mark.slow
 def test_engine_matches_manual_decode(model_and_params):
     cfg, model, params = model_and_params
     prompt = np.arange(12) % cfg.vocab_size
@@ -51,6 +53,75 @@ def test_engine_matches_manual_decode(model_and_params):
     assert out == toks
 
 
+@pytest.mark.slow
+def test_engine_serves_quantized_model_end_to_end(model_and_params):
+    """The continuous-batching Engine runs prefill + decode entirely on
+    packed QTensor weights (no fp fallback).
+
+    Token agreement is checked against the fp serving graph evaluating the
+    SAME quantization grid (RTN fake-quant weights through the ordinary
+    Model): the packed path dequantizes to bit-identical floats, so greedy
+    tokens must agree. (Raw-fp agreement is not asserted: a random-init
+    miniature has near-tied logits, making fp-vs-quant argmax agreement
+    noise — the system-level fp comparison lives in
+    launch/serve.py --quantize --packed on a trained checkpoint.)
+    """
+    cfg, model, params = model_and_params
+    from repro.core.baselines import quantize_model_baseline
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False)
+    toks = jax.random.randint(jax.random.PRNGKey(11), (2, 10), 0,
+                              cfg.vocab_size)
+    fq = quantize_model_baseline(params, cfg, qcfg, toks, "rtn")
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+
+    scfg = ServeConfig(max_batch=2, max_len=64, max_new=8)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 9 + i) for i in range(4)]
+
+    def run(m, p):
+        eng = Engine(m, p, scfg)
+        for pr in prompts:
+            eng.submit(pr)
+        return [r.out_tokens for r in eng.run()]
+
+    fq_out = run(model, fq)
+    q_out = run(qm, packed)
+    assert all(len(t) == 8 for t in q_out)
+    agree = np.mean([np.mean(np.array(a) == np.array(b))
+                     for a, b in zip(fq_out, q_out)])
+    assert agree >= 0.9, agree  # same grid, same floats
+
+
+def test_quantized_prefill_matches_fp(model_and_params):
+    """Batched packed prefill (ragged-M dequant matmuls) vs fp prefill."""
+    cfg, model, params = model_and_params
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0,
+                              cfg.vocab_size)
+    lg_fp, cache_fp = model.prefill(params, {"tokens": toks}, max_len=32)
+    lg_q, cache_q = qm.prefill(packed, {"tokens": toks}, max_len=32)
+    assert cache_q["k"].shape == cache_fp["k"].shape
+    np.testing.assert_array_equal(np.asarray(cache_q["len"]),
+                                  np.asarray(cache_fp["len"]))
+    np.testing.assert_allclose(np.asarray(lg_q), np.asarray(lg_fp),
+                               rtol=0.05, atol=0.05)
+
+
+def test_quantize_lm_packed_passthrough_is_identity(model_and_params):
+    """A tree that already holds QTensor leaves is NOT re-quantized."""
+    cfg, _, params = model_and_params
+    qcfg = QuantConfig(w_bits=4, a_bits=16, group_size=32)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    from repro.core.qtensor import QTensor, tree_has_qtensor
+    assert tree_has_qtensor(packed)
+    assert isinstance(packed["layers"]["wq"], QTensor)
+    assert quantize_lm_packed(packed, cfg, qcfg) is packed
+
+
+@pytest.mark.slow
 def test_packed_serving_matches_fake_quant(model_and_params):
     cfg, model, params = model_and_params
     from repro.core.baselines import quantize_model_baseline
@@ -77,6 +148,7 @@ def test_packed_weights_are_smaller(model_and_params):
         assert tree_bytes(params) / tree_bytes(packed) > ratio
 
 
+@pytest.mark.slow
 def test_packed_interpret_kernel_path(model_and_params):
     """The Pallas kernel (interpret) and ref math agree end-to-end."""
     cfg, model, params = model_and_params

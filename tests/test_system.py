@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.core.baselines import quantize_model_baseline
 from repro.core.calibration import CalibConfig, quantize_dense_model
