@@ -46,6 +46,20 @@ def run():
     _, us = common.timed(fn, x)
     rows.append(("kernel/w8a8_matmul", us,
                  f"weight_bytes={K * N};int8_mxu_rate=2x_bf16"))
+
+    # fused weight-activation path on packed sub-byte codes (QTensor)
+    from repro.core.qtensor import QTensor
+    for bits, a_bits in ((4, 8), (4, 4), (8, 8)):
+        packed, scale, zp = ref.quantize_pack_ref(w, bits=bits, group_size=G)
+        qt = QTensor(packed, scale, zp, bits, G)
+        fn = jax.jit(lambda a, q=qt, ab=a_bits: ops.quant_matmul(
+            a, q, a_bits=ab, mode="ref"))
+        y, us = common.timed(fn, x)
+        w_bytes = K * N * bits // 8 + 2 * (K // G) * N * 4
+        err = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        rows.append((f"kernel/quant_matmul_w{bits}a{a_bits}", us,
+                     f"weight_bytes={w_bytes};int8_mxu_rate=2x_bf16;"
+                     f"rel_err={err:.4f}"))
     rows += _decode_e2e()
     return rows
 
@@ -87,6 +101,28 @@ def _decode_e2e():
                      f"batch={batch};weight_bytes={wb};"
                      f"compression_vs_fp32={tree_bytes(params) / wb:.2f}x;"
                      f"cpu_ref_overhead={us_q / us_fp:.2f}x"))
+
+    # weight-activation decode: fused int-activation kernel path (w4a4 is
+    # the paper's Table 3 deployment; w8a8 the classic int8-serving point)
+    for w_bits, a_bits, kv_bits in ((4, 8, 16), (8, 8, 16), (4, 4, 16),
+                                    (4, 4, 8)):
+        qcfg = QuantConfig(w_bits=w_bits, a_bits=a_bits, group_size=64,
+                           kv_bits=kv_bits)
+        packed = quantize_lm_packed(params, cfg, qcfg)
+        qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+        q_cache = qm.init_cache(batch, 128)
+        q_step = jax.jit(qm.decode_step)
+        _, us_q = common.timed(q_step, packed, tok, q_cache)
+        wb = tree_bytes(packed)
+        extra = ""
+        if kv_bits < 16:
+            extra = (f";kv_cache_bytes={tree_bytes(q_cache)}"
+                     f";kv_compression={tree_bytes(cache) / tree_bytes(q_cache):.2f}x")
+        rows.append((f"serve/decode_packed_{qcfg.tag()}"
+                     + (f"kv{kv_bits}" if kv_bits < 16 else ""), us_q,
+                     f"batch={batch};weight_bytes={wb};"
+                     f"compression_vs_fp32={tree_bytes(params) / wb:.2f}x;"
+                     f"cpu_ref_overhead={us_q / us_fp:.2f}x" + extra))
     return rows
 
 

@@ -4,16 +4,20 @@
                                        w_q: (K, N) int8
                                        w_scale: (N,) f32 per-channel
 
-Two kernels:
+Three kernels:
   * ``int8_matmul``      — takes pre-quantized activations (x_q, x_scale);
   * ``w8a8_matmul``      — fuses the per-token max/scale/round prologue, so
                            activations stream HBM->VMEM once in bf16 and hit
-                           the MXU as int8 (v5e int8 path = 2x bf16 rate).
+                           the MXU as int8 (v5e int8 path = 2x bf16 rate);
+  * ``w4a8_matmul``      — the packed-QTensor weight-activation path: the
+                           same fused activation prologue, plus in-kernel
+                           unpack of sub-byte weight codes to int8 lanes and
+                           the per-group scale/zero-point epilogue.
 
-The w4a4 deployment (paper Table 3) uses this kernel too: int4 values live
-in int8 lanes on the MXU (no int4 datapath on v5e); the *memory* win comes
-from the packed weight storage, the *compute* win from the int8 MXU rate —
-see DESIGN.md §3 hardware adaptation.
+The w4a4 deployment (paper Table 3) uses these kernels too: int4 values
+live in int8 lanes on the MXU (no int4 datapath on v5e); the *memory* win
+comes from the packed weight storage, the *compute* win from the int8 MXU
+rate — see DESIGN.md §3 hardware adaptation.
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dequant_matmul import _unpack_block
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 512
 
@@ -131,3 +137,90 @@ def w8a8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w_q, ws2d)
+
+
+def _w4a8_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_ref, *, bits: int,
+                 a_bits: int, group: int, bk: int, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fused activation prologue: per-(token, K-slab) dynamic symmetric quant
+    # into int8 lanes (a_bits=4 uses the [-8, 7] sub-range of the lane)
+    xf = x_ref[...].astype(jnp.float32)
+    qmax = 2.0 ** (a_bits - 1) - 1.0
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-8)
+    a_scale = bound / qmax
+    x_q = jnp.clip(jnp.round(xf / a_scale), -qmax - 1.0, qmax
+                   ).astype(jnp.int8)
+
+    # unpack sub-byte codes and center by off = 2^(bits-1) so even 8-bit
+    # codes fit int8 lanes; the asymmetric zero-point becomes a per-group
+    # row-sum correction:  x_q (c - zp) = x_q (c - off) + rowsum(x_q)(off - zp)
+    off = 2 ** (bits - 1)
+    codes = _unpack_block(p_ref[...], bits, bk).astype(jnp.int32)
+    c8 = (codes - off).astype(jnp.int8)
+    scale = s_ref[...].astype(jnp.float32)        # (bk // group, bn)
+    zp = z_ref[...].astype(jnp.float32)
+    xq32 = x_q.astype(jnp.int32)
+    part = jnp.zeros_like(acc_ref)
+    for gi in range(bk // group):                 # static unroll over groups
+        sl = slice(gi * group, (gi + 1) * group)
+        dot = jax.lax.dot_general(
+            x_q[:, sl], c8[sl],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        rsum = jnp.sum(xq32[:, sl], axis=1, keepdims=True)
+        part += scale[gi][None, :] * (
+            dot.astype(jnp.float32)
+            + rsum.astype(jnp.float32) * (off - zp[gi])[None, :])
+    acc_ref[...] += part * a_scale
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "a_bits",
+                                             "bm", "bn", "bk", "interpret"))
+def w4a8_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                zp: jax.Array, *, bits: int, group_size: int,
+                a_bits: int = 8, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """Fused dynamic activation quant + packed sub-byte weight matmul.
+
+    x (M, K) float; packed (K // 8 * bits, N) uint8 codes; scale/zp
+    (K // group, N) float32 per-group affine grid (the QTensor fields).
+    Despite the name this is the general w{2,4,8}a{4,8} kernel — codes are
+    widened to int8 MXU lanes in-kernel whatever ``bits`` is.
+
+    With ``bk >= K`` the per-token activation scale spans the whole row and
+    the result is bit-identical to ``ref.quant_matmul_ref``; for ``bk < K``
+    each K-slab gets its own activation scale (error <= the whole-row
+    scheme, same argument as ``w8a8_matmul``).
+    """
+    m, k = x.shape
+    n = packed.shape[-1]
+    g = group_size if group_size else k
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % g == 0 and bk % 8 == 0, (bk, g)
+    rows_per_bk = bk // 8 * bits
+    sg = bk // g
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_w4a8_kernel, bits=bits, a_bits=a_bits, group=g,
+                          bk=bk, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((rows_per_bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((sg, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((sg, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scale, zp)

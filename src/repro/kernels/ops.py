@@ -103,6 +103,60 @@ def dequant_matmul(x, packed, scale=None, zp=None, *,
     return out.reshape(*lead, out.shape[-1])
 
 
+def quant_matmul(x, qt: QTensor, *, a_bits: int = 8, mode: Mode = "auto",
+                 **blocks):
+    """y = dyn_quant(x, a_bits) @ dequant(qt) — the W·A serving fast path.
+
+    ``qt`` must be a :class:`repro.core.qtensor.QTensor`; its static
+    bits/group_size select the in-kernel unpack layout. ``a_bits >= 16``
+    degrades to the weight-only :func:`dequant_matmul` path (fp
+    activations); ``a_bits < 16`` routes through the fused
+    :func:`repro.kernels.int8_matmul.w4a8_matmul` kernel (pallas /
+    interpret) or its ref oracle — activations are quantized per-token
+    inside the kernel, never materialized in int8 in HBM.
+
+    3-bit weights are a storage-only format (no in-kernel unpack): ref math.
+    """
+    if not isinstance(qt, QTensor):
+        raise TypeError("quant_matmul needs a QTensor weight; raw packed "
+                        "arrays go through dequant_matmul")
+    if a_bits >= 16:
+        return dequant_matmul(x, qt, mode=mode, **blocks)
+    if not 2 <= a_bits <= 8:
+        # quantized codes live in int8 lanes: 9..15 would wrap on the cast
+        raise ValueError(f"a_bits={a_bits} unsupported: use 2..8 (int8 "
+                         "lanes) or >= 16 (fp activations)")
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    impl = _resolve(mode)
+    if impl == "ref" or qt.bits == 3:
+        out = ref.quant_matmul_ref(x2, qt.packed, qt.scale, qt.zp,
+                                   bits=qt.bits, group_size=qt.group_size,
+                                   a_bits=a_bits)
+    else:
+        bm = blocks.pop("bm", i8.DEFAULT_BM)
+        m_pad, bm = _pick_bm(m, bm)
+        n = qt.packed.shape[-1]
+        g = qt.group_size or k          # 0 = per-channel: one K-wide group
+        bk = blocks.pop("bk", i8.DEFAULT_BK)
+        bn = blocks.pop("bn", i8.DEFAULT_BN)
+        # NOT _clamp_blocks: this path requires the strict bk % g == 0 (the
+        # kernel's scale/zp BlockSpec steps one group-slab per K block; the
+        # weight-only kernel also tolerates g % bk == 0, this one does not)
+        if k % bk != 0 or bk % g != 0:
+            bk = k   # single K block: fused act-quant matches per-token ref
+        if n % bn != 0:
+            bn = n
+        x_p = jnp.pad(x2, ((0, m_pad - m), (0, 0))) if m_pad != m else x2
+        out = i8.w4a8_matmul(x_p, qt.packed, qt.scale, qt.zp, bits=qt.bits,
+                             group_size=g, a_bits=a_bits, bm=bm, bn=bn,
+                             bk=bk, interpret=(impl == "interpret"))
+        out = out[:m]
+    return out.reshape(*lead, out.shape[-1])
+
+
 def w8a8_matmul(x, w_q, w_scale, *, mode: Mode = "auto", **blocks):
     """y = dyn_quant8(x) @ w_q * scales. x (..., K); returns (..., N)."""
     lead = x.shape[:-1]

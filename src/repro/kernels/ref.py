@@ -53,6 +53,50 @@ def w8a8_dynamic_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     return out.astype(out_dtype or x.dtype)
 
 
+def quant_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                     zp: jax.Array, *, bits: int, group_size: int,
+                     a_bits: int = 8, out_dtype=None) -> jax.Array:
+    """Fused weight+activation integer matmul oracle (the W·A serving path).
+
+    Activations get per-token dynamic symmetric ``a_bits`` quantization
+    (int8 lanes); packed per-group asymmetric weight codes are *centered*
+    by ``off = 2^(bits-1)`` so 8-bit codes also fit int8 lanes, and the
+    zero-point is folded into a per-group row-sum correction:
+
+        sum_k x_q (c - zp) = dot(x_q, c - off) + rowsum(x_q) * (off - zp)
+
+    The per-group float32 epilogue (scale multiply, sequential group
+    accumulation, final activation-scale multiply) mirrors the kernel's op
+    order exactly, so ``w4a8_matmul`` in interpret mode with ``bk >= K``
+    (one K block == whole-row activation scale) is bit-identical to this.
+    """
+    m, k = x.shape
+    n = packed.shape[-1]
+    xf = x.astype(jnp.float32)
+    qmax = 2.0 ** (a_bits - 1) - 1.0
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-8)
+    a_scale = bound / qmax
+    x_q = jnp.clip(jnp.round(xf / a_scale), -qmax - 1.0, qmax
+                   ).astype(jnp.int8)
+
+    off = 2 ** (bits - 1)
+    c8 = unpack(packed, bits, k).astype(jnp.int32) - off      # (K, N)
+    g = group_size if group_size else k
+    assert k % g == 0, (k, g)   # QTensor effective-group invariant
+    xq32 = x_q.astype(jnp.int32)
+    acc = jnp.zeros((m, n), jnp.float32)
+    for gi in range(k // g):
+        sl = slice(gi * g, (gi + 1) * g)
+        dot = jnp.dot(xq32[:, sl], c8[sl],
+                      preferred_element_type=jnp.int32)
+        rsum = jnp.sum(xq32[:, sl], axis=1, keepdims=True)
+        acc = acc + scale[gi][None, :] * (
+            dot.astype(jnp.float32)
+            + rsum.astype(jnp.float32) * (off - zp[gi])[None, :])
+    out = acc * a_scale
+    return out.astype(out_dtype or x.dtype)
+
+
 def quantize_pack_ref(w: jax.Array, *, bits: int, group_size: int
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-group asymmetric quantize + pack. w (K, N) float.

@@ -116,6 +116,12 @@ VARIANTS = {
     "w4_packed": {"quantized": 4, "rules": {"fsdp_embed": None}},
     "w4_packed_kv8": {"quantized": 4, "rules": {"fsdp_embed": None},
                       "cfg": {"dtype": "bfloat16"}, "kv_bits": 8},
+    # weight-activation serving (paper Table 3 deployment point)
+    "w4a8_packed": {"quantized": 4, "a_bits": 8,
+                    "rules": {"fsdp_embed": None}},
+    "w4a4_packed_kv8": {"quantized": 4, "a_bits": 4, "kv_bits": 8,
+                        "rules": {"fsdp_embed": None},
+                        "cfg": {"dtype": "bfloat16"}},
 }
 
 
@@ -141,6 +147,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if vspec.get("quantized"):
         return _lower_quantized_decode(cfg, sc, mesh, rules, chips, variant,
                                        bits=vspec["quantized"],
+                                       a_bits=vspec.get("a_bits", 16),
                                        kv_bits=vspec.get("kv_bits", 16))
 
     with sharding.use_mesh(mesh, rules):
@@ -211,14 +218,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def _lower_quantized_decode(cfg, sc, mesh, rules, chips, variant, *,
-                            bits: int, kv_bits: int = 16):
+                            bits: int, a_bits: int = 16, kv_bits: int = 16):
     """AffineQuant deployment cell: packed int weights, TP-only resident
     (no FSDP gathers), reference dequant math (lowerable on CPU; the Pallas
-    kernel replaces it 1:1 on TPU)."""
+    kernel replaces it 1:1 on TPU). ``a_bits < 16`` lowers the fused
+    weight-activation path; ``kv_bits < 16`` the int8-coded KV cache —
+    both native ``QuantizedModel`` features, no spec stubbing needed."""
     from repro.core.quantizer import QuantConfig
     from repro.serve.quantized import QuantizedModel, quantize_lm_packed
 
-    qcfg = QuantConfig(w_bits=bits, a_bits=16, group_size=128,
+    qcfg = QuantConfig(w_bits=bits, a_bits=a_bits, group_size=128,
                        kv_bits=kv_bits)
     qmodel = QuantizedModel(cfg, qcfg, kernel_mode="ref")
     base = build_model(cfg)
@@ -230,33 +239,13 @@ def _lower_quantized_decode(cfg, sc, mesh, rules, chips, variant, *,
         params_sh = shardings_for(qmodel.param_logical_axes(), params_shapes,
                                   mesh, rules)
         cache_specs = qmodel.cache_specs(sc.global_batch, sc.seq_len)
-        if kv_bits < 16:
-            # int8 KV cache: same shapes, int8 container + f32 scales stub
-            cache_specs = {k: (jax.ShapeDtypeStruct(v.shape, jnp.int8)
-                               if k in ("k", "v") else v)
-                           for k, v in cache_specs.items()}
         cache_axes = qmodel.cache_logical_axes(cache_specs)
         cache_sh = shardings_for(cache_axes, cache_specs, mesh, rules)
         token_specs = jax.ShapeDtypeStruct((sc.global_batch, 1), jnp.int32)
         token_sh = NamedSharding(
             mesh, sharding.resolve_spec(["batch", None], token_specs.shape,
                                         mesh, rules))
-
-        def serve_step(params, token, cache):
-            if kv_bits < 16:
-                # dequantize-on-read KV (per-tensor scale folded in attention)
-                cache = dict(cache)
-                cache["k"] = cache["k"].astype(jnp.bfloat16) * (1.0 / 127.0)
-                cache["v"] = cache["v"].astype(jnp.bfloat16) * (1.0 / 127.0)
-                logits, new_cache = qmodel.decode_step(params, token, cache)
-                new_cache["k"] = jnp.clip(jnp.round(
-                    new_cache["k"].astype(jnp.float32) * 127.0), -128, 127
-                    ).astype(jnp.int8)
-                new_cache["v"] = jnp.clip(jnp.round(
-                    new_cache["v"].astype(jnp.float32) * 127.0), -128, 127
-                    ).astype(jnp.int8)
-                return logits, new_cache
-            return qmodel.decode_step(params, token, cache)
+        serve_step = qmodel.decode_step
 
         jitted = jax.jit(serve_step,
                          in_shardings=(params_sh, token_sh, cache_sh),

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-mini \
         --ckpt checkpoints/llama-mini --requests 8 --max-new 16 \
-        [--quantize] [--packed]
+        [--quantize] [--packed] [--abits 8] [--kvbits 8]
 
 ``--quantize`` runs the prompts through the AffineQuant-calibrated model
 (fake-quant effective weights — identical serving graph) and reports the
@@ -14,6 +14,13 @@ QuantizedModel -> Engine. The decode path serves packed sub-byte codes
 quantized exactly once on the calibrated LWC grid (no fp-weight fallback),
 and the launcher reports token agreement vs fp plus the weight-memory
 compression.
+
+``--abits < 16`` serves the weight-activation path (paper Table 3; w4a4 via
+``--wbits 4 --abits 4``): every packed matmul routes through the fused
+dynamic-act-quant int kernel (``kernels.ops.quant_matmul``), with no
+fp-activation fallback in prefill or decode. ``--kvbits < 16`` additionally
+stores the KV cache as int8 codes + per-(token, head) scales; the launcher
+reports KV-cache memory alongside the weight memory.
 """
 from __future__ import annotations
 
@@ -47,6 +54,12 @@ def main(argv=None) -> int:
                     help="serve real packed QTensor weights (implies "
                          "--quantize): calibrate -> pack -> Engine")
     ap.add_argument("--wbits", type=int, default=4)
+    ap.add_argument("--abits", type=int, default=16,
+                    help="activation bits for the packed path (16 = fp "
+                         "activations; 8/4 = fused int-activation kernel)")
+    ap.add_argument("--kvbits", type=int, default=16,
+                    help="KV-cache bits for the packed path (16 = model "
+                         "dtype; 8/4 = int8-coded cache + per-token scales)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -88,7 +101,13 @@ def main(argv=None) -> int:
     fp_out = run(params, "fp")
 
     if args.quantize or args.packed:
-        qcfg = QuantConfig(w_bits=args.wbits, a_bits=16, group_size=64)
+        if not args.packed and (args.abits < 16 or args.kvbits < 16):
+            logger.warning("without --packed, --abits only changes the "
+                           "calibration objective (activation-aware sites/"
+                           "loss) — the --quantize simulation still SERVES "
+                           "fp activations — and --kvbits has no effect")
+        qcfg = QuantConfig(w_bits=args.wbits, a_bits=args.abits,
+                           group_size=64, kv_bits=args.kvbits)
         ccfg = CalibConfig(epochs=5)
         calib = jnp.asarray(corpus.sample(16, args.prompt_len, seed=777))
         qparams, cal_info = quantize_dense_model(
@@ -108,15 +127,30 @@ def main(argv=None) -> int:
                                      qcfg, ccfg, deploy="packed")
             pparams = quantize_lm_packed(pparams, cfg, qcfg)  # pass-through
             qmodel = QuantizedModel(cfg, qcfg)
-            p_out = run(pparams, f"affinequant-w{args.wbits}-packed", qmodel)
-            logger.info("greedy-token agreement fp vs packed: %.1f%%",
-                        100 * agreement(fp_out, p_out))
-            logger.info("greedy-token agreement quant vs packed: %.1f%%",
-                        100 * agreement(q_out, p_out))
+            tag = f"affinequant-{qcfg.tag()}-packed"
+            if args.abits < 16:
+                logger.info("decode matmul path: fused w%da%d int kernel "
+                            "(per-token dynamic activation quant, no "
+                            "fp-activation fallback)", args.wbits, args.abits)
+            p_out = run(pparams, tag, qmodel)
+            logger.info("greedy-token agreement fp vs packed-%s: %.1f%%",
+                        qcfg.tag(), 100 * agreement(fp_out, p_out))
+            logger.info("greedy-token agreement quant vs packed-%s: %.1f%%",
+                        qcfg.tag(), 100 * agreement(q_out, p_out))
             logger.info("weight memory: fp %.2f MiB -> packed %.2f MiB "
                         "(%.2fx)", tree_bytes(params) / 2**20,
                         tree_bytes(pparams) / 2**20,
                         tree_bytes(params) / tree_bytes(pparams))
+            if args.kvbits < 16:
+                # shape-only: report sizes without allocating either cache
+                fp_cache = build_model(cfg).cache_specs(args.max_batch,
+                                                        scfg.max_len)
+                q_cache = qmodel.cache_specs(args.max_batch, scfg.max_len)
+                logger.info("kv-cache memory (batch=%d, len=%d): fp %.2f MiB"
+                            " -> kv%d %.2f MiB (%.2fx)", args.max_batch,
+                            scfg.max_len, tree_bytes(fp_cache) / 2**20,
+                            args.kvbits, tree_bytes(q_cache) / 2**20,
+                            tree_bytes(fp_cache) / tree_bytes(q_cache))
     return 0
 
 

@@ -20,6 +20,16 @@ into a norm keep their activation-side factor as a small ``attn_t`` /
 ``mlp_t`` = {"a_inv", optional "shift"} applied after the norm; every large
 linear stays packed (no fp-weight fallback in the decode path).
 
+Weight-activation serving (``qcfg.a_bits < 16``, the paper's W4A4 Table 3
+setting): every packed matmul routes through ``kernels.ops.quant_matmul``,
+which fuses per-token dynamic activation quantization into the int-MXU
+kernel — activations hit the MXU as int8 lanes, never materialized in int8
+in HBM, and there is no fp-activation fallback in the decode path.
+``qcfg.kv_bits < 16`` additionally stores the KV cache as int8 codes with a
+per-(token, head) float32 scale (quantize-on-write in prefill and decode,
+dequantize-in-attention), cutting long-context decode cache memory ~2x
+(w4a4kv8 numbers in EXPERIMENTS.md §Perf).
+
 ``QuantizedModel`` exposes the same ``decode_step`` / ``prefill`` /
 ``init_cache`` interface as ``repro.models.Model`` so the continuous-
 batching ``Engine`` and the dry-run lower it unchanged.
@@ -105,6 +115,28 @@ def _act_transform(t: Optional[dict], h: jax.Array) -> jax.Array:
     return h @ t["a_inv"].astype(h.dtype)
 
 
+def _kv_quantize(x: jax.Array, kv_bits: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-(token, head) KV quantization into int8 lanes.
+
+    x (..., H, D) -> (codes int8 (..., H, D), scale f32 (..., H)).
+    ``kv_bits=4`` uses the [-8, 7] sub-range of the int8 container (the
+    storage win beyond int8 would need nibble packing of the cache — not
+    worth the unpack on the attention read path at current batch sizes).
+    """
+    xf = x.astype(jnp.float32)
+    qmax = 2.0 ** (kv_bits - 1) - 1.0
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
+    scale = bound / qmax
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -qmax - 1.0, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantizedModel:
     """Model-compatible wrapper serving QTensor trees (dense/MoE)."""
@@ -113,6 +145,12 @@ class QuantizedModel:
     kernel_mode: str = "auto"
 
     def __post_init__(self):
+        # int-lane widths only: 9..15 would wrap on the int8 cast
+        if self.qcfg.a_bits < 16 and not 2 <= self.qcfg.a_bits <= 8:
+            raise ValueError(f"a_bits={self.qcfg.a_bits}: use 2..8 or >= 16")
+        if self.qcfg.kv_bits < 16 and not 2 <= self.qcfg.kv_bits <= 8:
+            raise ValueError(f"kv_bits={self.qcfg.kv_bits}: use 2..8 or "
+                             ">= 16")
         if self.cfg.window:
             # the packed decode writes minimum(cur_len, s-1) and attends the
             # full cache — sliding-window ring-buffer semantics (see
@@ -121,14 +159,37 @@ class QuantizedModel:
                 "packed serving does not support sliding-window attention")
 
     def _mm(self, x: jax.Array, qt: QTensor) -> jax.Array:
+        if self.qcfg.a_bits < 16:
+            # W·A path: fused dynamic act-quant + int-MXU kernel — no
+            # fp-activation fallback anywhere in prefill or decode
+            return ops.quant_matmul(x, qt, a_bits=self.qcfg.a_bits,
+                                    mode=self.kernel_mode)
         return ops.dequant_matmul(x, qt, mode=self.kernel_mode)
 
-    # cache API identical to Model
+    @property
+    def _kv_quantized(self) -> bool:
+        return self.qcfg.kv_bits < 16
+
+    # cache API identical to Model (int8 codes + per-(token, head) scales
+    # when kv_bits < 16)
     def init_cache(self, batch: int, max_len: int) -> dict:
-        return build_model(self.cfg).init_cache(batch, max_len)
+        model = build_model(self.cfg)
+        if not self._kv_quantized:
+            return model.init_cache(batch, max_len)
+        # shape-only query — materializing the fp cache here would cost the
+        # very allocation the int8 cache exists to avoid
+        base = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+        kshape = base["k"].shape
+        return {"k": jnp.zeros(kshape, jnp.int8),
+                "v": jnp.zeros(kshape, jnp.int8),
+                "k_scale": jnp.zeros(kshape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(kshape[:-1], jnp.float32),
+                "len": jnp.zeros((batch,), jnp.int32)}
 
     def cache_specs(self, batch: int, max_len: int) -> dict:
-        return build_model(self.cfg).cache_specs(batch, max_len)
+        cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
 
     # ------------------------------------------------------------------
     # prefill (batched token matmuls; dequant_matmul handles ragged M)
@@ -156,10 +217,19 @@ class QuantizedModel:
         logits = x @ (head if head is not None else params["embed"].T)
         max_len = max(max_len, t)
         cache = self.init_cache(bsz, max_len)
+        length = jnp.full((bsz,), t, jnp.int32)
+        if self._kv_quantized:
+            kq, k_s = _kv_quantize(ks, self.qcfg.kv_bits)
+            vq, v_s = _kv_quantize(vs, self.qcfg.kv_bits)
+            return logits, {
+                "k": cache["k"].at[:, :, :t].set(kq),
+                "v": cache["v"].at[:, :, :t].set(vq),
+                "k_scale": cache["k_scale"].at[:, :, :t].set(k_s),
+                "v_scale": cache["v_scale"].at[:, :, :t].set(v_s),
+                "len": length}
         kc = cache["k"].at[:, :, :t].set(ks.astype(cache["k"].dtype))
         vc = cache["v"].at[:, :, :t].set(vs.astype(cache["v"].dtype))
-        return logits, {"k": kc, "v": vc,
-                        "len": jnp.full((bsz,), t, jnp.int32)}
+        return logits, {"k": kc, "v": vc, "len": length}
 
     def _block_prefill(self, p, x, positions):
         cfg = self.cfg
@@ -196,22 +266,30 @@ class QuantizedModel:
             pe = sinusoidal_at(cur_len, cfg.d_model)
             x = x + pe[:, None, :].astype(x.dtype)
 
+        if self._kv_quantized:
+            kv_in = (cache["k"], cache["v"],
+                     cache["k_scale"], cache["v_scale"])
+        else:
+            kv_in = (cache["k"], cache["v"])
+
         def body(h, xs):
-            lp, kc, vc = xs
-            h, kc, vc = self._block_decode(lp, h, kc, vc, cur_len)
-            return h, (kc, vc)
+            lp, kv = xs[0], xs[1:]
+            h, kv = self._block_decode(lp, h, kv, cur_len)
+            return h, kv
 
         if cfg.scan_layers:
-            x, (k_new, v_new) = jax.lax.scan(
-                body, x, (params["layers"], cache["k"], cache["v"]))
+            x, kv_new = jax.lax.scan(body, x, (params["layers"],) + kv_in)
         else:
             raise NotImplementedError("packed serving assumes scan layout")
         x = layers.apply_norm(params["ln_f"], x, cfg.norm)
         head = params.get("head")
         logits = x @ (head if head is not None else params["embed"].T)
-        return logits, {"k": k_new, "v": v_new, "len": cur_len + 1}
+        new_cache = {"k": kv_new[0], "v": kv_new[1], "len": cur_len + 1}
+        if self._kv_quantized:
+            new_cache["k_scale"], new_cache["v_scale"] = kv_new[2], kv_new[3]
+        return logits, new_cache
 
-    def _block_decode(self, p, x, k_cache, v_cache, cur_len):
+    def _block_decode(self, p, x, kv, cur_len):
         cfg = self.cfg
         h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
         h = _act_transform(p.get("attn_t"), h)
@@ -229,15 +307,31 @@ class QuantizedModel:
             pos = cur_len[:, None]
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             k = layers.apply_rope(k, pos, cfg.rope_theta)
-        s = k_cache.shape[1]
+        s = kv[0].shape[1]
         write_idx = jnp.minimum(cur_len, s - 1)
         bidx = jnp.arange(b)
-        k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
-        v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
-        out = attn_lib.decode_attention(q, k_cache, v_cache, cur_len + 1)
+        if len(kv) == 4:
+            # quantize-on-write, dequantize-in-attention (kv_bits < 16)
+            kc, vc, ksc, vsc = kv
+            kq, k_s = _kv_quantize(k[:, 0], self.qcfg.kv_bits)
+            vq, v_s = _kv_quantize(v[:, 0], self.qcfg.kv_bits)
+            kc = kc.at[bidx, write_idx].set(kq)
+            vc = vc.at[bidx, write_idx].set(vq)
+            ksc = ksc.at[bidx, write_idx].set(k_s)
+            vsc = vsc.at[bidx, write_idx].set(v_s)
+            k_all = _kv_dequantize(kc, ksc, x.dtype)
+            v_all = _kv_dequantize(vc, vsc, x.dtype)
+            kv = (kc, vc, ksc, vsc)
+        else:
+            kc, vc = kv
+            kc = kc.at[bidx, write_idx].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[bidx, write_idx].set(v[:, 0].astype(vc.dtype))
+            k_all, v_all = kc, vc
+            kv = (kc, vc)
+        out = attn_lib.decode_attention(q, k_all, v_all, cur_len + 1)
         x = x + self._mm(out.reshape(b, 1, -1), p["wo"])
         x = x + self._mlp(p, x)
-        return x, k_cache, v_cache
+        return x, kv
 
     # ------------------------------------------------------------------
     # shared mlp half (prefill + decode)
@@ -269,7 +363,11 @@ class QuantizedModel:
     def _moe_apply(self, mp, h2):
         """MoE on packed experts: the dense-dispatch capacity path of
         repro.models.moe dominates at decode batch sizes; expert weights are
-        dequantized from their (single-rounding) codes for the gather."""
+        dequantized from their (single-rounding) codes for the gather. This
+        is the one site that stays fp-activation even under a_bits < 16 —
+        routing a dynamic expert gather through the fused int kernel needs
+        per-expert block indexing (future work); dense models have no such
+        fallback."""
         cfg = self.cfg
         from repro.models import moe as moe_lib
         params = {"router": mp["router"],
@@ -330,4 +428,9 @@ class QuantizedModel:
         return axes
 
     def cache_logical_axes(self, cache_specs: dict) -> dict:
-        return build_model(self.cfg).cache_logical_axes(cache_specs)
+        axes = build_model(self.cfg).cache_logical_axes(cache_specs)
+        if "k_scale" in cache_specs:
+            # int8 KV cache: scales shadow the code tensors minus head_dim
+            axes["k_scale"] = ("layers", "batch", "kv_seq", None)
+            axes["v_scale"] = ("layers", "batch", "kv_seq", None)
+        return axes

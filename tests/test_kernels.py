@@ -1,12 +1,15 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quantizer import QuantConfig, quantize_codes
 from repro.kernels import ops, ref
 from repro.kernels.dequant_matmul import dequant_matmul
-from repro.kernels.int8_matmul import int8_matmul, w8a8_matmul
+from repro.kernels.int8_matmul import int8_matmul, w4a8_matmul, w8a8_matmul
 from repro.kernels.quantize_pack import quantize_pack
 
 
@@ -80,6 +83,148 @@ def test_w8a8_per_slab_error_bounded():
     y_slab = w8a8_matmul(x, wq, ws, bm=64, bn=64, bk=128, interpret=True)
     rel = float(jnp.linalg.norm(y_slab - y_fp) / jnp.linalg.norm(y_fp))
     assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# fused weight-activation kernel (w4a8_matmul) vs its oracle
+# ---------------------------------------------------------------------------
+
+_jref = jax.jit(ref.quant_matmul_ref,
+                static_argnames=("bits", "group_size", "a_bits", "out_dtype"))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("a_bits", [4, 8])
+@pytest.mark.parametrize("g", [32, 0])
+def test_w4a8_matmul_bit_identical_to_ref(bits, a_bits, g):
+    """bk >= K (one K block = whole-row activation scale): the fused kernel
+    in interpret mode must be BIT-IDENTICAL to the jitted oracle — same op
+    sequence, same XLA fusions."""
+    m, k, n = 64, 128, 64
+    key = jax.random.PRNGKey(bits * 100 + a_bits)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    packed, scale, zp = ref.quantize_pack_ref(w, bits=bits, group_size=g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    y_ref = _jref(x, packed, scale, zp, bits=bits, group_size=g,
+                  a_bits=a_bits)
+    y_ker = w4a8_matmul(x, packed, scale, zp, bits=bits, group_size=g,
+                        a_bits=a_bits, bm=64, bn=64, bk=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_ker), np.asarray(y_ref))
+
+
+def test_w4a8_close_to_dequant_matmul():
+    """The int-activation path approximates the fp-activation path to the
+    activation-quantization error (small for a8, larger for a4)."""
+    m, k, n, g = 64, 128, 64, 32
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    packed, scale, zp = ref.quantize_pack_ref(w, bits=4, group_size=g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    y_fp = ref.dequant_matmul_ref(x, packed, scale, zp, bits=4, group_size=g)
+    for a_bits, tol in ((8, 0.02), (4, 0.25)):
+        y = ref.quant_matmul_ref(x, packed, scale, zp, bits=4, group_size=g,
+                                 a_bits=a_bits)
+        rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < tol, (a_bits, rel)
+
+
+@pytest.mark.slow
+def test_w4a8_per_slab_error_bounded():
+    """bk < K uses per-K-slab activation scales (finer-grained than the
+    whole-row oracle): error vs the fp-activation product stays small."""
+    m, k, n, g = 64, 512, 64, 64
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    packed, scale, zp = ref.quantize_pack_ref(w, bits=4, group_size=g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    y_fp = ref.dequant_matmul_ref(x, packed, scale, zp, bits=4, group_size=g)
+    y = w4a8_matmul(x, packed, scale, zp, bits=4, group_size=g, a_bits=8,
+                    bm=64, bn=64, bk=128, interpret=True)
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize("a_bits", [4, 8])
+def test_quant_matmul_dispatch_ragged_batch(a_bits):
+    """Ragged M (non-multiple-of-block token counts) through the dispatcher:
+    interpret == ref bit-for-bit — per-token scales are padding-invariant."""
+    k, n, g = 128, 64, 32
+    key = jax.random.PRNGKey(21)
+    qt = quantize_codes(jax.random.normal(key, (k, n)),
+                        QuantConfig(w_bits=4, group_size=g, lwc=False))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 37, k))
+    run_ref = jax.jit(functools.partial(ops.quant_matmul, a_bits=a_bits,
+                                        mode="ref"))
+    run_int = jax.jit(functools.partial(ops.quant_matmul, a_bits=a_bits,
+                                        mode="interpret"))
+    y_ref = run_ref(x, qt)
+    y_int = run_int(x, qt)
+    assert y_ref.shape == (3, 37, n)
+    np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_ref))
+
+
+def test_w8a8_dispatch_ragged_batch():
+    """w8a8 (pre-quantized int8 weights) on ragged M: interpret vs ref."""
+    k, n = 128, 64
+    key = jax.random.PRNGKey(22)
+    wq = jax.random.randint(key, (k, n), -128, 128).astype(jnp.int8)
+    ws = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n,))) + 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 2), (37, k))
+    run_ref = jax.jit(functools.partial(ops.w8a8_matmul, mode="ref"))
+    run_int = jax.jit(functools.partial(ops.w8a8_matmul, mode="interpret"))
+    np.testing.assert_allclose(np.asarray(run_int(x, wq, ws)),
+                               np.asarray(run_ref(x, wq, ws)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quant_matmul_per_channel_group_zero():
+    """group_size=0 (per-channel, one K-wide group) through the interpret
+    path must not trip the block clamp, for any K % bk remainder."""
+    n = 64
+    for k in (128, 512):   # k < DEFAULT_BK and k == DEFAULT_BK
+        qt = quantize_codes(jax.random.normal(jax.random.PRNGKey(k), (k, n)),
+                            QuantConfig(w_bits=4, group_size=0, lwc=False))
+        qt = qt.__class__(qt.packed, qt.scale, qt.zp, qt.bits, 0)  # raw 0
+        x = jax.random.normal(jax.random.PRNGKey(k + 1), (8, k))
+        y = ops.quant_matmul(x, qt, a_bits=8, mode="interpret")
+        y_ref = ops.quant_matmul(x, qt, a_bits=8, mode="ref")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_rejects_unrepresentable_a_bits():
+    """a_bits in 9..15 would wrap on the int8 cast — must raise, not
+    silently corrupt."""
+    k, n = 128, 64
+    qt = quantize_codes(jax.random.normal(jax.random.PRNGKey(30), (k, n)),
+                        QuantConfig(w_bits=4, group_size=32, lwc=False))
+    x = jax.random.normal(jax.random.PRNGKey(31), (8, k))
+    with pytest.raises(ValueError, match="a_bits"):
+        ops.quant_matmul(x, qt, a_bits=12, mode="ref")
+
+
+def test_quant_matmul_a16_falls_back_to_dequant():
+    k, n, g = 128, 64, 32
+    qt = quantize_codes(jax.random.normal(jax.random.PRNGKey(23), (k, n)),
+                        QuantConfig(w_bits=4, group_size=g, lwc=False))
+    x = jax.random.normal(jax.random.PRNGKey(24), (8, k))
+    y = ops.quant_matmul(x, qt, a_bits=16, mode="ref")
+    y_dq = ops.dequant_matmul(x, qt, mode="ref")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_dq))
+
+
+def test_quant_matmul_bits3_falls_back_to_ref_math():
+    """3-bit is a storage-only format: the dispatcher must not try the
+    in-kernel unpack even in interpret mode."""
+    k, n = 128, 64
+    qt = quantize_codes(jax.random.normal(jax.random.PRNGKey(25), (k, n)),
+                        QuantConfig(w_bits=3, group_size=0, lwc=False))
+    x = jax.random.normal(jax.random.PRNGKey(26), (8, k))
+    y = ops.quant_matmul(x, qt, a_bits=8, mode="interpret")
+    y_ref = ref.quant_matmul_ref(x, qt.packed, qt.scale, qt.zp, bits=3,
+                                 group_size=qt.group_size, a_bits=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_ops_dispatch_ragged_batch():

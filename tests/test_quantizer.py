@@ -89,6 +89,47 @@ def test_int8_activation_roundtrip():
     np.testing.assert_allclose(q * scale, x, atol=float(jnp.max(scale)))
 
 
+def test_int8_activation_roundtrip_tight():
+    """Symmetric per-token int8: codes stay in [-127, 127] (no -128 from
+    clipping — |x|/scale <= 127 by construction), per-element error is
+    bounded by scale/2, and re-quantizing the dequantized tensor moves no
+    code by more than one step."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (32, 48)) * 3.0
+    q, scale = quantize_activation_int8(x)
+    qn = np.asarray(q, np.int32)
+    assert qn.min() >= -127 and qn.max() <= 127
+    assert np.abs(qn).max(axis=-1).min() == 127  # row max hits full range
+    err = np.abs(np.asarray(q * scale) - np.asarray(x))
+    assert np.all(err <= np.asarray(scale) * 0.5 + 1e-7)
+    q2, _ = quantize_activation_int8(q * scale)
+    assert np.abs(np.asarray(q2, np.int32) - qn).max() <= 1
+
+
+def test_fake_quant_activation_asymmetric_branch():
+    """act_symmetric=False: per-token min/max affine grid. Error is bounded
+    by one step of the per-token range grid, and on shifted (all-positive)
+    data the asymmetric grid beats the symmetric one, which wastes half its
+    levels on the empty negative range."""
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (4, 16, 32))) + 5.0
+    cfg = QuantConfig(a_bits=4, act_symmetric=False)
+    dq = fake_quant_activation(x, cfg)
+    assert dq.dtype == x.dtype
+    rng = (jnp.max(x, axis=-1, keepdims=True)
+           - jnp.min(x, axis=-1, keepdims=True))
+    step = rng / (2 ** 4 - 1)
+    # one full step: half for value rounding, half for the rounded zero-point
+    assert bool(jnp.all(jnp.abs(dq - x) <= step + 1e-6))
+    sym = fake_quant_activation(x, QuantConfig(a_bits=4, act_symmetric=True))
+    mse_asym = float(jnp.mean(jnp.square(dq - x)))
+    mse_sym = float(jnp.mean(jnp.square(sym - x)))
+    assert mse_asym < mse_sym
+
+
+def test_fake_quant_activation_16bit_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 8))
+    assert fake_quant_activation(x, QuantConfig(a_bits=16)) is x
+
+
 def test_ste_gradient_identity():
     """STE: d/dw mean(Q(w)) == d/dw mean(w) away from clip boundaries."""
     w = _w(6, 32, 16) * 0.5

@@ -148,6 +148,102 @@ def test_packed_weights_are_smaller(model_and_params):
         assert tree_bytes(params) / tree_bytes(packed) > ratio
 
 
+# ---------------------------------------------------------------------------
+# weight-activation serving (a_bits < 16) and int8 KV cache (kv_bits < 16)
+# ---------------------------------------------------------------------------
+
+def test_quantized_model_rejects_unrepresentable_lane_widths(
+        model_and_params):
+    cfg, _, _ = model_and_params
+    with pytest.raises(ValueError, match="a_bits"):
+        QuantizedModel(cfg, QuantConfig(w_bits=4, a_bits=12))
+    with pytest.raises(ValueError, match="kv_bits"):
+        QuantizedModel(cfg, QuantConfig(w_bits=4, kv_bits=10))
+
+
+def test_a8_decode_routes_through_int_kernel(model_and_params):
+    """a_bits=8 serves through quant_matmul: the logits must DIFFER from the
+    fp-activation (a16) path on the same packed weights — proof there is no
+    fp-activation fallback — while staying close to it."""
+    cfg, _, params = model_and_params
+    qcfg16 = QuantConfig(w_bits=4, a_bits=16, group_size=32, lwc=False)
+    qcfg8 = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False)
+    packed = quantize_lm_packed(params, cfg, qcfg16)
+    cache = build_model(cfg).init_cache(2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    lg16, _ = QuantizedModel(cfg, qcfg16, "ref").decode_step(
+        packed, tok, cache)
+    lg8, _ = QuantizedModel(cfg, qcfg8, "ref").decode_step(packed, tok, cache)
+    assert not np.allclose(np.asarray(lg8), np.asarray(lg16), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(lg8), np.asarray(lg16),
+                               rtol=0.5, atol=0.5)
+
+
+@pytest.mark.parametrize("a_bits", [4, 8])
+def test_a_quant_decode_interpret_matches_ref(model_and_params, a_bits):
+    """The fused w4a8 kernel (interpret) and the ref oracle agree through a
+    full decode step — the end-to-end analog of the kernel parity tests."""
+    cfg, _, params = model_and_params
+    qcfg = QuantConfig(w_bits=4, a_bits=a_bits, group_size=32, lwc=False)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    cache = build_model(cfg).init_cache(2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    ref_lg, _ = jax.jit(QuantizedModel(cfg, qcfg, "ref").decode_step)(
+        packed, tok, cache)
+    ker_lg, _ = jax.jit(QuantizedModel(cfg, qcfg, "interpret").decode_step)(
+        packed, tok, cache)
+    np.testing.assert_allclose(np.asarray(ker_lg), np.asarray(ref_lg),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kv8_cache_quantize_on_write(model_and_params):
+    """kv_bits=8: prefill and decode write int8 codes + per-(token, head)
+    scales; the cache shrinks ~3.5x and decode logits stay close to the
+    fp-cache path."""
+    cfg, _, params = model_and_params
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=8)
+    qcfg_fp = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 10), 0,
+                              cfg.vocab_size)
+    qm = QuantizedModel(cfg, qcfg, "ref")
+    qm_fp = QuantizedModel(cfg, qcfg_fp, "ref")
+    lg, cache = qm.prefill(packed, {"tokens": toks}, max_len=32)
+    lg_fp, cache_fp = qm_fp.prefill(packed, {"tokens": toks}, max_len=32)
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].shape == cache["k"].shape[:-1]
+    assert tree_bytes(cache_fp) / tree_bytes(cache) > 3.0
+    # prefill logits identical: kv quant only affects the cache, not the
+    # prompt forward
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_fp),
+                               rtol=1e-5, atol=1e-5)
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    d, cache2 = jax.jit(qm.decode_step)(packed, tok, cache)
+    d_fp, _ = jax.jit(qm_fp.decode_step)(packed, tok, cache_fp)
+    assert cache2["k"].dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_fp),
+                               rtol=0.1, atol=0.1)
+
+
+@pytest.mark.slow
+def test_engine_serves_w4a8kv8_end_to_end(model_and_params):
+    """Continuous-batching Engine over the full W·A + int8-KV stack: every
+    request completes and the decode path never touches fp activations."""
+    cfg, _, params = model_and_params
+    qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
+                       kv_bits=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+    eng = Engine(qm, packed, ServeConfig(max_batch=2, max_len=64, max_new=8))
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, 9 + i))
+    done = eng.run()
+    assert len(done) == 4
+    assert all(len(r.out_tokens) == 8 for r in done)
+
+
 @pytest.mark.slow
 def test_packed_interpret_kernel_path(model_and_params):
     """The Pallas kernel (interpret) and ref math agree end-to-end."""
