@@ -5,8 +5,15 @@ On this CPU-only container the Pallas kernels execute in interpret mode
 (a) the XLA reference path wall-time, useful for relative comparisons across
 bit widths, and (b) the analytic HBM-bytes ratio, which IS the TPU-relevant
 quantity for the memory-bound serving path.
+
+Besides the CSV rows this suite writes ``benchmarks/artifacts/
+BENCH_decode.json`` — the machine-readable decode-perf trajectory (tokens/s
+and HBM-bytes/step per serving variant, plus the flash-decode cur_len
+scaling curve) tracked across PRs and uploaded as a CI artifact.
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +23,7 @@ from repro.kernels import ops, ref
 from benchmarks import common
 
 M, K, N, G = 256, 1024, 1024, 128
+BENCH_DECODE_JSON = common.ART / "BENCH_decode.json"
 
 
 def run():
@@ -60,7 +68,57 @@ def run():
         rows.append((f"kernel/quant_matmul_w{bits}a{a_bits}", us,
                      f"weight_bytes={w_bytes};int8_mxu_rate=2x_bf16;"
                      f"rel_err={err:.4f}"))
-    rows += _decode_e2e()
+    rows += _flash_decode_rows()
+    e2e_rows, bench_doc = _decode_e2e()
+    rows += e2e_rows
+    BENCH_DECODE_JSON.parent.mkdir(parents=True, exist_ok=True)
+    BENCH_DECODE_JSON.write_text(json.dumps(bench_doc, indent=2))
+    return rows
+
+
+def _kv_read_bytes(layers, batch, positions, hkv, d, kv_bits):
+    """HBM bytes one decode step streams from the KV cache (k + v).
+
+    ``kv_bits < 16``: int8 codes (d bytes/position/head) + one f32
+    per-(token, head) scale; otherwise f32 cache entries."""
+    per_pos = hkv * (d + 4) if kv_bits < 16 else hkv * d * 4
+    return 2 * layers * batch * positions * per_pos
+
+
+def _flash_decode_rows():
+    """Kernel-level flash-decode rows: HBM bytes bounded by cur_len.
+
+    The length-masked KV grid reads ceil(cur_len / block_kv) tiles per
+    sequence instead of the full max_len buffer; ``hbm_bytes_fused`` below
+    is that analytic quantity (the TPU-relevant one — CPU wall-times run
+    the tile-structured XLA reference, which computes masked tiles too)."""
+    b, hkv, g, d = 4, 8, 4, 64
+    s, bkv = 4096, 256
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (b, 1, hkv * g, d), jnp.float32)
+    kc = jax.random.randint(jax.random.fold_in(key, 1), (b, s, hkv, d),
+                            -127, 128).astype(jnp.int8)
+    vc = jax.random.randint(jax.random.fold_in(key, 2), (b, s, hkv, d),
+                            -127, 128).astype(jnp.int8)
+    ks = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3),
+                                   (b, s, hkv))) * 0.01 + 1e-3
+    vs = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4),
+                                   (b, s, hkv))) * 0.01 + 1e-3
+    kv = (kc, vc, ks, vs)
+    import functools
+    fn = jax.jit(functools.partial(ops.flash_decode, mode="ref",
+                                   block_kv=bkv))
+    full = _kv_read_bytes(1, b, s, hkv, d, 8)
+    rows = []
+    for cur in (256, 1024, 4096):
+        cur_len = jnp.full((b,), cur, jnp.int32)
+        _, us = common.timed(fn, q, kv, cur_len)
+        tiles = -(-cur // bkv)
+        fused = _kv_read_bytes(1, b, tiles * bkv, hkv, d, 8)
+        rows.append((f"kernel/flash_decode_kv8_cur{cur}", us,
+                     f"max_len={s};block_kv={bkv};hbm_bytes_fused={fused};"
+                     f"hbm_bytes_full_cache={full};"
+                     f"read_frac={fused / full:.4f}"))
     return rows
 
 
@@ -68,8 +126,9 @@ def _decode_e2e():
     """End-to-end decode step: fp model vs packed QTensor serving.
 
     CPU wall-times compare XLA fp matmuls against the reference dequant
-    math; the analytic weight-bytes ratio is the TPU-relevant quantity for
-    the memory-bound decode path (weights stream from HBM every step).
+    math; the analytic weight/KV-bytes are the TPU-relevant quantities for
+    the memory-bound decode path (weights + valid KV stream from HBM every
+    step). Returns (csv_rows, BENCH_decode.json document).
     """
     from repro.configs import get_config
     from repro.core.quantizer import QuantConfig
@@ -80,50 +139,94 @@ def _decode_e2e():
     cfg = get_config("llama-mini")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    batch = 8
-    cache = model.init_cache(batch, 128)
+    # cur=63 valid slots + the newly decoded token = 64 attended positions
+    # = exactly one 64-slot flash tile (half the 128-slot cache)
+    batch, max_len, cur = 8, 128, 63
+    hd = cfg.resolved_head_dim
+    cache = model.init_cache(batch, max_len)
+    cache["len"] = jnp.full((batch,), cur, jnp.int32)
     tok = jnp.zeros((batch, 1), jnp.int32)
 
-    rows = []
+    def kvb(kv_bits, positions):
+        return _kv_read_bytes(cfg.num_layers, batch, positions,
+                              cfg.num_kv_heads, hd, kv_bits)
+
+    rows, jrows = [], []
+
+    def record(name, us, wb, kv_bits, path, positions, extra=""):
+        toks = batch / us * 1e6
+        kv_read = kvb(kv_bits, positions)
+        jrows.append({"name": name, "us_per_call": round(us, 1),
+                      "tokens_per_s": round(toks, 1), "weight_bytes": wb,
+                      "kv_read_bytes_per_step": kv_read,
+                      "hbm_bytes_per_step": wb + kv_read,
+                      "attention_path": path, "kv_bits": kv_bits,
+                      "cur_len": cur, "max_len": max_len})
+        rows.append((f"serve/decode_{name}", us,
+                     f"batch={batch};weight_bytes={wb};"
+                     f"kv_read_bytes={kv_read};attention={path}" + extra))
+
     fp_step = jax.jit(model.decode_step)
-    (_, cache1), us_fp = common.timed(fp_step, params, tok, cache)
-    rows.append(("serve/decode_fp32", us_fp,
-                 f"batch={batch};weight_bytes={tree_bytes(params)}"))
+    _, us_fp = common.timed(fp_step, params, tok, cache)
+    record("fp32", us_fp, tree_bytes(params), 32, "decode_attention",
+           max_len)
 
     for bits in (4, 8):
         qcfg = QuantConfig(w_bits=bits, a_bits=16, group_size=64)
         packed = quantize_lm_packed(params, cfg, qcfg)
-        qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
-        q_step = jax.jit(qm.decode_step)
-        _, us_q = common.timed(q_step, packed, tok, cache)
+        # mode="auto" resolves to the portable decode_attention path on this
+        # host — the pre-flash baseline rows
+        qm = QuantizedModel(cfg, qcfg, kernel_mode="auto")
+        _, us_q = common.timed(jax.jit(qm.decode_step), packed, tok, cache)
         wb = tree_bytes(packed)
-        rows.append((f"serve/decode_packed_w{bits}", us_q,
-                     f"batch={batch};weight_bytes={wb};"
-                     f"compression_vs_fp32={tree_bytes(params) / wb:.2f}x;"
-                     f"cpu_ref_overhead={us_q / us_fp:.2f}x"))
+        record(f"packed_w{bits}", us_q, wb, 32, "decode_attention", max_len,
+               f";compression_vs_fp32={tree_bytes(params) / wb:.2f}x"
+               f";cpu_ref_overhead={us_q / us_fp:.2f}x")
 
     # weight-activation decode: fused int-activation kernel path (w4a4 is
-    # the paper's Table 3 deployment; w8a8 the classic int8-serving point)
-    for w_bits, a_bits, kv_bits in ((4, 8, 16), (8, 8, 16), (4, 4, 16),
-                                    (4, 4, 8)):
+    # the paper's Table 3 deployment; w8a8 the classic int8-serving point).
+    # kv8 rows run twice: decode_attention fallback (full-cache fp detour)
+    # vs the fused flash-decode path (length-bounded, cache read as stored).
+    flash_bkv = 64   # explicit tile size so the 128-slot miniature cache is
+    #                  NOT one clamped full-cache tile: kv bytes below are
+    #                  the ceil(cur_len/block_kv) tiles the step really reads
+    for w_bits, a_bits, kv_bits, flash in (
+            (4, 8, 16, False), (8, 8, 16, False), (4, 4, 16, False),
+            (4, 4, 8, False), (4, 4, 8, True)):
         qcfg = QuantConfig(w_bits=w_bits, a_bits=a_bits, group_size=64,
                            kv_bits=kv_bits)
         packed = quantize_lm_packed(params, cfg, qcfg)
-        qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
-        q_cache = qm.init_cache(batch, 128)
-        q_step = jax.jit(qm.decode_step)
-        _, us_q = common.timed(q_step, packed, tok, q_cache)
+        qm = QuantizedModel(cfg, qcfg,
+                            kernel_mode="ref" if flash else "auto",
+                            flash_block_kv=flash_bkv if flash else None)
+        q_cache = qm.init_cache(batch, max_len)
+        q_cache["len"] = jnp.full((batch,), cur, jnp.int32)
+        _, us_q = common.timed(jax.jit(qm.decode_step), packed, tok, q_cache)
         wb = tree_bytes(packed)
-        extra = ""
+        name = f"packed_{qcfg.tag()}" + (f"kv{kv_bits}" if kv_bits < 16
+                                         else "")
+        extra = f";cpu_ref_overhead={us_q / us_fp:.2f}x"
         if kv_bits < 16:
-            extra = (f";kv_cache_bytes={tree_bytes(q_cache)}"
-                     f";kv_compression={tree_bytes(cache) / tree_bytes(q_cache):.2f}x")
-        rows.append((f"serve/decode_packed_{qcfg.tag()}"
-                     + (f"kv{kv_bits}" if kv_bits < 16 else ""), us_q,
-                     f"batch={batch};weight_bytes={wb};"
-                     f"compression_vs_fp32={tree_bytes(params) / wb:.2f}x;"
-                     f"cpu_ref_overhead={us_q / us_fp:.2f}x" + extra))
-    return rows
+            extra += (f";kv_cache_bytes={tree_bytes(q_cache)}"
+                      f";kv_compression="
+                      f"{tree_bytes(cache) / tree_bytes(q_cache):.2f}x")
+        if flash:
+            read_pos = -(-(cur + 1) // flash_bkv) * flash_bkv
+            record(name + "_flash", us_q, wb, kv_bits, "flash_decode",
+                   read_pos, extra + f";block_kv={flash_bkv}")
+        else:
+            record(name, us_q, wb, kv_bits if kv_bits < 16 else 32,
+                   "decode_attention", max_len, extra)
+
+    doc = {"schema": 1, "bench": "decode_step", "arch": cfg.name,
+           "batch": batch, "max_len": max_len, "cur_len": cur,
+           "note": ("CPU-container wall-times (XLA reference math; NOT "
+                    "TPU-representative); weight/KV HBM bytes are analytic "
+                    "and ARE the TPU-relevant quantities. flash_decode rows "
+                    "read ceil(cur_len/block_kv) KV tiles as stored; "
+                    "decode_attention rows read the full max_len cache."),
+           "rows": jrows}
+    return rows, doc
 
 
 if __name__ == "__main__":

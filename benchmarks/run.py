@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only table1,...]
 
 Prints ``name,us_per_call,derived`` CSV (harness contract). Set
-``BENCH_FAST=1`` for a reduced-budget pass.
+``BENCH_FAST=1`` for a reduced-budget pass. The ``kernels`` suite also
+writes ``benchmarks/artifacts/BENCH_decode.json`` — the machine-readable
+decode-perf trajectory (tokens/s + HBM-bytes/step per serving variant,
+flash-decode cur_len scaling) that CI uploads per commit.
 """
 from __future__ import annotations
 

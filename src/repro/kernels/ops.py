@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
 from repro.kernels import dequant_matmul as dq
+from repro.kernels import flash_decode as fd
 from repro.kernels import int8_matmul as i8
 from repro.kernels import quantize_pack as qp
 from repro.kernels import ref
@@ -175,6 +176,74 @@ def w8a8_matmul(x, w_q, w_scale, *, mode: Mode = "auto", **blocks):
                              interpret=(impl == "interpret"), **blocks)
         out = out[:m]
     return out.reshape(*lead, out.shape[-1])
+
+
+def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
+                 mode: Mode = "auto"):
+    """One-token decode attention over the KV cache **as stored**.
+
+    q (B, 1, Hq, D); ``kv`` is the cache tuple exactly as the serving model
+    carries it — ``(k, v)`` fp, or ``(k, v, k_scale, v_scale)`` int8 codes
+    (B, S, Hkv, D) + per-(token, head) f32 scales (B, S, Hkv). ``cur_len``
+    (B,) int32 counts valid positions (the just-written token included).
+    Returns (B, 1, Hq, D) in q.dtype.
+
+    Modes: ``pallas``/``interpret`` run the fused
+    :func:`repro.kernels.flash_decode.flash_decode` kernel — per-tile
+    in-register dequant, length-masked KV grid, no full-cache fp
+    materialization. ``ref`` runs :func:`repro.kernels.ref.flash_decode_ref`,
+    the tile-mirroring oracle (bit-identical to interpret mode under jit;
+    still tile-at-a-time, so it also never materializes the full fp cache).
+    ``auto`` compiles the kernel on TPU and otherwise falls back to the
+    portable :func:`repro.models.attention.decode_attention` XLA path —
+    the one place the quantized cache is dequantized in full (CPU/GPU only;
+    the fused path exists to avoid exactly that on TPU).
+
+    ``block_kv`` defaults to ``flash_decode.DEFAULT_BLOCK_KV`` and is
+    clamped to a single tile whenever S is not a block multiple (miniature
+    configs); head_dim needs no clamping — it is the innermost (lane)
+    dimension at any size.
+    """
+    if len(kv) == 4:
+        k, v, k_scale, v_scale = kv
+    elif len(kv) == 2:
+        (k, v), k_scale, v_scale = kv, None, None
+    else:
+        raise TypeError(f"kv must be (k, v) or (k, v, k_scale, v_scale), "
+                        f"got {len(kv)} entries")
+    b, t, hq, d = q.shape
+    if t != 1:
+        raise ValueError(f"flash_decode is a one-token decode kernel; got "
+                         f"T={t}")
+    s, hkv = k.shape[1], k.shape[2]
+    # auto off-TPU falls back to XLA decode_attention, NOT the tile oracle:
+    # the oracle is the test contract, the fallback is the fast portable path
+    impl = ("pallas" if _backend() == "tpu" else "xla") if mode == "auto" \
+        else mode
+    if impl == "xla":
+        from repro.models import attention as attn_lib
+        if k_scale is not None:
+            k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
+            v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
+        out = attn_lib.decode_attention(q, k.astype(q.dtype),
+                                        v.astype(q.dtype), cur_len,
+                                        scale=scale)
+        # fused-path contract: zero-length rows return zeros (an all-masked
+        # softmax would otherwise emit the uniform mean of the slots)
+        return jnp.where((cur_len > 0)[:, None, None, None], out,
+                         jnp.zeros_like(out))
+    bkv = block_kv or fd.DEFAULT_BLOCK_KV
+    if bkv > s or s % bkv != 0:
+        bkv = s              # single tile (miniature / ragged max_len)
+    q4 = q.reshape(b, hkv, hq // hkv, d)
+    if impl == "ref":
+        out = ref.flash_decode_ref(q4, k, v, cur_len, k_scale, v_scale,
+                                   scale=scale, block_kv=bkv)
+    else:
+        out = fd.flash_decode(q4, k, v, cur_len, k_scale, v_scale,
+                              scale=scale, block_kv=bkv,
+                              interpret=(impl == "interpret"))
+    return out.reshape(b, 1, hq, d)
 
 
 def quantize_pack(w, *, bits: int, group_size: int, mode: Mode = "auto",

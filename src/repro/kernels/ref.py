@@ -97,6 +97,58 @@ def quant_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
     return out.astype(out_dtype or x.dtype)
 
 
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cur_len: jax.Array, k_scale=None, v_scale=None, *,
+                     scale=None, block_kv: int = 128,
+                     out_dtype=None) -> jax.Array:
+    """Tile-structured flash-decode oracle (the fused kernel's contract).
+
+    q (B, Hkv, G, D); k/v (B, S, Hkv, D) — int8 codes when ``k_scale`` /
+    ``v_scale`` (B, S, Hkv) f32 are given, fp otherwise; cur_len (B,) valid
+    positions. Mirrors ``flash_decode.flash_decode`` op-for-op: the same
+    per-tile dequant → scores → mask → online-softmax update sequence, with
+    masked (``jnp.where``) state updates standing in for the kernel's
+    predicated tiles — so the kernel in interpret mode is BIT-IDENTICAL to
+    this under jit. Positions ``>= cur_len[b]`` are masked; a zero-length
+    row returns zeros. Unlike the kernel this materializes only one
+    (B, block_kv, Hkv, D) fp tile at a time — never the full cache.
+    """
+    bsz, hkv, g, d = q.shape
+    s = k.shape[1]
+    assert s % block_kv == 0, (s, block_kv)
+    n_tiles = s // block_kv
+    scale = scale if scale is not None else d ** -0.5
+    cur = cur_len.astype(jnp.int32)[:, None, None, None]
+    qf = q.astype(jnp.float32)
+    m = jnp.full((bsz, hkv, g, 1), -1e30, jnp.float32)
+    l = jnp.zeros((bsz, hkv, g, 1), jnp.float32)
+    acc = jnp.zeros((bsz, hkv, g, d), jnp.float32)
+    for t in range(n_tiles):
+        sl = slice(t * block_kv, (t + 1) * block_kv)
+        kt = k[:, sl].astype(jnp.float32)
+        vt = v[:, sl].astype(jnp.float32)
+        if k_scale is not None:
+            kt = kt * k_scale[:, sl][..., None]
+            vt = vt * v_scale[:, sl][..., None]
+        sc = jnp.einsum("bhgd,bkhd->bhgk", qf, kt,
+                        preferred_element_type=jnp.float32) * scale
+        pos = t * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        sc = jnp.where(pos[None, None] < cur, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhgk,bkhd->bhgd", p, vt, preferred_element_type=jnp.float32)
+        live = t * block_kv < cur
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(out_dtype or q.dtype)
+
+
 def quantize_pack_ref(w: jax.Array, *, bits: int, group_size: int
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-group asymmetric quantize + pack. w (K, N) float.

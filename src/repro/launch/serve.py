@@ -19,8 +19,16 @@ compression.
 ``--wbits 4 --abits 4``): every packed matmul routes through the fused
 dynamic-act-quant int kernel (``kernels.ops.quant_matmul``), with no
 fp-activation fallback in prefill or decode. ``--kvbits < 16`` additionally
-stores the KV cache as int8 codes + per-(token, head) scales; the launcher
-reports KV-cache memory alongside the weight memory.
+stores the KV cache as int8 codes + per-(token, head) scales; decode
+attention reads that cache as stored through ``kernels.ops.flash_decode``
+(in-register tile dequant, length-bounded KV grid — DESIGN.md §8), and the
+launcher reports KV-cache memory alongside the weight memory.
+
+``--kernel-mode`` picks the kernel dispatch for the packed path: ``auto``
+(default) compiles Pallas on TPU and falls back to the portable XLA paths
+here; ``ref`` forces the tile-structured reference math (the flash-decode
+lowering without a TPU); ``interpret`` executes the Pallas kernel bodies in
+Python (slow — parity checks only).
 """
 from __future__ import annotations
 
@@ -60,6 +68,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kvbits", type=int, default=16,
                     help="KV-cache bits for the packed path (16 = model "
                          "dtype; 8/4 = int8-coded cache + per-token scales)")
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="kernel dispatch for the packed path (see module "
+                         "docstring)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -126,12 +138,21 @@ def main(argv=None) -> int:
             pparams = finalize_model(params, cal_info["block_qps"], cfg,
                                      qcfg, ccfg, deploy="packed")
             pparams = quantize_lm_packed(pparams, cfg, qcfg)  # pass-through
-            qmodel = QuantizedModel(cfg, qcfg)
+            qmodel = QuantizedModel(cfg, qcfg, kernel_mode=args.kernel_mode)
             tag = f"affinequant-{qcfg.tag()}-packed"
             if args.abits < 16:
                 logger.info("decode matmul path: fused w%da%d int kernel "
                             "(per-token dynamic activation quant, no "
                             "fp-activation fallback)", args.wbits, args.abits)
+            on_tpu = jax.default_backend() == "tpu"
+            flash = (args.kernel_mode in ("pallas", "interpret", "ref")
+                     or (args.kernel_mode == "auto" and on_tpu))
+            logger.info(
+                "decode attention path: %s over the %s KV cache",
+                "fused flash-decode (in-register tile dequant, "
+                "length-bounded KV grid)" if flash
+                else "portable decode_attention fallback (full-cache read)",
+                f"int{args.kvbits}-coded" if args.kvbits < 16 else "fp")
             p_out = run(pparams, tag, qmodel)
             logger.info("greedy-token agreement fp vs packed-%s: %.1f%%",
                         qcfg.tag(), 100 * agreement(fp_out, p_out))

@@ -48,7 +48,9 @@ def _pin(x, mode: str, seq_axis: int = -1):
 def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
                window: int, prefix_len: int) -> jax.Array:
     """(Tq, Skv) additive mask. window>0 = sliding window (causal);
-    prefix_len>0 = prefix-LM (bidirectional over the first prefix_len)."""
+    prefix_len>0 = prefix-LM (bidirectional over the first prefix_len).
+    Positions may be static (dense path) or traced (chunked path) — the
+    math is pure jnp either way; both paths share this one helper."""
     ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
     if causal:
         c = q_pos[:, None] >= kv_pos[None, :]
@@ -124,7 +126,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             kv_pos = kv_idx * block_kv + jnp.arange(block_kv)
             sc = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
                             preferred_element_type=jnp.float32) * scale
-            bias = _mask_bias_dyn(q_pos, kv_pos, causal, window, prefix_len)
+            bias = _mask_bias(q_pos, kv_pos, causal, window, prefix_len)
             sc = sc + bias
             m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
             p = jnp.exp(sc - m_new[..., None])
@@ -150,19 +152,6 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         (jnp.arange(nq), jnp.moveaxis(qh, 1, 0)))
     out = jnp.moveaxis(out_blocks, 0, 1)  # (b, nq, block_q, hkv, g, d)
     return out.reshape(b, t, hq, d).astype(q.dtype)
-
-
-def _mask_bias_dyn(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
-                   window: int, prefix_len: int) -> jax.Array:
-    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
-    if causal:
-        c = q_pos[:, None] >= kv_pos[None, :]
-        if prefix_len > 0:
-            c = c | (kv_pos[None, :] < prefix_len)
-        ok = ok & c
-    if window > 0:
-        ok = ok & (q_pos[:, None] - kv_pos[None, :] < window)
-    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -135,7 +135,11 @@ def apply_block_decode(p, x, cfg, k_cache, v_cache, cur_len, window: int):
         q = layers.apply_rope(q, pos, cfg.rope_theta)
         k = layers.apply_rope(k, pos, cfg.rope_theta)
     s = k_cache.shape[1]
-    write_idx = jnp.where(window > 0, cur_len % s, jnp.minimum(cur_len, s - 1))
+    # windowed caches are ring buffers (wrap); linear caches DROP the write
+    # once full — the saturated index s is out of bounds and OOB scatter
+    # updates are dropped, so the last slot is never silently clobbered
+    # (decode_step saturates `len` at capacity to make exhaustion observable)
+    write_idx = jnp.where(window > 0, cur_len % s, jnp.minimum(cur_len, s))
     bidx = jnp.arange(x.shape[0])
     k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
     v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
@@ -311,7 +315,11 @@ def decode_step(params, cfg, token, cache):
     x = layers.apply_norm(params["ln_f"], x, cfg.norm)
     head = params.get("head", None)
     logits = x @ (head if head is not None else params["embed"].T)
-    new_cache = {"k": k_new, "v": v_new, "len": cur_len + 1}
+    # ring buffers track absolute position; linear caches saturate at
+    # capacity so a full cache is observable as len == S (no silent wrap)
+    new_len = cur_len + 1 if cfg.window \
+        else jnp.minimum(cur_len + 1, cache["k"].shape[2])
+    new_cache = {"k": k_new, "v": v_new, "len": new_len}
     return logits, new_cache
 
 

@@ -26,9 +26,18 @@ which fuses per-token dynamic activation quantization into the int-MXU
 kernel — activations hit the MXU as int8 lanes, never materialized in int8
 in HBM, and there is no fp-activation fallback in the decode path.
 ``qcfg.kv_bits < 16`` additionally stores the KV cache as int8 codes with a
-per-(token, head) float32 scale (quantize-on-write in prefill and decode,
-dequantize-in-attention), cutting long-context decode cache memory ~2x
-(w4a4kv8 numbers in EXPERIMENTS.md §Perf).
+per-(token, head) float32 scale (quantize-on-write in prefill and decode),
+cutting long-context decode cache memory ~2x. Decode attention reads the
+cache **as stored** through ``kernels.ops.flash_decode`` (DESIGN.md §8): the
+fused Pallas kernel dequantizes per KV tile in registers and bounds work to
+the valid ``cur_len`` tiles — no full-cache fp materialization, no
+``max_len``-proportional HBM reads (w4a4kv8 + flash numbers in
+EXPERIMENTS.md §Perf / BENCH_decode.json).
+
+Cache capacity: a decode step past ``max_len`` does NOT corrupt the cache —
+the overflowing K/V write is dropped (slot ``max_len - 1`` keeps its token)
+and ``cache["len"]`` saturates at ``max_len``, so exhaustion is observable
+as ``len == max_len``; the Engine retires sequences before that point.
 
 ``QuantizedModel`` exposes the same ``decode_step`` / ``prefill`` /
 ``init_cache`` interface as ``repro.models.Model`` so the continuous-
@@ -132,17 +141,16 @@ def _kv_quantize(x: jax.Array, kv_bits: int
     return q.astype(jnp.int8), scale
 
 
-def _kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (q.astype(jnp.float32)
-            * scale[..., None].astype(jnp.float32)).astype(dtype)
-
-
 @dataclasses.dataclass(frozen=True)
 class QuantizedModel:
-    """Model-compatible wrapper serving QTensor trees (dense/MoE)."""
+    """Model-compatible wrapper serving QTensor trees (dense/MoE).
+
+    ``flash_block_kv`` overrides the flash-decode KV tile size (None =
+    kernel default, clamped to a single tile for miniature caches)."""
     cfg: ModelConfig
     qcfg: QuantConfig
     kernel_mode: str = "auto"
+    flash_block_kv: Optional[int] = None
 
     def __post_init__(self):
         # int-lane widths only: 9..15 would wrap on the int8 cast
@@ -152,9 +160,10 @@ class QuantizedModel:
             raise ValueError(f"kv_bits={self.qcfg.kv_bits}: use 2..8 or "
                              ">= 16")
         if self.cfg.window:
-            # the packed decode writes minimum(cur_len, s-1) and attends the
-            # full cache — sliding-window ring-buffer semantics (see
-            # transformer.apply_block_decode) are not implemented here
+            # the packed decode uses a linear drop-at-capacity cache and the
+            # flash kernel masks a contiguous valid prefix — ring-buffer
+            # wrap/masking (see transformer.apply_block_decode) is not
+            # implemented here
             raise NotImplementedError(
                 "packed serving does not support sliding-window attention")
 
@@ -284,7 +293,11 @@ class QuantizedModel:
         x = layers.apply_norm(params["ln_f"], x, cfg.norm)
         head = params.get("head")
         logits = x @ (head if head is not None else params["embed"].T)
-        new_cache = {"k": kv_new[0], "v": kv_new[1], "len": cur_len + 1}
+        # len saturates at capacity: a full cache is observable (len == S),
+        # never silently wrapped or overgrown
+        s = cache["k"].shape[2]
+        new_cache = {"k": kv_new[0], "v": kv_new[1],
+                     "len": jnp.minimum(cur_len + 1, s)}
         if self._kv_quantized:
             new_cache["k_scale"], new_cache["v_scale"] = kv_new[2], kv_new[3]
         return logits, new_cache
@@ -308,10 +321,13 @@ class QuantizedModel:
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             k = layers.apply_rope(k, pos, cfg.rope_theta)
         s = kv[0].shape[1]
-        write_idx = jnp.minimum(cur_len, s - 1)
+        # a full cache drops the write: the saturated index s is out of
+        # bounds and OOB scatter updates are dropped, so slot s-1 is never
+        # clobbered (len saturation in decode_step makes exhaustion visible)
+        write_idx = jnp.minimum(cur_len, s)
         bidx = jnp.arange(b)
         if len(kv) == 4:
-            # quantize-on-write, dequantize-in-attention (kv_bits < 16)
+            # quantize-on-write (kv_bits < 16); attention reads the codes
             kc, vc, ksc, vsc = kv
             kq, k_s = _kv_quantize(k[:, 0], self.qcfg.kv_bits)
             vq, v_s = _kv_quantize(v[:, 0], self.qcfg.kv_bits)
@@ -319,16 +335,19 @@ class QuantizedModel:
             vc = vc.at[bidx, write_idx].set(vq)
             ksc = ksc.at[bidx, write_idx].set(k_s)
             vsc = vsc.at[bidx, write_idx].set(v_s)
-            k_all = _kv_dequantize(kc, ksc, x.dtype)
-            v_all = _kv_dequantize(vc, vsc, x.dtype)
             kv = (kc, vc, ksc, vsc)
         else:
             kc, vc = kv
             kc = kc.at[bidx, write_idx].set(k[:, 0].astype(kc.dtype))
             vc = vc.at[bidx, write_idx].set(v[:, 0].astype(vc.dtype))
-            k_all, v_all = kc, vc
             kv = (kc, vc)
-        out = attn_lib.decode_attention(q, k_all, v_all, cur_len + 1)
+        # fused flash-decode over the cache AS STORED: int8 codes dequantized
+        # per KV tile in registers, KV grid length-masked to the valid tiles
+        # (pallas/interpret/ref); `auto` off-TPU is the portable
+        # decode_attention fallback — the only path that materializes fp K/V
+        out = ops.flash_decode(q, kv, jnp.minimum(cur_len + 1, s),
+                               block_kv=self.flash_block_kv,
+                               mode=self.kernel_mode)
         x = x + self._mm(out.reshape(b, 1, -1), p["wo"])
         x = x + self._mlp(p, x)
         return x, kv

@@ -1,0 +1,260 @@
+"""Fused flash-decode over the quantized KV cache: parity + capacity.
+
+Contract under test (DESIGN.md §8):
+  * ``ops.flash_decode`` in interpret mode is BIT-identical to
+    ``ref.flash_decode_ref`` under jit for every (kv_bits, GQA group,
+    block_kv, ragged cur_len) combination;
+  * both match ``attn_lib.decode_attention`` and a from-scratch softmax
+    oracle to fp tolerance;
+  * ``QuantizedModel.decode_step`` on the fused path never materializes the
+    full fp KV cache (asserted on the jaxpr);
+  * a full cache is never corrupted by further decode steps (writes drop,
+    ``len`` saturates).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.kernels import ops, ref
+from repro.models import attention as attn_lib
+from repro.models import build_model
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+
+def _make_qkv(key, b, s, hkv, g, d, kv_bits):
+    """Random q + cache in the serving layout: int8 codes + per-(token,
+    head) f32 scales for kv_bits < 16, fp cache otherwise."""
+    hq = hkv * g
+    q = jax.random.normal(key, (b, 1, hq, d), jnp.float32)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    if kv_bits >= 16:
+        return q, (kf, vf), (kf, vf)
+    qmax = 2.0 ** (kv_bits - 1) - 1.0
+    def quant(x):
+        bound = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
+        scale = bound / qmax
+        codes = jnp.clip(jnp.round(x / scale[..., None]),
+                         -qmax - 1.0, qmax).astype(jnp.int8)
+        return codes, scale
+    kq, ks = quant(kf)
+    vq, vs = quant(vf)
+    deq = (kq.astype(jnp.float32) * ks[..., None],
+           vq.astype(jnp.float32) * vs[..., None])
+    return q, (kq, vq, ks, vs), deq
+
+
+def _softmax_oracle(q, k, v, cur_len):
+    """From-scratch masked softmax (no online recurrence, no shared code)."""
+    b, _, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    out = np.zeros((b, 1, hq, d), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bi in range(b):
+        n = int(cur_len[bi])
+        for h in range(hq):
+            kv_h = h // (hq // hkv)
+            sc = (kn[bi, :n, kv_h] @ qn[bi, 0, h]) / np.sqrt(d)
+            e = np.exp(sc - sc.max()) if n else np.zeros((0,))
+            p = e / e.sum() if n else e
+            out[bi, 0, h] = p @ vn[bi, :n, kv_h] if n else 0.0
+    return out
+
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("block_kv", [16, 64])
+def test_flash_decode_interpret_bit_identical_to_ref(kv_bits, g, block_kv):
+    """Ragged cur_len in one batch: near-empty, mid-tile, and full-cache
+    rows all run through the length-masked grid bit-identically."""
+    b, s, hkv, d = 3, 64, 2, 32
+    key = jax.random.PRNGKey(kv_bits * 10 + g)
+    q, kv, _ = _make_qkv(key, b, s, hkv, g, d, kv_bits)
+    cur = jnp.array([1, 37, s], jnp.int32)
+    run_int = jax.jit(functools.partial(ops.flash_decode, mode="interpret",
+                                        block_kv=block_kv))
+    run_ref = jax.jit(functools.partial(ops.flash_decode, mode="ref",
+                                        block_kv=block_kv))
+    np.testing.assert_array_equal(np.asarray(run_int(q, kv, cur)),
+                                  np.asarray(run_ref(q, kv, cur)))
+
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("g", [1, 4])
+def test_flash_decode_matches_fallback_and_oracle(kv_bits, g):
+    """Kernel vs decode_attention (the portable fallback, via mode='auto'
+    off-TPU) vs a from-scratch numpy softmax — three independent paths."""
+    b, s, hkv, d = 3, 48, 2, 16
+    key = jax.random.PRNGKey(kv_bits + g)
+    q, kv, (k_fp, v_fp) = _make_qkv(key, b, s, hkv, g, d, kv_bits)
+    cur = jnp.array([1, 23, s - 1], jnp.int32)
+    y_int = ops.flash_decode(q, kv, cur, mode="interpret", block_kv=16)
+    y_xla = ops.flash_decode(q, kv, cur, mode="auto", block_kv=16)
+    y_np = _softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_int), y_np, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_decode_interpret_smoke():
+    """Tiny single-tile interpret run (the CI fast-lane smoke)."""
+    q, kv, _ = _make_qkv(jax.random.PRNGKey(0), 2, 16, 2, 2, 8, 8)
+    y = ops.flash_decode(q, kv, jnp.array([3, 16], jnp.int32),
+                         mode="interpret")
+    assert y.shape == (2, 1, 4, 8) and bool(jnp.isfinite(y).all())
+
+
+def test_flash_decode_zero_length_rows_return_zeros():
+    """cur_len == 0 visits no KV tile: zeros for that row on EVERY mode —
+    including the auto/XLA fallback, where an all-masked softmax would
+    otherwise emit the uniform mean of the (uninitialized) slots. Decode
+    always passes cur_len + 1 >= 1; this pins the edge."""
+    q, kv, _ = _make_qkv(jax.random.PRNGKey(1), 2, 32, 2, 2, 16, 8)
+    cur = jnp.array([0, 32], jnp.int32)
+    for mode in ("interpret", "ref", "auto"):
+        y = ops.flash_decode(q, kv, cur, mode=mode, block_kv=16)
+        np.testing.assert_array_equal(np.asarray(y[0]),
+                                      np.zeros_like(np.asarray(y[0])))
+        assert bool(jnp.any(y[1] != 0))
+
+
+def test_flash_decode_clamps_block_to_ragged_max_len():
+    """S=56 is no multiple of any default block: the dispatcher clamps to a
+    single tile and still matches the fallback."""
+    b, s, hkv, g, d = 2, 56, 2, 2, 16
+    q, kv, _ = _make_qkv(jax.random.PRNGKey(2), b, s, hkv, g, d, 8)
+    cur = jnp.array([5, 56], jnp.int32)
+    y_int = ops.flash_decode(q, kv, cur, mode="interpret")
+    y_xla = ops.flash_decode(q, kv, cur, mode="auto")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_rejects_bad_inputs():
+    q, kv, _ = _make_qkv(jax.random.PRNGKey(3), 2, 16, 2, 1, 8, 16)
+    cur = jnp.array([4, 8], jnp.int32)
+    with pytest.raises(TypeError, match="kv"):
+        ops.flash_decode(q, kv + (kv[0],), cur)
+    with pytest.raises(ValueError, match="one-token"):
+        ops.flash_decode(jnp.concatenate([q, q], axis=1), kv, cur)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: no full-cache dequant, capacity semantics
+# ---------------------------------------------------------------------------
+
+def _iter_avals(jaxpr):
+    """All intermediate avals of a jaxpr, recursing into sub-jaxprs
+    (scan bodies, pallas_call kernels, cond branches...)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            vals = p if isinstance(p, (list, tuple)) else [p]
+            for sub in vals:
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_avals(inner)
+
+
+def _fp_full_cache_avals(jaxpr, s, hkv, d):
+    """Float avals shaped like a per-layer (B, S, Hkv, D) KV cache (or the
+    stacked (L, B, S, Hkv, D) carrier)."""
+    hits = []
+    for aval in _iter_avals(jaxpr):
+        shape = getattr(aval, "shape", ())
+        dtype = getattr(aval, "dtype", None)
+        if (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+                and len(shape) >= 4 and tuple(shape[-3:]) == (s, hkv, d)):
+            hits.append(aval)
+    return hits
+
+
+def test_decode_step_kv8_has_no_full_cache_dequantize():
+    """Acceptance: kv_bits=8 decode on the fused path carries NO fp
+    (B, S, Hkv, D) intermediate — the int8 cache is dequantized per tile in
+    registers only. The `auto` (off-TPU decode_attention fallback) jaxpr is
+    the positive control: it DOES materialize the fp cache, proving the
+    traversal would catch one."""
+    cfg = get_config("llama-micro")
+    qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
+                       kv_bits=8)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    b, s = 2, 24
+    d = cfg.resolved_head_dim
+    tok = jnp.zeros((b, 1), jnp.int32)
+
+    def jaxpr_for(mode):
+        qm = QuantizedModel(cfg, qcfg, kernel_mode=mode)
+        cache = qm.init_cache(b, s)
+        cache = dict(cache, len=jnp.full((b,), 7, jnp.int32))
+        return jax.make_jaxpr(qm.decode_step)(packed, tok, cache).jaxpr
+
+    fused = _fp_full_cache_avals(jaxpr_for("interpret"), s,
+                                 cfg.num_kv_heads, d)
+    assert not fused, f"full-cache fp intermediates on fused path: {fused}"
+    # tile-mirroring ref at block_kv < S is also materialization-free
+    control = _fp_full_cache_avals(jaxpr_for("auto"), s,
+                                   cfg.num_kv_heads, d)
+    assert control, "positive control lost: fallback no longer materializes"
+
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+def test_decode_past_capacity_drops_write_and_saturates(kv_bits):
+    """A decode step on a full cache must not clobber slot S-1 and must
+    leave `len` saturated at S (observable exhaustion, no corruption)."""
+    cfg = get_config("llama-micro")
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=kv_bits)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref")
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0,
+                              cfg.vocab_size)
+    _, cache = qm.prefill(packed, {"tokens": toks}, max_len=s)
+    assert int(cache["len"][0]) == s  # full from prefill
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, cache2 = jax.jit(qm.decode_step)(packed, tok, cache)
+    np.testing.assert_array_equal(np.asarray(cache2["k"]),
+                                  np.asarray(cache["k"]))
+    np.testing.assert_array_equal(np.asarray(cache2["v"]),
+                                  np.asarray(cache["v"]))
+    np.testing.assert_array_equal(np.asarray(cache2["len"]),
+                                  np.full((b,), s))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_fp_model_decode_past_capacity_drops_write_and_saturates():
+    """Same capacity contract for the fp serving model."""
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0,
+                              cfg.vocab_size)
+    _, cache = model.prefill(params, {"tokens": toks}, max_len=s)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, tok, cache)
+    np.testing.assert_array_equal(np.asarray(cache2["k"]),
+                                  np.asarray(cache["k"]))
+    np.testing.assert_array_equal(np.asarray(cache2["len"]),
+                                  np.full((b,), s))
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_quantized_decode_full_cache_attends_everything():
+    """At cur_len == S the fused path must attend ALL stored positions
+    (regression guard for an off-by-one in the tile mask)."""
+    b, s, hkv, g, d = 2, 32, 2, 2, 16
+    q, kv, (k_fp, v_fp) = _make_qkv(jax.random.PRNGKey(6), b, s, hkv, g, d, 8)
+    cur = jnp.full((b,), s, jnp.int32)
+    y = ops.flash_decode(q, kv, cur, mode="interpret", block_kv=16)
+    y_np = _softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
+    np.testing.assert_allclose(np.asarray(y), y_np, rtol=1e-4, atol=1e-4)
