@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV (harness contract). Set
 ``BENCH_FAST=1`` for a reduced-budget pass. The ``kernels`` suite also
 writes ``benchmarks/artifacts/BENCH_decode.json`` — the machine-readable
 decode-perf trajectory (tokens/s + HBM-bytes/step per serving variant,
-flash-decode cur_len scaling) that CI uploads per commit.
+flash-decode cur_len scaling) — and the ``serve`` suite writes
+``benchmarks/artifacts/BENCH_serve.json`` (engine-level linear vs paged
+cache throughput/memory under a fixed mixed-length trace); CI uploads both
+per commit.
 """
 from __future__ import annotations
 
@@ -23,8 +26,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (fig3_loss_curves, kernel_bench, roofline_report,
-                            table1_weight_only, table3_w4a4, table4_precision,
-                            table5_stability, table6_gradual_mask)
+                            serve_bench, table1_weight_only, table3_w4a4,
+                            table4_precision, table5_stability,
+                            table6_gradual_mask)
     suites = {
         "table1": table1_weight_only.run,
         "table3": table3_w4a4.run,
@@ -34,6 +38,7 @@ def main() -> int:
         "fig3": fig3_loss_curves.run,
         "roofline": roofline_report.run,
         "kernels": kernel_bench.run,
+        "serve": serve_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,123 @@
+"""Engine-level serving benchmark: linear vs paged KV cache under a fixed
+mixed-length request trace.
+
+Measures what the kernel benchmarks cannot: scheduler throughput. The same
+trace (prompt lengths spanning 3..~120 tokens, FIFO submission) runs through
+the linear slot-table engine and the paged engine, on the packed
+w4a8 + kv8 serving stack (ref kernels — CPU container; the *relative*
+linear/paged numbers are layout effects, not kernel effects, because both
+layouts run the identical tile math).
+
+Besides the CSV rows this writes ``benchmarks/artifacts/BENCH_serve.json``:
+tokens/s, requests/s and cache bytes per layout, the trace itself, and the
+paged pool accounting (pool pages, peak in use, preemptions) — the
+machine-readable serving-perf trajectory CI uploads per commit.
+
+The paged pool is sized to the trace's working set (max_batch concurrent
+sequences at the P95 trace length), NOT to ``max_batch * max_len`` — that
+sizing is the memory win: the linear cache must reserve worst-case
+``max_len`` per slot while pages track live tokens.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kv_cache import pages_for
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+BENCH_SERVE_JSON = common.ART / "BENCH_serve.json"
+
+ARCH = "llama-micro"
+PAGE_SIZE = 16
+MAX_LEN = 192
+MAX_BATCH = 4
+MAX_NEW = 8 if common.FAST else 16
+# fixed mixed-length trace: short chat turns + a few long-context requests
+TRACE = [8, 40, 16, 96, 24, 64, 8, 120, 32, 12, 80, 18]
+N_REQ = 6 if common.FAST else len(TRACE)
+
+
+def _run_engine(qm, packed, prompts, paged: bool):
+    lens = [len(p) + MAX_NEW for p in prompts]
+    if paged:
+        # pool for max_batch concurrent sequences at the P95 trace length
+        p95 = int(np.percentile(lens, 95))
+        num_pages = MAX_BATCH * pages_for(p95, PAGE_SIZE)
+    else:
+        num_pages = 0
+    scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                       max_new=MAX_NEW, prefill_bucket=32, paged=paged,
+                       page_size=PAGE_SIZE, num_pages=num_pages)
+    eng = Engine(qm, packed, scfg)
+    for p in prompts:
+        eng.submit(p)
+    t0 = time.monotonic()
+    done = eng.run()
+    dt = time.monotonic() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    stats = {
+        "tokens_per_s": toks / dt,
+        "requests_per_s": len(done) / dt,
+        "wall_s": dt,
+        "new_tokens": toks,
+        "cache_bytes": eng._kv.cache_bytes(),
+        "outputs": [r.out_tokens for r in done],
+    }
+    if paged:
+        al = eng._kv.allocator
+        stats.update(pool_pages=al.num_pages, page_size=PAGE_SIZE,
+                     peak_pages_in_use=al.peak_in_use,
+                     preemptions=sum(r.preemptions for r in done))
+    return stats
+
+
+def run():
+    cfg = get_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
+                       kv_bits=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref",
+                        flash_block_kv=PAGE_SIZE)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in TRACE[:N_REQ]]
+
+    lin = _run_engine(qm, packed, prompts, paged=False)
+    pgd = _run_engine(qm, packed, prompts, paged=True)
+    identical = lin["outputs"] == pgd["outputs"]
+
+    doc = {
+        "arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref",
+        "trace_prompt_lens": [int(len(p)) for p in prompts],
+        "max_batch": MAX_BATCH, "max_len": MAX_LEN, "max_new": MAX_NEW,
+        "token_identical": identical,
+        "linear": {k: v for k, v in lin.items() if k != "outputs"},
+        "paged": {k: v for k, v in pgd.items() if k != "outputs"},
+        "cache_mem_ratio": lin["cache_bytes"] / pgd["cache_bytes"],
+    }
+    common.ART.mkdir(parents=True, exist_ok=True)
+    BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
+
+    rows = []
+    for tag, st in (("linear", lin), ("paged", pgd)):
+        us_per_tok = 1e6 * st["wall_s"] / max(st["new_tokens"], 1)
+        rows.append((
+            f"serve/engine_{tag}_w4a8kv8", us_per_tok,
+            f"tok_s={st['tokens_per_s']:.1f};req_s="
+            f"{st['requests_per_s']:.2f};cache_MiB="
+            f"{st['cache_bytes'] / 2**20:.2f}"))
+    rows.append(("serve/linear_vs_paged_cache_ratio",
+                 0.0, f"ratio={doc['cache_mem_ratio']:.2f};"
+                      f"token_identical={identical}"))
+    return rows

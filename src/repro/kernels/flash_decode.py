@@ -29,6 +29,20 @@ last tile.
 tile (masked updates instead of predicated execution), so interpret mode is
 bit-identical to it under jit. ``models.attention.decode_attention`` is the
 portable XLA fallback whose results this kernel matches to fp tolerance.
+
+Paged variant (``flash_decode_paged``): the cache is a global pool of
+fixed-size pages ``(num_pages, page_size, Hkv, D)`` plus per-sequence page
+tables ``(B, max_pages_per_seq) int32`` (``repro.serve.kv_cache``).  The KV
+grid walks the sequence's page table instead of a contiguous slab: both
+``cur_len`` and the page table are scalar-prefetch operands, and each KV
+tile's BlockSpec index map *gathers* its page from the pool —
+``page_table[b, min(t, last_valid)]`` — so HBM traffic stays bounded by
+``ceil(cur_len / page_size)`` pages per sequence (out-of-range tiles repeat
+the last valid page index and Pallas skips the copy).  The kernel body is
+the SAME ``_kernel`` as the linear variant (one tile == one page), so the
+in-register dequant and online-softmax op order — and therefore the
+bit-identity contract with its oracle ``ref.flash_decode_paged_ref`` —
+cannot drift between the two layouts.
 """
 from __future__ import annotations
 
@@ -162,3 +176,91 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
         interpret=interpret,
     )(cur_len, *args)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def flash_decode_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                       page_table: jax.Array, cur_len: jax.Array,
+                       k_scale=None, v_scale=None, *,
+                       scale: float | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Flash-decode over a paged pool. Returns (B, Hkv, G, D) q.dtype.
+
+    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, D)`` — int8
+    codes when ``k_scale``/``v_scale`` pools ``(num_pages, page_size, Hkv)``
+    are given, fp otherwise.  ``page_table`` (B, max_pages_per_seq) int32
+    maps logical page ``t`` of sequence ``b`` to a pool page (−1 =
+    unallocated; only entries below ``ceil(cur_len[b] / page_size)`` are
+    read).  One KV tile == one page; the grid is
+    ``(B, Hkv, max_pages_per_seq)`` and tile ``t`` DMAs pool page
+    ``page_table[b, t]`` via its BlockSpec index map.
+    """
+    bsz, hkv, g, d = q.shape
+    num_pages, page_size = k.shape[0], k.shape[1]
+    assert k.shape == v.shape == (num_pages, page_size, hkv, d), \
+        (q.shape, k.shape, v.shape)
+    n_tiles = page_table.shape[1]
+    assert page_table.shape == (bsz, n_tiles), (page_table.shape, bsz)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (num_pages, page_size, hkv)
+    scale = scale if scale is not None else d ** -0.5
+    cur_len = cur_len.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    def _page(b, t, lens, pt):
+        # the page GATHER lives here, in the index map: out-of-range tiles
+        # clamp to the last valid logical page, whose pool index then
+        # repeats — Pallas skips the DMA, so HBM bytes stay bounded by
+        # ceil(cur_len / page_size) pages. max(—, 0) guards the cur_len == 0
+        # row (page_table row may be all −1; compute is predicated off).
+        last = jnp.maximum(pl.cdiv(lens[b], page_size) - 1, 0)
+        return jnp.maximum(pt[b, jnp.minimum(t, last)], 0)
+
+    def kv_map(b, h, t, lens, pt):
+        return (_page(b, t, lens, pt), 0, h, 0)
+
+    def scale_map(b, h, t, lens, pt):
+        return (_page(b, t, lens, pt), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b, h, t, lens, pt: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
+                     pl.BlockSpec((1, page_size, 1), scale_map)]
+        args += [k_scale, v_scale]
+
+    # one tile == one page: reuse the linear kernel body verbatim so the
+    # two layouts cannot diverge in op order
+    body = functools.partial(_kernel, block_kv=page_size, n_tiles=n_tiles,
+                             scale=scale, quantized=quantized)
+    if not quantized:
+        body = functools.partial(
+            lambda lens, qr, kr, vr, o, m, l, a, *, inner:
+            inner(lens, qr, kr, vr, None, None, o, m, l, a), inner=body)
+    kernel = functools.partial(
+        lambda lens, pt, *rest, inner: inner(lens, *rest), inner=body)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, h, t, lens, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max
+            pltpu.VMEM((g, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((g, d), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(cur_len, page_table, *args)

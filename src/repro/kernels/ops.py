@@ -179,7 +179,7 @@ def w8a8_matmul(x, w_q, w_scale, *, mode: Mode = "auto", **blocks):
 
 
 def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
-                 mode: Mode = "auto"):
+                 page_table=None, mode: Mode = "auto"):
     """One-token decode attention over the KV cache **as stored**.
 
     q (B, 1, Hq, D); ``kv`` is the cache tuple exactly as the serving model
@@ -187,6 +187,16 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     (B, S, Hkv, D) + per-(token, head) f32 scales (B, S, Hkv). ``cur_len``
     (B,) int32 counts valid positions (the just-written token included).
     Returns (B, 1, Hq, D) in q.dtype.
+
+    **Paged cache**: with ``page_table`` (B, max_pages_per_seq) int32, the
+    kv entries are page *pools* — (num_pages, page_size, Hkv, D) codes and
+    (num_pages, page_size, Hkv) scales — and the fused kernel walks the
+    page table (one KV tile == one page, gathered in the BlockSpec index
+    map; ``block_kv`` is ignored). ``ref`` runs
+    :func:`repro.kernels.ref.flash_decode_paged_ref` (bit-identical to
+    interpret mode under jit); ``auto`` off-TPU gathers the table with XLA
+    (``pool[page_table]``) and falls back to ``decode_attention`` — the one
+    paged path that materializes the logical cache.
 
     Modes: ``pallas``/``interpret`` run the fused
     :func:`repro.kernels.flash_decode.flash_decode` kernel — per-tile
@@ -215,11 +225,14 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     if t != 1:
         raise ValueError(f"flash_decode is a one-token decode kernel; got "
                          f"T={t}")
-    s, hkv = k.shape[1], k.shape[2]
     # auto off-TPU falls back to XLA decode_attention, NOT the tile oracle:
     # the oracle is the test contract, the fallback is the fast portable path
     impl = ("pallas" if _backend() == "tpu" else "xla") if mode == "auto" \
         else mode
+    if page_table is not None:
+        return _flash_decode_paged(q, k, v, k_scale, v_scale, page_table,
+                                   cur_len, scale, impl)
+    s, hkv = k.shape[1], k.shape[2]
     if impl == "xla":
         from repro.models import attention as attn_lib
         if k_scale is not None:
@@ -243,6 +256,45 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
         out = fd.flash_decode(q4, k, v, cur_len, k_scale, v_scale,
                               scale=scale, block_kv=bkv,
                               interpret=(impl == "interpret"))
+    return out.reshape(b, 1, hq, d)
+
+
+def _flash_decode_paged(q, k, v, k_scale, v_scale, page_table, cur_len,
+                        scale, impl):
+    """Paged dispatch half of :func:`flash_decode` (kv entries are pools)."""
+    b, _, hq, d = q.shape
+    num_pages, ps, hkv = k.shape[0], k.shape[1], k.shape[2]
+    if k.shape != (num_pages, ps, hkv, d):
+        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, D); "
+                         f"got {k.shape}")
+    if page_table.ndim != 2 or page_table.shape[0] != b:
+        raise ValueError(f"page_table must be (B, max_pages_per_seq); got "
+                         f"{page_table.shape} for B={b}")
+    if impl == "xla":
+        from repro.models import attention as attn_lib
+        pt = jnp.maximum(page_table, 0)
+        s_log = page_table.shape[1] * ps
+        kk = k[pt].reshape(b, s_log, hkv, d)
+        vv = v[pt].reshape(b, s_log, hkv, d)
+        if k_scale is not None:
+            ks = k_scale[pt].reshape(b, s_log, hkv)
+            vs = v_scale[pt].reshape(b, s_log, hkv)
+            kk = (kk.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
+            vv = (vv.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
+        out = attn_lib.decode_attention(q, kk.astype(q.dtype),
+                                        vv.astype(q.dtype), cur_len,
+                                        scale=scale)
+        # fused-path contract: zero-length rows return zeros
+        return jnp.where((cur_len > 0)[:, None, None, None], out,
+                         jnp.zeros_like(out))
+    q4 = q.reshape(b, hkv, hq // hkv, d)
+    if impl == "ref":
+        out = ref.flash_decode_paged_ref(q4, k, v, page_table, cur_len,
+                                         k_scale, v_scale, scale=scale)
+    else:
+        out = fd.flash_decode_paged(q4, k, v, page_table, cur_len,
+                                    k_scale, v_scale, scale=scale,
+                                    interpret=(impl == "interpret"))
     return out.reshape(b, 1, hq, d)
 
 

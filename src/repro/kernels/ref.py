@@ -149,6 +149,61 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(out_dtype or q.dtype)
 
 
+def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           cur_len: jax.Array, k_scale=None, v_scale=None,
+                           *, scale=None, out_dtype=None) -> jax.Array:
+    """Tile-mirroring oracle for the paged flash-decode kernel.
+
+    q (B, Hkv, G, D); ``k_pool``/``v_pool`` are page pools
+    (num_pages, page_size, Hkv, D) — int8 codes when ``k_scale``/``v_scale``
+    pools (num_pages, page_size, Hkv) f32 are given, fp otherwise;
+    ``page_table`` (B, max_pages_per_seq) int32 (−1 = unallocated);
+    ``cur_len`` (B,) valid positions.  One tile == one page: tile ``t``
+    gathers pool page ``page_table[:, t]`` and runs the exact per-tile
+    dequant → scores → mask → online-softmax sequence of
+    ``flash_decode.flash_decode_paged`` with masked (``jnp.where``) state
+    updates standing in for predication — interpret mode is BIT-IDENTICAL
+    to this under jit.  Tiles at or past ``ceil(cur_len / page_size)`` may
+    gather stale or clamped pages; their state updates are discarded, as
+    the kernel's predication discards theirs.  A zero-length row returns
+    zeros.  Like the linear oracle, only one (B, page_size, Hkv, D) fp tile
+    exists at a time — never a gathered full cache.
+    """
+    bsz, hkv, g, d = q.shape
+    ps = k_pool.shape[1]
+    n_tiles = page_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    cur = cur_len.astype(jnp.int32)[:, None, None, None]
+    qf = q.astype(jnp.float32)
+    m = jnp.full((bsz, hkv, g, 1), -1e30, jnp.float32)
+    l = jnp.zeros((bsz, hkv, g, 1), jnp.float32)
+    acc = jnp.zeros((bsz, hkv, g, d), jnp.float32)
+    for t in range(n_tiles):
+        pages = jnp.maximum(page_table[:, t], 0)          # (B,)
+        kt = k_pool[pages].astype(jnp.float32)            # (B, ps, Hkv, D)
+        vt = v_pool[pages].astype(jnp.float32)
+        if k_scale is not None:
+            kt = kt * k_scale[pages][..., None]
+            vt = vt * v_scale[pages][..., None]
+        sc = jnp.einsum("bhgd,bkhd->bhgk", qf, kt,
+                        preferred_element_type=jnp.float32) * scale
+        pos = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        sc = jnp.where(pos[None, None] < cur, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhgk,bkhd->bhgd", p, vt, preferred_element_type=jnp.float32)
+        live = t * ps < cur
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(out_dtype or q.dtype)
+
+
 def quantize_pack_ref(w: jax.Array, *, bits: int, group_size: int
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-group asymmetric quantize + pack. w (K, N) float.

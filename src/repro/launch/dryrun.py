@@ -56,7 +56,10 @@ def _is_axes_leaf(x) -> bool:
 
 def shardings_for(axes_tree, shapes_tree, mesh, rules):
     """Zip a logical-axes tree with a ShapeDtypeStruct tree -> NamedShardings."""
+    import dataclasses as _dc
+
     from repro.core.qtensor import QTensor
+    from repro.serve.kv_cache import PagedKVCache
 
     def walk(axes, shapes):
         if isinstance(shapes, QTensor):
@@ -67,6 +70,14 @@ def shardings_for(axes_tree, shapes_tree, mesh, rules):
                            scale=walk(axes["scale"], shapes.scale),
                            zp=walk(axes["zp"], shapes.zp),
                            bits=shapes.bits, group_size=shapes.group_size)
+        if isinstance(shapes, PagedKVCache):
+            # paged cache: axes come as a field-name dict (see
+            # serve.kv_cache.paged_cache_logical_axes); rebuild the node so
+            # in_shardings matches the decode step's cache pytree.
+            fields = {f.name: walk(axes[f.name], getattr(shapes, f.name))
+                      if getattr(shapes, f.name) is not None else None
+                      for f in _dc.fields(shapes) if f.name != "page_size"}
+            return PagedKVCache(page_size=shapes.page_size, **fields)
         if _is_axes_leaf(axes):
             spec = (P() if axes is None else
                     sharding.resolve_spec(axes, shapes.shape, mesh, rules))

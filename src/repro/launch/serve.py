@@ -29,6 +29,14 @@ launcher reports KV-cache memory alongside the weight memory.
 here; ``ref`` forces the tile-structured reference math (the flash-decode
 lowering without a TPU); ``interpret`` executes the Pallas kernel bodies in
 Python (slow — parity checks only).
+
+``--paged`` serves through the page-table KV cache (DESIGN.md §9): the
+engine allocates fixed-size pages (``--page-size``) from a global pool on
+admission, grows sequences page-by-page, preempts the longest sequence when
+the pool runs dry, and reclaims pages on completion — so cache memory
+tracks live tokens instead of ``max_batch × max_len`` slots.  The launcher
+runs the linear engine too and reports token agreement plus the cache
+memory ratio.
 """
 from __future__ import annotations
 
@@ -72,6 +80,15 @@ def main(argv=None) -> int:
                     choices=["auto", "pallas", "interpret", "ref"],
                     help="kernel dispatch for the packed path (see module "
                          "docstring)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the page-table KV cache (page-pool "
+                         "allocation, preemption, reclamation) and report "
+                         "agreement + memory vs the linear engine")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page for --paged")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size for --paged (0 = live-trace "
+                         "sizing: max_batch * pages(prompt_len + max_new))")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -94,8 +111,8 @@ def main(argv=None) -> int:
                        max_len=args.prompt_len + args.max_new + 8,
                        max_new=args.max_new)
 
-    def run(p, tag, serving_model=None):
-        eng = Engine(serving_model or model, p, scfg)
+    def run(p, tag, serving_model=None, cfg_serve=None):
+        eng = Engine(serving_model or model, p, cfg_serve or scfg)
         for pr in prompts:
             eng.submit(pr)
         t0 = time.monotonic()
@@ -104,13 +121,13 @@ def main(argv=None) -> int:
         total_new = sum(len(r.out_tokens) for r in done)
         logger.info("[%s] %d requests, %d tokens in %.2fs (%.1f tok/s)",
                     tag, len(done), total_new, dt, total_new / dt)
-        return [r.out_tokens for r in done]
+        return [r.out_tokens for r in done], eng
 
     def agreement(a_outs, b_outs):
         return np.mean([np.mean(np.array(a[:len(b)]) == np.array(b[:len(a)]))
                         for a, b in zip(a_outs, b_outs)])
 
-    fp_out = run(params, "fp")
+    fp_out, fp_eng = run(params, "fp")
 
     if args.quantize or args.packed:
         if not args.packed and (args.abits < 16 or args.kvbits < 16):
@@ -124,7 +141,7 @@ def main(argv=None) -> int:
         calib = jnp.asarray(corpus.sample(16, args.prompt_len, seed=777))
         qparams, cal_info = quantize_dense_model(
             params, cfg, qcfg, ccfg, calib, log=False)
-        q_out = run(qparams, f"affinequant-w{args.wbits}")
+        q_out, _ = run(qparams, f"affinequant-w{args.wbits}")
         logger.info("greedy-token agreement fp vs quant: %.1f%%",
                     100 * agreement(fp_out, q_out))
 
@@ -153,7 +170,7 @@ def main(argv=None) -> int:
                 "length-bounded KV grid)" if flash
                 else "portable decode_attention fallback (full-cache read)",
                 f"int{args.kvbits}-coded" if args.kvbits < 16 else "fp")
-            p_out = run(pparams, tag, qmodel)
+            p_out, p_eng = run(pparams, tag, qmodel)
             logger.info("greedy-token agreement fp vs packed-%s: %.1f%%",
                         qcfg.tag(), 100 * agreement(fp_out, p_out))
             logger.info("greedy-token agreement quant vs packed-%s: %.1f%%",
@@ -172,6 +189,34 @@ def main(argv=None) -> int:
                             scfg.max_len, tree_bytes(fp_cache) / 2**20,
                             args.kvbits, tree_bytes(q_cache) / 2**20,
                             tree_bytes(fp_cache) / tree_bytes(q_cache))
+
+    if args.paged:
+        import dataclasses as _dc
+
+        from repro.serve.kv_cache import pages_for
+        # paged engine over whatever the best serving stack above was;
+        # default pool sized to the LIVE trace (max_batch concurrent
+        # sequences at their final length), not the linear worst case —
+        # that sizing is the memory win the layout exists for
+        serving = (qmodel, pparams, p_eng, "packed") if args.packed \
+            else (None, params, fp_eng, "fp")
+        smodel, sparams, lin_eng, stag = serving
+        num_pages = args.num_pages or args.max_batch * pages_for(
+            args.prompt_len + args.max_new + 1, args.page_size)
+        pcfg = _dc.replace(scfg, paged=True, page_size=args.page_size,
+                           num_pages=num_pages)
+        pg_out, pg_eng = run(sparams, f"{stag}-paged", smodel, pcfg)
+        base_out = p_out if args.packed else fp_out
+        logger.info("greedy-token agreement %s linear vs paged: %.1f%%",
+                    stag, 100 * agreement(base_out, pg_out))
+        al = pg_eng._kv.allocator
+        logger.info("page pool: %d pages x %d tokens; peak in use %d, "
+                    "free after drain %d", al.num_pages, args.page_size,
+                    al.peak_in_use, al.num_free)
+        logger.info("kv-cache memory: linear %.2f MiB -> paged pool %.2f "
+                    "MiB (%.2fx)", lin_eng._kv.cache_bytes() / 2**20,
+                    pg_eng._kv.cache_bytes() / 2**20,
+                    lin_eng._kv.cache_bytes() / pg_eng._kv.cache_bytes())
     return 0
 
 

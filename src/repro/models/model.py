@@ -253,6 +253,18 @@ class Model:
         return logits
 
     # ---- serving ----
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """True when bucketed engine prefill (end-padded prompts +
+        per-sequence ``lengths``) is exact: causal attention never lets a
+        valid position see the pad tail.  Recurrent families (mamba2,
+        griffin) carry state *through* the pad positions, and
+        sliding-window caches only hold ``window`` slots (a pad bucket
+        larger than the window would overflow the prefill splice), so both
+        prefill at exact lengths."""
+        return (self.cfg.family not in ("mamba2", "griffin", "audio")
+                and not self.cfg.window)
+
     def init_cache(self, batch: int, max_len: int) -> dict:
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -276,11 +288,40 @@ class Model:
             }
         return transformer.init_cache(cfg, batch, max_len)
 
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         max_pages_per_seq: int):
+        """Paged pool cache (``repro.serve.kv_cache.PagedKVCache``) for the
+        transformer families; recurrent/windowed families have no paged
+        layout (their state is O(1) or a ring buffer already)."""
+        from repro.serve.kv_cache import make_paged_cache
+        cfg = self.cfg
+        if cfg.family in ("mamba2", "griffin", "audio") or cfg.window:
+            raise NotImplementedError(
+                f"paged KV cache: unsupported for family={cfg.family} "
+                f"window={cfg.window}")
+        return make_paged_cache(
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, batch=batch,
+            num_pages=num_pages, page_size=page_size,
+            max_pages_per_seq=max_pages_per_seq, dtype=cfg.dtype,
+            quantized=False)
+
     def prefill(self, params, batch, max_len: int):
-        """Full-prompt forward that also builds the decode cache."""
+        """Full-prompt forward that also builds the decode cache.
+
+        ``batch["lengths"]`` (B,) int32 marks per-sequence valid prompt
+        lengths for bucketed engine prefill (prompts end-padded to one
+        bucket): logits are gathered at ``lengths - 1`` and the cache
+        ``len`` records true lengths.  Exact only for causal-attention
+        families (``supports_padded_prefill``)."""
         cfg = self.cfg
         if cfg.family == "audio":
             raise ValueError("encoder-only architecture has no decode path")
+        lengths = batch.get("lengths")
+        if lengths is not None and not self.supports_padded_prefill:
+            raise ValueError(f"padded prefill is not exact for "
+                             f"family={cfg.family}: recurrent state flows "
+                             "through pad positions")
         tokens = batch["tokens"]
         bsz, t = tokens.shape
         if cfg.family == "mamba2":
@@ -313,17 +354,24 @@ class Model:
                 new["k"], new["v"] = full["k"], full["v"]
             return logits, new
         prefix = batch.get("prefix_embeds")
-        logits, kvs, _ = transformer.forward(params, cfg, tokens=tokens,
-                                             prefix_embeds=prefix,
-                                             collect_kv=True, last_only=True)
+        if lengths is not None and prefix is not None:
+            raise ValueError("padded prefill with a VLM prefix: lengths "
+                             "would be ambiguous (prefix + text)")
+        lengths = (None if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        logits, kvs, _ = transformer.forward(
+            params, cfg, tokens=tokens, prefix_embeds=prefix,
+            collect_kv=True, last_only=True,
+            last_pos=None if lengths is None else lengths - 1)
         t_all = kvs["k"].shape[2]
         # a VLM prompt is prefix_patches + text: the cache must hold both
         max_len = max(max_len, t_all)
         cache = self.init_cache(bsz, max_len)
         kc = cache["k"].at[:, :, :t_all].set(kvs["k"].astype(cache["k"].dtype))
         vc = cache["v"].at[:, :, :t_all].set(kvs["v"].astype(cache["v"].dtype))
-        return logits, {"k": kc, "v": vc,
-                        "len": jnp.full((bsz,), t_all, jnp.int32)}
+        length = (lengths if lengths is not None
+                  else jnp.full((bsz,), t_all, jnp.int32))
+        return logits, {"k": kc, "v": vc, "len": length}
 
     def decode_step(self, params, token, cache):
         cfg = self.cfg
@@ -333,6 +381,9 @@ class Model:
             return _mamba_decode(params, cfg, token, cache)
         if cfg.family == "griffin":
             return _griffin_decode(params, cfg, token, cache)
+        from repro.serve.kv_cache import PagedKVCache
+        if isinstance(cache, PagedKVCache):
+            return transformer.decode_step_paged(params, cfg, token, cache)
         return transformer.decode_step(params, cfg, token, cache)
 
     # ---- dry-run support ----
@@ -362,6 +413,12 @@ class Model:
         cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
         return jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+
+    def paged_cache_specs(self, batch: int, num_pages: int, page_size: int,
+                          max_pages_per_seq: int):
+        from repro.serve import kv_cache
+        return kv_cache.paged_cache_specs(self, batch, num_pages,
+                                          page_size, max_pages_per_seq)
 
     # ---- sharding ----
     def param_logical_axes(self) -> Any:
@@ -454,8 +511,12 @@ class Model:
             axes["head"] = ("fsdp_embed", "vocab")
         return axes
 
-    def cache_logical_axes(self, cache_specs: dict) -> dict:
+    def cache_logical_axes(self, cache_specs) -> dict:
         """Logical axes for the decode cache (KV sequence sharded over TP)."""
+        from repro.serve.kv_cache import (PagedKVCache,
+                                          paged_cache_logical_axes)
+        if isinstance(cache_specs, PagedKVCache):
+            return paged_cache_logical_axes(cache_specs)
         cfg = self.cfg
         axes: dict[str, Any] = {"len": ("batch",)}
         if "k" in cache_specs:

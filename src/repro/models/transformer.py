@@ -14,6 +14,7 @@ Cache layout: {"k": (L, B, S, Hkv, D), "v": same, "len": (B,) int32}.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -166,6 +167,45 @@ def apply_block_decode(p, x, cfg, k_cache, v_cache, cur_len, window: int):
     return x + y, k_cache, v_cache
 
 
+def apply_block_decode_paged(p, x, cfg, k_pool, v_pool, page_table,
+                             cur_len, page_size: int):
+    """One-token block over the paged cache. x (B, 1, d); pools
+    (num_pages, page_size, Hkv, D); ``page_table`` (B, max_pages_per_seq).
+
+    Same math as :func:`apply_block_decode` — the K/V write routes through
+    the page table (unallocated pages drop the write, the paged
+    drop-at-capacity contract) and attention walks only the allocated
+    pages via ``kernels.ops.flash_decode`` (fused Pallas on TPU, XLA
+    page-gather + ``decode_attention`` elsewhere).  Sliding windows are a
+    ring-buffer linear-cache feature; paged serving rejects them upstream.
+    """
+    from repro.kernels import ops
+    from repro.serve.kv_cache import paged_token_write, token_write_dest
+    h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        pos = cur_len[:, None]
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    num_pages = k_pool.shape[0]
+    dest = token_write_dest(page_table, cur_len, page_size, num_pages)
+    k_pool = paged_token_write(k_pool, k[:, 0], dest)
+    v_pool = paged_token_write(v_pool, v[:, 0], dest)
+    cap = page_table.shape[1] * page_size
+    out = ops.flash_decode(q, (k_pool, v_pool),
+                           jnp.minimum(cur_len + 1, cap),
+                           page_table=page_table)
+    x = x + out.reshape(*x.shape[:2], -1) @ p["wo"]
+
+    h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+    if cfg.num_experts:
+        y, _ = moe.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        y = layers.apply_mlp(p["mlp"], h2, cfg.act)
+    return x + y, k_pool, v_pool
+
+
 def _masked_decode_attention(q, k_cache, v_cache, valid):
     b, _, hq, d = q.shape
     hkv = k_cache.shape[2]
@@ -228,10 +268,13 @@ def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
 
 def forward(params, cfg, tokens=None, prefix_embeds=None,
             collect_kv: bool = False, window: Optional[int] = None,
-            last_only: bool = False):
+            last_only: bool = False, last_pos: Optional[jax.Array] = None):
     """Full-sequence forward. Returns (logits, kv_stack | None, aux_loss).
 
     kv_stack (if requested): ({"k": (L,B,T,Hkv,D), "v": ...}) for prefill.
+    ``last_pos`` (B,) int32 gathers each sequence's hidden state at that
+    position before the head (bucketed prefill: the last *valid* token of
+    an end-padded prompt); it overrides ``last_only``.
     """
     window = cfg.window if window is None else window
     x, positions, prefix_len = _embed_inputs(params, cfg, tokens, prefix_embeds)
@@ -260,7 +303,9 @@ def forward(params, cfg, tokens=None, prefix_embeds=None,
         kvs = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *kv_list)
                if collect_kv else None)
 
-    if last_only:
+    if last_pos is not None:
+        x = x[jnp.arange(x.shape[0]), last_pos][:, None]
+    elif last_only:
         x = x[:, -1:, :]
     x = layers.apply_norm(params["ln_f"], x, cfg.norm)
     head = params.get("head", None)
@@ -285,6 +330,40 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
         "v": jnp.zeros((cfg.num_layers, batch, s, cfg.num_kv_heads, hd), dtype),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+
+
+def decode_step_paged(params, cfg, token, cache):
+    """One decode step over a ``repro.serve.kv_cache.PagedKVCache``."""
+    x = jnp.take(params["embed"], token, axis=0)
+    cur_len = cache.lens
+    if cfg.rope_theta == 0 and cfg.family != "audio":
+        pe = sinusoidal_at(cur_len, cfg.d_model)
+        x = x + pe[:, None, :].astype(x.dtype)
+    x = sharding.shard(x, "batch", None, "embed")
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, kc, vc = apply_block_decode_paged(
+            lp, h, cfg, kc, vc, cache.page_table, cur_len, cache.page_size)
+        return h, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v))
+    else:
+        k_list, v_list = [], []
+        for li, lp in enumerate(params["layers"]):
+            x, (kc, vc) = body(x, (lp, cache.k[li], cache.v[li]))
+            k_list.append(kc)
+            v_list.append(vc)
+        k_new, v_new = jnp.stack(k_list), jnp.stack(v_list)
+
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head", None)
+    logits = x @ (head if head is not None else params["embed"].T)
+    return logits, dataclasses.replace(
+        cache, k=k_new, v=v_new,
+        lens=jnp.minimum(cur_len + 1, cache.capacity))
 
 
 def decode_step(params, cfg, token, cache):

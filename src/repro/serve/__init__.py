@@ -1,3 +1,6 @@
-from repro.serve.engine import ServeConfig, Engine
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.kv_cache import (LinearCache, PagedCache, PagedKVCache,
+                                  PageAllocator)
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["ServeConfig", "Engine", "Request", "PagedKVCache",
+           "PageAllocator", "LinearCache", "PagedCache"]

@@ -1,23 +1,56 @@
-"""Batched serving engine: continuous-batching slots over a fixed-shape
-decode step.
+"""Scheduler-grade serving engine: continuous batching over one
+fixed-shape decode step, with bucketed batch prefill, paged-KV admission
+control, preemption, on-device sampling and streaming.
 
 The engine owns a slot-table of ``max_batch`` sequences sharing one cache
-pytree (the jitted decode step is shape-stable — production TPU serving
-requirement). Requests queue; free slots are refilled by prefilling the
-prompt into the slot's cache region. Termination on EOS or ``max_new``.
+(the jitted decode step is shape-stable — production TPU serving
+requirement) and a FIFO queue of pending requests. Per iteration it
 
-Quantized serving: pass a model whose params came from the AffineQuant
-pipeline — either fake-quant effective weights through the ordinary
-``Model`` (identical graph, simulation), or the real packed path: a
-``repro.serve.quantized.QuantizedModel`` over a
-``repro.core.qtensor.QTensor`` tree from
-``quantize_dense_model(..., deploy="packed")`` for the memory-bound decode
-win quantified in EXPERIMENTS.md §Perf. Both expose the same
-``prefill``/``decode_step`` interface, so the engine is oblivious.
+  1. **admits**: pops a FIFO prefix run of pending requests whose prompts
+     pad to the same bucket (``prefill_bucket`` multiples — a bounded
+     compile set instead of one compile per prompt length) and prefills
+     them in ONE batched call; end-padding is exact for causal-attention
+     models (``model.supports_padded_prefill`` — recurrent families group
+     by exact length instead). Paged mode reserves each prompt's
+     ``ceil(len / page_size)`` pages before prefill and the prefilled K/V
+     are spliced into those pages;
+  2. **ensures capacity** (paged): a sequence crossing a page boundary gets
+     one page from the free list; when the pool runs dry the engine
+     preempts the *longest* active sequence — frees its pages and re-queues
+     it at the queue head (resume = re-prefill prompt + generated tokens,
+     whose next-token logits match the unpreempted decode);
+  3. **decodes + samples on device**: one jitted step computes logits AND
+     the next token — greedy at ``temperature == 0``, otherwise
+     temperature/top-k sampling with a per-(request, position) PRNG key
+     (``fold_in(fold_in(seed, rid), n_generated)``), so sampled streams are
+     reproducible and independent of slot placement or preemption;
+  4. **retires**: EOS / ``max_new`` / capacity; completed slots return
+     their pages to the free list (linear slots just reset ``len``).
+
+All scheduling state (queue, slot lengths, page free list) is host-side —
+the loop never blocks on a device sync to schedule; the only readback per
+step is the sampled token batch itself.
+
+Cache layouts are behind ``repro.serve.kv_cache`` stores: ``LinearCache``
+(contiguous ``max_batch × max_len`` slab) and ``PagedCache``
+(``ServeConfig.paged``) — a page pool + per-sequence page tables, so cache
+memory tracks live tokens, not slots (DESIGN.md §9). The engine calls only
+``reserve`` / ``splice`` / ``ensure_append`` / ``free`` and never inspects
+cache-entry ranks.
+
+Quantized serving: pass a ``repro.serve.quantized.QuantizedModel`` over a
+QTensor tree — ``Model`` and ``QuantizedModel`` expose the same
+``prefill`` / ``decode_step`` / ``init_cache`` / ``init_paged_cache``
+interface, so the engine is oblivious to quantization.
+
+Caveat (MoE): expert-capacity routing competes across every token in a
+prefill batch, so bucket padding can shift routing for valid tokens —
+dense/GQA models are exact, MoE prefill is the documented approximation.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Optional
 
 import jax
@@ -25,7 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.utils import logger
+from repro.serve import kv_cache
+from repro.utils import logger, next_multiple
 
 
 @dataclasses.dataclass
@@ -35,14 +69,38 @@ class ServeConfig:
     max_new: int = 64
     eos_token: int = -1          # -1: never terminates early
     temperature: float = 0.0     # 0 = greedy
+    top_k: int = 0               # 0 = full categorical (when sampling)
+    seed: int = 0                # PRNG seed for sampling
+    prefill_bucket: int = 32     # prompt-length bucket granularity
+    paged: bool = False          # page-table KV cache + admission control
+    page_size: int = 64
+    num_pages: int = 0           # 0 = auto (max_batch * pages(max_len))
+    max_pages_per_seq: int = 0   # 0 = auto (ceil(max_len / page_size))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    preemptions: int = 0
+    on_token: Optional[Callable[["Request", int], None]] = None
+    on_done: Optional[Callable[["Request"], None]] = None
+
+    @property
+    def resume_len(self) -> int:
+        """Length of :meth:`resume_tokens` without materializing it."""
+        return len(self.prompt) + len(self.out_tokens)
+
+    def resume_tokens(self) -> np.ndarray:
+        """Prompt for (re-)admission: original prompt plus everything
+        generated so far — the prefill's next-token logits continue the
+        stream exactly where the preempted decode left off."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
 
 
 class Engine:
@@ -50,90 +108,229 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._decode = jax.jit(model.decode_step)
-        self._queue: list[Request] = []
+        if cfg.paged:
+            self._kv = kv_cache.PagedCache(
+                model, cfg.max_batch, cfg.max_len, cfg.page_size,
+                num_pages=cfg.num_pages,
+                max_pages_per_seq=cfg.max_pages_per_seq)
+        else:
+            self._kv = kv_cache.LinearCache(model, cfg.max_batch,
+                                            cfg.max_len)
+        self._decode = jax.jit(self._decode_and_sample)
+        self._pending: deque[Request] = deque()
+        self._all: list[Request] = []
         self._slots: list[Optional[Request]] = [None] * cfg.max_batch
-        self._cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self._seq_len = [0] * cfg.max_batch          # host-side cache lens
+        self._next_rid = 0                            # monotonic request ids
         self._last_tok = jnp.zeros((cfg.max_batch, 1), jnp.int32)
-        self._new_count = np.zeros(cfg.max_batch, np.int64)
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        self._idle_keys = jnp.zeros((cfg.max_batch,)
+                                    + self._base_key.shape,
+                                    self._base_key.dtype)
+        self._supports_padded = bool(
+            getattr(model, "supports_padded_prefill", False))
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray) -> Request:
-        req = Request(rid=len(self._queue), prompt=np.asarray(prompt,
-                                                              np.int32))
-        self._queue.append(req)
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, on_token=None,
+               on_done=None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array; "
+                             f"got shape {prompt.shape}")
+        if prompt.size >= self._kv.capacity:
+            raise ValueError(f"prompt length {prompt.size} needs "
+                             f"{prompt.size + 1} cache slots; capacity is "
+                             f"{self._kv.capacity}")
+        req = Request(rid=self._next_rid, prompt=prompt, on_token=on_token,
+                      on_done=on_done)
+        self._next_rid += 1
+        self._pending.append(req)
+        self._all.append(req)
         return req
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _req_keys(self, reqs) -> jax.Array:
+        """Per-(request, position) sampling keys: reproducible across
+        engines, slot placements and preemptions.  Greedy mode ignores
+        keys, so skip the per-step fold_in dispatch and pass a constant."""
+        if self.cfg.temperature <= 0:
+            if len(reqs) == self.cfg.max_batch:
+                return self._idle_keys
+            return self._idle_keys[:len(reqs)]
+        rids = jnp.asarray([r.rid for r in reqs], jnp.int32)
+        cnts = jnp.asarray([len(r.out_tokens) for r in reqs], jnp.int32)
+        fold = lambda r, c: jax.random.fold_in(
+            jax.random.fold_in(self._base_key, r), c)
+        return jax.vmap(fold)(rids, cnts)
+
+    def _sample(self, lg: jax.Array, keys: jax.Array) -> jax.Array:
+        """lg (N, V) -> (N,) int32. Greedy at temperature 0, else
+        temperature/top-k categorical (jit-safe; config is static)."""
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        lg = lg.astype(jnp.float32) / self.cfg.temperature
+        if self.cfg.top_k > 0:
+            kth = jax.lax.top_k(lg, self.cfg.top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+    def _decode_and_sample(self, params, tok, cache, keys):
+        logits, cache = self.model.decode_step(params, tok, cache)
+        return self._sample(logits[:, -1, :], keys), cache
+
+    # ------------------------------------------------------------------
+    # admission: bucketed batch prefill
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        """Pad-to-bucket prompt length (a bounded compile set). Models that
+        cannot take end padding (recurrent state) get exact lengths."""
+        if not self._supports_padded:
+            return n
+        return min(next_multiple(n, self.cfg.prefill_bucket),
+                   self._kv.capacity)
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
 
     def _admit(self) -> None:
-        """Prefill pending requests into free slots (one at a time — the
-        prefill is a separate jit with per-length compilation; production
-        would bucket prompt lengths)."""
-        for slot in self._free_slots():
-            pending = [r for r in self._queue if not r.done
-                       and r not in self._slots]
-            if not pending:
-                return
-            req = pending[0]
-            logits, cache1 = self.model.prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
-                max_len=self.cfg.max_len)
-            # splice the single-sequence cache into the batch cache
-            for k in self._cache:
-                if k == "len":
-                    self._cache["len"] = self._cache["len"].at[slot].set(
-                        int(cache1["len"][0]))
-                else:
-                    # pad sequence dim to the batch cache's length
-                    src = cache1[k]
-                    dst = self._cache[k]
-                    if src.shape[2:] != dst.shape[2:] and src.ndim >= 3 \
-                            and src.shape[2] != dst.shape[2]:
-                        pad = dst.shape[2] - src.shape[2]
-                        if pad > 0:
-                            width = [(0, 0)] * src.ndim
-                            width[2] = (0, pad)
-                            src = jnp.pad(src, width)
-                    self._cache[k] = dst.at[:, slot].set(src[:, 0])
-            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
-            self._last_tok = self._last_tok.at[slot, 0].set(tok)
-            req.out_tokens.append(int(tok))
-            self._new_count[slot] = 1
-            self._slots[slot] = req
+        free = self._free_slots()
+        while free and self._pending:
+            # FIFO prefix run sharing one bucket -> one batched prefill
+            bucket = self._bucket(self._pending[0].resume_len)
+            group: list[Request] = []
+            while (self._pending and len(group) < len(free)
+                   and self._bucket(self._pending[0].resume_len) == bucket):
+                group.append(self._pending.popleft())
+            # paged: reserve prompt pages up front; requests that do not
+            # fit go back to the queue head (FIFO order preserved)
+            fitted: list[tuple[int, Request, int]] = []
+            for req in group:
+                slot = free[len(fitted)]
+                if not self._kv.reserve(slot, req.resume_len):
+                    break
+                fitted.append((slot, req, req.resume_len))
+            overflow = group[len(fitted):]
+            self._pending.extendleft(reversed(overflow))
+            if not fitted:
+                if not any(s is not None for s in self._slots):
+                    # nothing to wait for: the request exceeds the pool
+                    req = self._pending[0]
+                    raise RuntimeError(
+                        f"request rid={req.rid} needs "
+                        f"{req.resume_len} cache tokens but the "
+                        f"idle pool cannot hold them — size num_pages up")
+                return           # pool dry: wait for completions to free pages
+            free = free[len(fitted):]
+
+            tokens = np.zeros((len(fitted), bucket), np.int32)
+            lengths = np.asarray([ln for _, _, ln in fitted], np.int32)
+            for row, (_, req, ln) in enumerate(fitted):
+                tokens[row, :ln] = req.resume_tokens()
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self._supports_padded:
+                batch["lengths"] = jnp.asarray(lengths)
+            logits, cache1 = self.model.prefill(self.params, batch,
+                                                max_len=bucket)
+            toks = np.asarray(self._sample(
+                logits[:, -1, :], self._req_keys([r for _, r, _ in fitted])))
+            slot_ids, slot_toks = [], []
+            for row, (slot, req, ln) in enumerate(fitted):
+                self._kv.splice(slot, cache1, row, int(ln))
+                tok = int(toks[row])
+                req.out_tokens.append(tok)
+                if req.on_token:
+                    req.on_token(req, tok)
+                self._slots[slot] = req
+                self._seq_len[slot] = int(ln)
+                slot_ids.append(slot)
+                slot_toks.append(tok)
+                self._maybe_finish(slot, tok)
+            self._last_tok = self._last_tok.at[
+                jnp.asarray(slot_ids), 0].set(jnp.asarray(slot_toks))
+            # a request can retire straight from prefill (EOS / max_new=1):
+            # hand its slot back so this admission pass can refill it
+            free.extend(s for s in slot_ids if self._slots[s] is None)
 
     # ------------------------------------------------------------------
+    # preemption (paged admission control)
+    # ------------------------------------------------------------------
+    def _preempt(self, slot: int) -> None:
+        req = self._slots[slot]
+        logger.debug("preempt rid=%d (len=%d): pool dry", req.rid,
+                     self._seq_len[slot])
+        req.preemptions += 1
+        self._slots[slot] = None
+        self._seq_len[slot] = 0
+        self._kv.free(slot)
+        self._pending.appendleft(req)   # resumes first when pages free up
+
+    def _ensure_capacity(self, active: list[int]) -> list[int]:
+        """Make every active slot's next token write page-backed; evict the
+        longest sequence (freeing its pages) when the pool runs dry."""
+        for slot in list(active):
+            if self._slots[slot] is None:
+                continue
+            while not self._kv.ensure_append(slot, self._seq_len[slot]):
+                live = [i for i in active if self._slots[i] is not None]
+                victim = max(live, key=lambda i: (self._seq_len[i], -i))
+                self._preempt(victim)
+                if victim == slot:
+                    break
+        return [i for i in active if self._slots[i] is not None]
+
+    # ------------------------------------------------------------------
+    # the engine loop
+    # ------------------------------------------------------------------
+    def _maybe_finish(self, slot: int, tok: int) -> None:
+        req = self._slots[slot]
+        cache_full = self._seq_len[slot] >= self._kv.capacity - 1
+        if (tok == self.cfg.eos_token
+                or len(req.out_tokens) >= self.cfg.max_new or cache_full):
+            req.done = True
+            if req.on_done:
+                req.on_done(req)
+            self._slots[slot] = None
+            self._seq_len[slot] = 0
+            self._kv.free(slot)
+
     def step(self) -> int:
-        """One engine iteration: admit + one batched decode step.
-        Returns number of active sequences."""
+        """One engine iteration: admit + ensure pages + one batched decode
+        step. Returns the number of sequences decoded."""
         self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
+        if self.cfg.paged:
+            active = self._ensure_capacity(active)
         if not active:
             return 0
-        logits, self._cache = self._decode(self.params, self._last_tok,
-                                           self._cache)
-        if self.cfg.temperature > 0:
-            raise NotImplementedError("sampling: greedy only in this engine")
-        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        reqs = [self._slots[i] if self._slots[i] is not None
+                else _IDLE_REQ for i in range(self.cfg.max_batch)]
+        nxt, cache = self._decode(self.params, self._last_tok,
+                                  self._kv.cache, self._req_keys(reqs))
+        self._kv.cache = cache
         self._last_tok = nxt[:, None]
         nxt_host = np.asarray(nxt)
         for i in active:
             req = self._slots[i]
             tok = int(nxt_host[i])
             req.out_tokens.append(tok)
-            self._new_count[i] += 1
-            cache_full = bool(self._cache["len"][i] >= self.cfg.max_len - 1)
-            if (tok == self.cfg.eos_token
-                    or self._new_count[i] >= self.cfg.max_new or cache_full):
-                req.done = True
-                self._slots[i] = None
+            if req.on_token:
+                req.on_token(req, tok)
+            self._seq_len[i] += 1
+            self._maybe_finish(i, tok)
         return len(active)
 
     def run(self) -> list[Request]:
-        """Drain the queue; returns completed requests."""
-        while any(not r.done for r in self._queue):
+        """Drain the queue; returns every submitted request, in
+        submission order."""
+        while any(not r.done for r in self._all):
             n = self.step()
-            if n == 0 and all(r.done for r in self._queue):
+            if n == 0 and not self._pending:
                 break
-        return self._queue
+        return self._all
+
+
+_IDLE_REQ = Request(rid=0, prompt=np.zeros((1,), np.int32))

@@ -1,0 +1,376 @@
+"""Paged KV cache: a global page pool, per-sequence page tables, and the
+host-side allocator + engine-facing cache stores for both cache layouts.
+
+Why pages: the linear serving cache reserves a contiguous ``max_batch x
+max_len`` slab per slot, so a 512-token request in a 32k-slot engine wastes
+~98% of the int8 cache the quantized pipeline worked to shrink.  The paged
+layout (vLLM-style) carves the cache into fixed-size pages:
+
+    pool          k / v: (L, num_pages, page_size, Hkv, D)
+                  int8 codes when ``kv_bits < 16`` (plus per-(token, head)
+                  f32 scale pools (L, num_pages, page_size, Hkv)), fp pages
+                  otherwise — the exact per-token layout of the linear cache,
+                  just page-blocked
+    page tables   (max_batch, max_pages_per_seq) int32 — logical page ``j``
+                  of sequence ``b`` lives in pool page ``page_table[b, j]``;
+                  ``-1`` marks an unallocated logical page
+    lens          (B,) int32 valid token count per sequence
+
+A sequence of length ``n`` holds exactly ``ceil(n / page_size)`` pages, so
+pool memory tracks the *live* token count, not ``max_batch * max_len``.
+
+Device/host split: :class:`PagedKVCache` is the pytree the jitted decode
+step carries (pure arrays; ``page_size`` is static aux data).  Allocation is
+host-side bookkeeping — :class:`PageAllocator` owns the free list, and the
+engine-facing stores (:class:`PagedCache`, :class:`LinearCache`) pair the
+device pytree with allocate/append/free plus ``splice`` (writing a prefilled
+sequence into a slot) so the Engine never touches cache-entry ranks.
+
+Cache layout contract (shared with ``models/transformer.py``): linear cache
+entries are ``(L, B, S, ...)`` with the sequence axis at position 2; the
+keys with a sequence axis are exactly ``k / v / k_scale / v_scale``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import ceil_div, tree_bytes
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKVCache:
+    """Device-side paged cache state (the decode step's carry).
+
+    ``k``/``v``: (L, num_pages, page_size, Hkv, D) pools — int8 codes or fp.
+    ``k_scale``/``v_scale``: (L, num_pages, page_size, Hkv) f32, or None
+    when the cache stores fp pages (``kv_bits >= 16``).
+    ``page_table``: (max_batch, max_pages_per_seq) int32; -1 = unallocated.
+    ``lens``: (B,) int32 valid positions per sequence.
+    """
+    k: jax.Array
+    v: jax.Array
+    page_table: jax.Array
+    lens: jax.Array
+    k_scale: Optional[jax.Array]
+    v_scale: Optional[jax.Array]
+    page_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Max logical tokens one sequence can hold."""
+        return self.max_pages_per_seq * self.page_size
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def token_write_dest(page_table: jax.Array, lens: jax.Array,
+                     page_size: int, num_pages: int) -> jax.Array:
+    """Flat pool index (into a ``(num_pages * page_size, ...)`` view) where
+    each sequence's next token lands.
+
+    Returns ``num_pages * page_size`` (out of bounds — the scatter drops the
+    write, matching the linear cache's drop-at-capacity contract) where the
+    logical page is unallocated or the sequence is at capacity.  Shared by
+    the fp and packed decode paths so the write semantics cannot drift.
+    """
+    b, mpps = page_table.shape
+    page_idx = jnp.minimum(lens // page_size, mpps - 1)
+    page = page_table[jnp.arange(b), page_idx]
+    valid = (page >= 0) & (lens < mpps * page_size)
+    return jnp.where(valid, page * page_size + lens % page_size,
+                     num_pages * page_size)
+
+
+def paged_token_write(pool: jax.Array, val: jax.Array,
+                      dest: jax.Array) -> jax.Array:
+    """Scatter one token per sequence into a page pool.
+
+    ``pool`` (num_pages, page_size, ...); ``val`` (B, ...) matching the
+    pool's trailing dims; ``dest`` flat indices from
+    :func:`token_write_dest` (out-of-bounds entries drop).  The one write
+    implementation both the fp and packed paged decode paths call, so the
+    drop-at-capacity contract cannot drift between them.
+    """
+    flat = pool.reshape(pool.shape[0] * pool.shape[1], *pool.shape[2:])
+    return flat.at[dest].set(val.astype(pool.dtype)).reshape(pool.shape)
+
+
+def paged_cache_logical_axes(cache: PagedKVCache) -> dict:
+    """Logical sharding axes for the paged cache, keyed by field name.
+
+    Pages shard over the same mesh axis the linear cache's ``kv_seq`` uses
+    (``kv_pages`` -> "model" in the default rules): the pool's page dim is
+    the distributed-decode analog of the linear sequence dim.  Page tables
+    and lens stay batch-sharded like the linear ``len``.
+    """
+    axes = {"k": ("layers", "kv_pages", None, None, None),
+            "v": ("layers", "kv_pages", None, None, None),
+            "page_table": ("batch", None),
+            "lens": ("batch",),
+            "k_scale": None, "v_scale": None}
+    if cache.k_scale is not None:
+        axes["k_scale"] = ("layers", "kv_pages", None, None)
+        axes["v_scale"] = ("layers", "kv_pages", None, None)
+    return axes
+
+
+def pages_for(length: int, page_size: int) -> int:
+    return max(0, ceil_div(length, page_size))
+
+
+def make_paged_cache(*, num_layers: int, num_kv_heads: int, head_dim: int,
+                     batch: int, num_pages: int, page_size: int,
+                     max_pages_per_seq: int, dtype,
+                     quantized: bool) -> PagedKVCache:
+    """The one pool constructor both the fp and packed model paths call —
+    int8 code pages + f32 scale pages when ``quantized``, ``dtype`` pages
+    otherwise — so the paged layout cannot diverge between them."""
+    shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
+    if quantized:
+        kdt = jnp.int8
+        ks = jnp.zeros(shape[:-1], jnp.float32)
+        vs = jnp.zeros(shape[:-1], jnp.float32)
+    else:
+        kdt, ks, vs = jnp.dtype(dtype), None, None
+    return PagedKVCache(
+        k=jnp.zeros(shape, kdt), v=jnp.zeros(shape, kdt),
+        page_table=jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
+        lens=jnp.zeros((batch,), jnp.int32),
+        k_scale=ks, v_scale=vs, page_size=page_size)
+
+
+def paged_cache_specs(model, batch: int, num_pages: int, page_size: int,
+                      max_pages_per_seq: int) -> PagedKVCache:
+    """ShapeDtypeStruct tree of a model's paged cache (no allocation)."""
+    cache = jax.eval_shape(lambda: model.init_paged_cache(
+        batch, num_pages, page_size, max_pages_per_seq))
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+
+
+class PageAllocator:
+    """Host-side free-list over the page pool.
+
+    Pure bookkeeping — device ``page_table`` updates are done by the store
+    that owns the arrays.  ``owned[slot]`` lists the pool pages backing a
+    slot in logical order; the free list is a LIFO stack so recently freed
+    (still-warm) pages are reused first.
+    """
+
+    def __init__(self, num_pages: int, max_pages_per_seq: int,
+                 max_batch: int):
+        self.num_pages = num_pages
+        self.max_pages_per_seq = max_pages_per_seq
+        self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
+        self.owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.peak_in_use = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free_list)
+
+    @property
+    def num_in_use(self) -> int:
+        return self.num_pages - len(self.free_list)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self.free_list)
+
+    def allocate(self, slot: int, n: int) -> Optional[list[int]]:
+        """Grow ``slot`` by ``n`` pages; None (state unchanged) if the pool
+        or the slot's page table cannot hold them."""
+        if n > len(self.free_list):
+            return None
+        if len(self.owned[slot]) + n > self.max_pages_per_seq:
+            return None
+        pages = [self.free_list.pop() for _ in range(n)]
+        self.owned[slot].extend(pages)
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return pages
+
+    def free(self, slot: int) -> int:
+        """Return every page of ``slot`` to the free list."""
+        pages = self.owned[slot]
+        n = len(pages)
+        self.free_list.extend(reversed(pages))
+        self.owned[slot] = []
+        return n
+
+
+# ---------------------------------------------------------------------------
+# engine-facing cache stores
+# ---------------------------------------------------------------------------
+
+_SEQ_KEYS = ("k", "v", "k_scale", "v_scale")   # linear entries with a seq axis
+
+
+class LinearCache:
+    """The contiguous slot-table cache behind the Engine's linear mode.
+
+    Owns the ``{"k", "v", ..., "len"}`` pytree the decode step carries and
+    the splice/free slot operations, so the Engine never inspects
+    cache-entry ranks (layout contract: ``(L, B, S, ...)``, seq axis 2).
+    """
+
+    def __init__(self, model, max_batch: int, max_len: int):
+        self.cache = model.init_cache(max_batch, max_len)
+        self.max_len = max_len
+
+    # uniform store API ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.max_len
+
+    def reserve(self, slot: int, length: int) -> bool:
+        """Linear slots are preallocated; only the capacity check applies."""
+        return length <= self.max_len
+
+    def ensure_append(self, slot: int, length: int) -> bool:
+        """Capacity for writing token ``length`` (0-based) exists up front;
+        past-capacity writes drop (see transformer.apply_block_decode)."""
+        return True
+
+    def splice(self, slot: int, seq_cache: dict, row: int,
+               length: int) -> None:
+        """Write row ``row`` of a prefilled cache into ``slot``.
+
+        Sequence-axis entries whose prefill length (often a prompt bucket)
+        differs from the engine's ``max_len`` are spliced as a prefix along
+        the seq axis; everything else (recurrent ssm/conv/rnn states) copies
+        whole.  ``length`` is the host-known valid token count — no device
+        sync."""
+        dst = self.cache
+        for key, src in seq_cache.items():
+            if key == "len":
+                continue
+            d = dst[key]
+            if key in _SEQ_KEYS and src.shape[2] != d.shape[2]:
+                t = min(src.shape[2], d.shape[2])
+                dst[key] = d.at[:, slot, :t].set(
+                    src[:, row, :t].astype(d.dtype))
+            else:
+                dst[key] = d.at[:, slot].set(src[:, row].astype(d.dtype))
+        dst["len"] = dst["len"].at[slot].set(length)
+
+    def free(self, slot: int) -> None:
+        """Retire a slot: stale K/V stay (len-masked); only len resets."""
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+
+    def cache_bytes(self) -> int:
+        return tree_bytes(self.cache)
+
+
+class PagedCache:
+    """Page-table cache store: device ``PagedKVCache`` + host allocator.
+
+    The engine admits with :meth:`reserve` (prompt pages), grows with
+    :meth:`ensure_append` (one page at the boundary token), reclaims with
+    :meth:`free`.  All length accounting is host-side (the engine knows
+    every sequence's length without a device sync); the device ``lens`` is
+    updated by splice and by the decode step itself.
+    """
+
+    def __init__(self, model, max_batch: int, max_len: int, page_size: int,
+                 num_pages: int = 0, max_pages_per_seq: int = 0):
+        mpps = max_pages_per_seq or pages_for(max_len, page_size)
+        pool = num_pages or max_batch * mpps   # default: linear-equivalent
+        self.cache: PagedKVCache = model.init_paged_cache(
+            max_batch, pool, page_size, mpps)
+        self.page_size = page_size
+        self.max_len = min(max_len, mpps * page_size)
+        self.allocator = PageAllocator(pool, mpps, max_batch)
+
+    # uniform store API ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.max_len
+
+    def reserve(self, slot: int, length: int) -> bool:
+        """Allocate the prompt's ``ceil(length / page_size)`` pages and
+        publish them to the slot's device page-table row."""
+        assert not self.allocator.owned[slot], "reserve on an occupied slot"
+        n = pages_for(length, self.page_size)
+        pages = self.allocator.allocate(slot, n)
+        if pages is None:
+            return False
+        pt = self.cache.page_table.at[slot, :n].set(
+            jnp.asarray(pages, jnp.int32))
+        self.cache = dataclasses.replace(self.cache, page_table=pt)
+        return True
+
+    def ensure_append(self, slot: int, length: int) -> bool:
+        """Make the write of token index ``length`` (0-based) backed by a
+        page; allocates at page boundaries, False when the pool is dry."""
+        idx = len(self.allocator.owned[slot])   # logical index of a new page
+        if length < idx * self.page_size:
+            return True
+        pages = self.allocator.allocate(slot, 1)
+        if pages is None:
+            return False
+        pt = self.cache.page_table.at[slot, idx].set(pages[0])
+        self.cache = dataclasses.replace(self.cache, page_table=pt)
+        return True
+
+    def splice(self, slot: int, seq_cache: dict, row: int,
+               length: int) -> None:
+        """Scatter a prefilled linear sequence cache into the slot's pages.
+
+        ``seq_cache`` is the ordinary prefill output (``(L, B, T, ...)``);
+        the T axis is page-blocked and written to the slot's pool pages in
+        one scatter per tensor.  Tail positions of the last page (and any
+        prefill bucket padding) carry garbage — they are beyond ``lens`` and
+        never attended."""
+        pages = self.allocator.owned[slot]
+        n = len(pages)
+        ps = self.page_size
+        assert n == pages_for(length, ps), (n, length, ps)
+        if n == 0:
+            return
+        pidx = jnp.asarray(pages, jnp.int32)
+        cache = self.cache
+        new = {}
+        want = n * ps
+        for key in _SEQ_KEYS:
+            pool = getattr(cache, key)
+            if pool is None:
+                continue
+            src = seq_cache[key][:, row]          # (L, T, ...), seq axis 1
+            t = src.shape[1]
+            if t < want:
+                width = [(0, 0)] * src.ndim
+                width[1] = (0, want - t)
+                src = jnp.pad(src, width)
+            else:
+                src = src[:, :want]
+            blocked = src.reshape(src.shape[0], n, ps, *src.shape[2:])
+            new[key] = pool.at[:, pidx].set(blocked.astype(pool.dtype))
+        lens = cache.lens.at[slot].set(length)
+        self.cache = dataclasses.replace(cache, lens=lens, **new)
+
+    def free(self, slot: int) -> int:
+        """Reclaim the slot's pages (stale pool contents stay — every read
+        is gated by the page table and lens)."""
+        n = self.allocator.free(slot)
+        pt = self.cache.page_table.at[slot].set(-1)
+        lens = self.cache.lens.at[slot].set(0)
+        self.cache = dataclasses.replace(self.cache, page_table=pt,
+                                         lens=lens)
+        return n
+
+    def cache_bytes(self) -> int:
+        return tree_bytes(self.cache)

@@ -179,6 +179,12 @@ class QuantizedModel:
     def _kv_quantized(self) -> bool:
         return self.qcfg.kv_bits < 16
 
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """Bucketed engine prefill (end-padded prompts + per-sequence
+        ``lengths``) is exact for the causal transformer trunk."""
+        return True
+
     # cache API identical to Model (int8 codes + per-(token, head) scales
     # when kv_bits < 16)
     def init_cache(self, batch: int, max_len: int) -> dict:
@@ -195,18 +201,47 @@ class QuantizedModel:
                 "v_scale": jnp.zeros(kshape[:-1], jnp.float32),
                 "len": jnp.zeros((batch,), jnp.int32)}
 
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         max_pages_per_seq: int):
+        """Paged pool cache (``repro.serve.kv_cache.PagedKVCache``): int8
+        code pages + f32 scale pages when ``kv_bits < 16``, fp pages
+        otherwise.  Same per-token layout as the linear cache, page-blocked
+        so pool memory tracks live tokens instead of ``batch * max_len``."""
+        from repro.serve.kv_cache import make_paged_cache
+        cfg = self.cfg
+        return make_paged_cache(
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, batch=batch,
+            num_pages=num_pages, page_size=page_size,
+            max_pages_per_seq=max_pages_per_seq, dtype=cfg.dtype,
+            quantized=self._kv_quantized)
+
     def cache_specs(self, batch: int, max_len: int) -> dict:
         cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
         return jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
 
+    def paged_cache_specs(self, batch: int, num_pages: int, page_size: int,
+                          max_pages_per_seq: int):
+        from repro.serve import kv_cache
+        return kv_cache.paged_cache_specs(self, batch, num_pages,
+                                          page_size, max_pages_per_seq)
+
     # ------------------------------------------------------------------
     # prefill (batched token matmuls; dequant_matmul handles ragged M)
     # ------------------------------------------------------------------
     def prefill(self, params, batch, max_len: int):
-        """Full-prompt forward building the decode cache on packed weights."""
+        """Full-prompt forward building the decode cache on packed weights.
+
+        ``batch["lengths"]`` (B,) int32, if present, marks per-sequence
+        valid prompt lengths for bucketed engine prefill: prompts are
+        end-padded to a shared bucket, so causality keeps every valid
+        position exact; logits are gathered at ``lengths - 1`` and the
+        cache ``len`` records the true lengths (pad K/V beyond them are
+        never attended and get overwritten by decode writes)."""
         cfg = self.cfg
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
         bsz, t = tokens.shape
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.rope_theta == 0:
@@ -221,12 +256,18 @@ class QuantizedModel:
             x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
         else:
             raise NotImplementedError("packed serving assumes scan layout")
-        x = layers.apply_norm(params["ln_f"], x[:, -1:, :], cfg.norm)
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            x = x[jnp.arange(bsz), lengths - 1][:, None]
+        else:
+            x = x[:, -1:, :]
+        x = layers.apply_norm(params["ln_f"], x, cfg.norm)
         head = params.get("head")
         logits = x @ (head if head is not None else params["embed"].T)
         max_len = max(max_len, t)
         cache = self.init_cache(bsz, max_len)
-        length = jnp.full((bsz,), t, jnp.int32)
+        length = (lengths if lengths is not None
+                  else jnp.full((bsz,), t, jnp.int32))
         if self._kv_quantized:
             kq, k_s = _kv_quantize(ks, self.qcfg.kv_bits)
             vq, v_s = _kv_quantize(vs, self.qcfg.kv_bits)
@@ -268,6 +309,9 @@ class QuantizedModel:
     # decode
     # ------------------------------------------------------------------
     def decode_step(self, params, token, cache):
+        from repro.serve.kv_cache import PagedKVCache
+        if isinstance(cache, PagedKVCache):
+            return self._decode_step_paged(params, token, cache)
         cfg = self.cfg
         x = jnp.take(params["embed"], token, axis=0)
         cur_len = cache["len"]
@@ -302,7 +346,10 @@ class QuantizedModel:
             new_cache["k_scale"], new_cache["v_scale"] = kv_new[2], kv_new[3]
         return logits, new_cache
 
-    def _block_decode(self, p, x, kv, cur_len):
+    def _decode_qkv(self, p, x, cur_len):
+        """Shared decode-step q/k/v half (norm → transform → packed matmuls
+        → RoPE at the absolute position) — one implementation for both
+        cache layouts so the linear and paged paths cannot drift."""
         cfg = self.cfg
         h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
         h = _act_transform(p.get("attn_t"), h)
@@ -320,6 +367,11 @@ class QuantizedModel:
             pos = cur_len[:, None]
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             k = layers.apply_rope(k, pos, cfg.rope_theta)
+        return q, k, v
+
+    def _block_decode(self, p, x, kv, cur_len):
+        b = x.shape[0]
+        q, k, v = self._decode_qkv(p, x, cur_len)
         s = kv[0].shape[1]
         # a full cache drops the write: the saturated index s is out of
         # bounds and OOB scatter updates are dropped, so slot s-1 is never
@@ -347,6 +399,75 @@ class QuantizedModel:
         # decode_attention fallback — the only path that materializes fp K/V
         out = ops.flash_decode(q, kv, jnp.minimum(cur_len + 1, s),
                                block_kv=self.flash_block_kv,
+                               mode=self.kernel_mode)
+        x = x + self._mm(out.reshape(b, 1, -1), p["wo"])
+        x = x + self._mlp(p, x)
+        return x, kv
+
+    # ------------------------------------------------------------------
+    # paged decode (PagedKVCache: page pools + per-sequence page tables)
+    # ------------------------------------------------------------------
+    def _decode_step_paged(self, params, token, cache):
+        """One decode step over the paged cache: the token's K/V land in
+        the sequence's current page (via the page table), attention walks
+        only the allocated pages.  Same math as the linear path — only the
+        cache addressing differs."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0)
+        cur_len = cache.lens
+        if cfg.rope_theta == 0:
+            pe = sinusoidal_at(cur_len, cfg.d_model)
+            x = x + pe[:, None, :].astype(x.dtype)
+
+        if self._kv_quantized:
+            kv_in = (cache.k, cache.v, cache.k_scale, cache.v_scale)
+        else:
+            kv_in = (cache.k, cache.v)
+
+        def body(h, xs):
+            lp, kv = xs[0], xs[1:]
+            h, kv = self._block_decode_paged(lp, h, kv, cur_len,
+                                             cache.page_table,
+                                             cache.page_size)
+            return h, kv
+
+        if cfg.scan_layers:
+            x, kv_new = jax.lax.scan(body, x, (params["layers"],) + kv_in)
+        else:
+            raise NotImplementedError("packed serving assumes scan layout")
+        x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+        head = params.get("head")
+        logits = x @ (head if head is not None else params["embed"].T)
+        new = {"k": kv_new[0], "v": kv_new[1],
+               "lens": jnp.minimum(cur_len + 1, cache.capacity)}
+        if self._kv_quantized:
+            new["k_scale"], new["v_scale"] = kv_new[2], kv_new[3]
+        return logits, dataclasses.replace(cache, **new)
+
+    def _block_decode_paged(self, p, x, kv, cur_len, page_table, page_size):
+        from repro.serve.kv_cache import paged_token_write, token_write_dest
+        b = x.shape[0]
+        q, k, v = self._decode_qkv(p, x, cur_len)
+        num_pages = kv[0].shape[0]
+        # write through the page table; unallocated pages / at-capacity
+        # sequences resolve to an out-of-bounds index and the scatter drops
+        # the write (the linear drop-at-capacity contract, paged)
+        dest = token_write_dest(page_table, cur_len, page_size, num_pages)
+        if len(kv) == 4:
+            kc, vc, ksc, vsc = kv
+            kq, k_s = _kv_quantize(k[:, 0], self.qcfg.kv_bits)
+            vq, v_s = _kv_quantize(v[:, 0], self.qcfg.kv_bits)
+            kv = (paged_token_write(kc, kq, dest),
+                  paged_token_write(vc, vq, dest),
+                  paged_token_write(ksc, k_s, dest),
+                  paged_token_write(vsc, v_s, dest))
+        else:
+            kc, vc = kv
+            kv = (paged_token_write(kc, k[:, 0], dest),
+                  paged_token_write(vc, v[:, 0], dest))
+        cap = page_table.shape[1] * page_size
+        out = ops.flash_decode(q, kv, jnp.minimum(cur_len + 1, cap),
+                               page_table=page_table,
                                mode=self.kernel_mode)
         x = x + self._mm(out.reshape(b, 1, -1), p["wo"])
         x = x + self._mlp(p, x)
@@ -446,7 +567,11 @@ class QuantizedModel:
             axes["head"] = (None, "vocab")
         return axes
 
-    def cache_logical_axes(self, cache_specs: dict) -> dict:
+    def cache_logical_axes(self, cache_specs) -> dict:
+        from repro.serve.kv_cache import (PagedKVCache,
+                                          paged_cache_logical_axes)
+        if isinstance(cache_specs, PagedKVCache):
+            return paged_cache_logical_axes(cache_specs)
         axes = build_model(self.cfg).cache_logical_axes(cache_specs)
         if "k_scale" in cache_specs:
             # int8 KV cache: scales shadow the code tensors minus head_dim

@@ -165,6 +165,7 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
         "layers": None,
         # serving
         "kv_seq": "model",                         # distributed decode attention
+        "kv_pages": "model",                       # paged pool: page dim over TP
         "ssm_heads": "model",
         # never sharded
         "head_dim": None,

@@ -1,0 +1,262 @@
+"""Engine scheduling semantics: FIFO admission, isolation, page
+reclamation, preemption round-trips, sampling, streaming, request ids.
+
+These pin the scheduler rewrite's contracts (DESIGN.md §9):
+  * admission is FIFO even through bucketed batch prefill;
+  * a completed slot never leaks tokens into its successor (each request's
+    output equals a solo run of the same prompt);
+  * the page pool reaches steady state (all pages reclaimed) after more
+    requests than the pool can hold at once, and a sequence never holds
+    more than ``ceil(len / page_size)`` pages (free-list accounting);
+  * a preempted-and-resumed request produces the exact tokens of an
+    unpreempted run;
+  * a paged engine over a mixed-length trace is token-identical to the
+    linear-cache engine (the acceptance criterion);
+  * rids are monotonic per engine; sampling is seeded/on-device;
+    per-token callbacks stream in order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+PS = 8   # page size shared by the paged tests (tile == page in ref mode)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """llama-micro on the w8 kv8 packed stack, ref kernels, tile == page —
+    the configuration where linear and paged decode are bit-identical."""
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=PS)
+    return cfg, qm, packed
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+
+def _scfg(**kw):
+    base = dict(max_batch=2, max_len=64, max_new=6, prefill_bucket=16,
+                page_size=PS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _run(model, params, scfg, prompts, **submit_kw):
+    eng = Engine(model, params, scfg)
+    for p in prompts:
+        eng.submit(p, **submit_kw)
+    return eng, eng.run()
+
+
+# ---------------------------------------------------------------------------
+# FIFO + rids + streaming
+# ---------------------------------------------------------------------------
+
+def test_fifo_admission_order(served):
+    """First token of request i is emitted before request j's for i < j,
+    across multiple admission waves (5 requests, 2 slots)."""
+    cfg, qm, packed = served
+    order = []
+    eng = Engine(qm, packed, _scfg())
+    for p in _prompts(cfg, [5, 9, 21, 7, 12]):
+        eng.submit(p, on_token=lambda r, t: order.append(r.rid)
+                   if len(r.out_tokens) == 1 else None)
+    eng.run()
+    first_seen = list(dict.fromkeys(order))
+    assert first_seen == sorted(first_seen), first_seen
+
+
+def test_rids_are_monotonic_and_collision_free(served):
+    """rids come from a per-engine counter, not queue length: they keep
+    increasing after completions drain the queue."""
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg(max_new=2))
+    r0 = [eng.submit(p) for p in _prompts(cfg, [5, 6])]
+    eng.run()
+    r1 = [eng.submit(p) for p in _prompts(cfg, [4, 7])]
+    eng.run()
+    rids = [r.rid for r in r0 + r1]
+    assert rids == [0, 1, 2, 3]
+    assert len(set(rids)) == 4
+
+
+def test_streaming_callbacks_in_order(served):
+    cfg, qm, packed = served
+    got = {}
+    done = []
+    eng = Engine(qm, packed, _scfg(max_new=4))
+    for p in _prompts(cfg, [5, 11, 8]):
+        eng.submit(p,
+                   on_token=lambda r, t: got.setdefault(r.rid, []).append(t),
+                   on_done=lambda r: done.append(r.rid))
+    reqs = eng.run()
+    for r in reqs:
+        assert got[r.rid] == r.out_tokens
+    assert sorted(done) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# isolation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_cross_request_isolation(served, paged):
+    """Every request's tokens equal a solo run of the same prompt: no state
+    leaks from the slot's previous occupant, in either cache layout."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [17, 5, 30, 9, 22, 13])
+    _, batch_reqs = _run(qm, packed, _scfg(paged=paged), prompts)
+    for i, p in enumerate(prompts):
+        _, solo = _run(qm, packed, _scfg(max_batch=1, paged=paged), [p])
+        assert batch_reqs[i].out_tokens == solo[0].out_tokens, i
+
+
+# ---------------------------------------------------------------------------
+# paged scheduling: identity, accounting, reclamation, preemption
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_token_identical_to_linear(served):
+    """Acceptance: a mixed-length trace through the paged engine produces
+    token-identical outputs to the linear engine, never holding more than
+    ceil(len / page_size) pages per sequence (free-list accounting)."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [5, 20, 11, 33, 8, 47, 3, 26])
+    scfg_l = _scfg(max_batch=3, max_new=8)
+    scfg_p = _scfg(max_batch=3, max_new=8, paged=True)
+    _, lin = _run(qm, packed, scfg_l, prompts)
+
+    eng = Engine(qm, packed, scfg_p)
+    al = eng._kv.allocator
+    violations = []
+
+    def check(_r, _t):
+        for slot, req in enumerate(eng._slots):
+            if req is None:
+                continue
+            owned = len(al.owned[slot])
+            # the page for the NEXT token write is pre-allocated at page
+            # boundaries, so a sequence of length n holds at most
+            # ceil((n + 1) / page_size) pages
+            limit = int(np.ceil((eng._seq_len[slot] + 1) / PS))
+            if owned > limit:
+                violations.append((req.rid, owned, limit))
+
+    for p in prompts:
+        eng.submit(p, on_token=check)
+    paged = eng.run()
+    assert [r.out_tokens for r in paged] == [r.out_tokens for r in lin]
+    assert not violations, violations
+    # steady state: everything reclaimed
+    assert al.num_free == al.num_pages
+
+
+def test_page_pool_steady_state_over_many_requests(served):
+    """N requests through a pool that holds ~2 at a time: the free list
+    returns to full after the drain, and peak usage never exceeds the
+    pool."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [12, 9, 15, 11, 8, 14, 10, 13])
+    scfg = _scfg(paged=True, num_pages=8, max_new=4)
+    eng = Engine(qm, packed, scfg)
+    peak = [0]
+    for p in prompts:
+        eng.submit(p, on_token=lambda r, t: peak.__setitem__(
+            0, max(peak[0], eng._kv.allocator.num_in_use)))
+    reqs = eng.run()
+    assert all(r.done for r in reqs)
+    assert peak[0] <= 8
+    assert eng._kv.allocator.num_free == 8
+
+
+def test_preempt_resume_round_trip_equivalence(served):
+    """A pool too small for three growing sequences forces evict-longest;
+    the preempted request resumes (re-prefill of prompt + generated) and
+    finishes with the exact token stream of an unpreempted run."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [15, 14, 13])
+    scfg_big = _scfg(max_batch=3, max_new=24)
+    scfg_tight = _scfg(max_batch=3, max_new=24, paged=True, num_pages=9)
+    _, base = _run(qm, packed, scfg_big, prompts)
+    eng, tight = _run(qm, packed, scfg_tight, prompts)
+    assert sum(r.preemptions for r in tight) > 0, "pool never ran dry"
+    assert [r.out_tokens for r in tight] == [r.out_tokens for r in base]
+    assert eng._kv.allocator.num_free == 9
+
+
+def test_oversized_request_raises_instead_of_deadlock(served):
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg(paged=True, num_pages=2))
+    eng.submit(_prompts(cfg, [40])[0])   # needs 5 pages; pool holds 2
+    with pytest.raises(RuntimeError, match="pool"):
+        eng.run()
+
+
+def test_windowed_transformer_uses_exact_length_prefill():
+    """A sliding-window cache holds only ``window`` slots, so bucketed
+    padded prefill would overflow the splice — windowed configs must fall
+    back to exact-length prefill (regression: crash when the pad bucket
+    exceeded the window)."""
+    import dataclasses as dc
+    cfg = dc.replace(get_config("llama-micro"), window=16)
+    model = build_model(cfg)
+    assert not model.supports_padded_prefill
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, _scfg(max_new=4, prefill_bucket=32))
+    for p in _prompts(cfg, [5, 10]):
+        eng.submit(p)
+    reqs = eng.run()
+    assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_seeded_and_deterministic(served):
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [9, 14])
+    scfg = _scfg(temperature=0.8, seed=7, max_new=6)
+    _, a = _run(qm, packed, scfg, prompts)
+    _, b = _run(qm, packed, scfg, prompts)
+    assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+    _, c = _run(qm, packed, _scfg(temperature=0.8, seed=8, max_new=6),
+                prompts)
+    assert [r.out_tokens for r in a] != [r.out_tokens for r in c]
+
+
+def test_top_k_one_equals_greedy(served):
+    """top_k=1 leaves only the argmax in the categorical: sampled output
+    must equal the greedy stream (on-device sampling sanity)."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [9, 14, 21])
+    _, greedy = _run(qm, packed, _scfg(max_new=6), prompts)
+    _, topk1 = _run(qm, packed,
+                    _scfg(temperature=0.5, top_k=1, max_new=6), prompts)
+    assert [r.out_tokens for r in greedy] == [r.out_tokens for r in topk1]
+
+
+def test_sampling_keys_are_placement_invariant(served):
+    """Per-(rid, position) keys: the sampled stream of a request does not
+    depend on which other requests share the batch."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [9, 14])
+    scfg = _scfg(temperature=0.8, seed=3, max_new=5)
+    _, together = _run(qm, packed, scfg, prompts)
+    _, alone = _run(qm, packed,
+                    _scfg(temperature=0.8, seed=3, max_new=5, max_batch=1),
+                    [prompts[0]])
+    assert together[0].out_tokens == alone[0].out_tokens

@@ -1,0 +1,389 @@
+"""Paged KV cache: kernel/oracle parity, allocator accounting, and
+paged-vs-linear decode equivalence.
+
+Contract under test (DESIGN.md §9):
+  * ``ops.flash_decode(..., page_table=...)`` in interpret mode is
+    BIT-identical to ``ref.flash_decode_paged_ref`` under jit for every
+    (kv_bits, GQA group, page_size, ragged cur_len) combination — including
+    cur_len 0 / 1 / exact page boundaries — over *shuffled, non-contiguous*
+    page assignments;
+  * the XLA gather fallback (``auto`` off-TPU) matches to fp tolerance;
+  * a sequence holds exactly ``ceil(len / page_size)`` pages (free-list
+    accounting) and unallocated pages drop token writes;
+  * ``QuantizedModel.decode_step`` over a ``PagedKVCache`` is bit-identical
+    (ref mode, tile == page) to the linear-cache decode; the fp
+    ``transformer`` paged path matches its linear path;
+  * the fused paged path materializes NO fp logical-cache intermediate
+    (jaxpr traversal; the gather fallback is the positive control).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.kernels import ops, ref
+from repro.models import build_model
+from repro.serve import kv_cache as kvc
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+
+def _make_paged(key, b, hkv, g, d, page_size, lens, kv_bits, slack_pages=3):
+    """Random q + a paged cache with SHUFFLED page assignment (pages of one
+    sequence are non-contiguous and unordered in the pool)."""
+    hq = hkv * g
+    q = jax.random.normal(key, (b, 1, hq, d), jnp.float32)
+    per_seq = [int(np.ceil(l / page_size)) for l in lens]
+    mpps = max(max(per_seq), 1)
+    num_pages = sum(per_seq) + slack_pages
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+    perm = rng.permutation(num_pages)
+    pt = np.full((b, mpps), -1, np.int32)
+    off = 0
+    for i, n in enumerate(per_seq):
+        pt[i, :n] = perm[off:off + n]
+        off += n
+    kf = jax.random.normal(jax.random.fold_in(key, 1),
+                           (num_pages, page_size, hkv, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2),
+                           (num_pages, page_size, hkv, d))
+    if kv_bits >= 16:
+        return q, (kf, vf), jnp.asarray(pt), (kf, vf)
+    qmax = 2.0 ** (kv_bits - 1) - 1.0
+
+    def quant(x):
+        bound = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
+        scale = bound / qmax
+        codes = jnp.clip(jnp.round(x / scale[..., None]),
+                         -qmax - 1.0, qmax).astype(jnp.int8)
+        return codes, scale
+
+    kq, ks = quant(kf)
+    vq, vs = quant(vf)
+    deq = (kq.astype(jnp.float32) * ks[..., None],
+           vq.astype(jnp.float32) * vs[..., None])
+    return q, (kq, vq, ks, vs), jnp.asarray(pt), deq
+
+
+def _gathered(pool, pt):
+    """Logical (B, S, ...) view of a paged pool (test-side reference)."""
+    return np.asarray(pool)[np.maximum(np.asarray(pt), 0)].reshape(
+        pt.shape[0], -1, *pool.shape[2:])
+
+
+def _softmax_oracle(q, k, v, cur_len):
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    out = np.zeros((b, 1, hq, d), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bi in range(b):
+        n = int(cur_len[bi])
+        for h in range(hq):
+            kv_h = h // (hq // hkv)
+            sc = (kn[bi, :n, kv_h] @ qn[bi, 0, h]) / np.sqrt(d)
+            e = np.exp(sc - sc.max()) if n else np.zeros((0,))
+            p = e / e.sum() if n else e
+            out[bi, 0, h] = p @ vn[bi, :n, kv_h] if n else 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel parity (the acceptance sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("page_size", [16, 64])
+def test_paged_interpret_bit_identical_to_ref(kv_bits, g, page_size):
+    """Ragged cur_len in one batch — empty row, single token, exact page
+    boundary, and a mid-page tail — all bit-identical through the
+    page-table-walking grid."""
+    b, hkv, d = 4, 2, 32
+    lens = [0, 1, page_size, 2 * page_size + 7]
+    key = jax.random.PRNGKey(kv_bits * 10 + g + page_size)
+    q, kv, pt, _ = _make_paged(key, b, hkv, g, d, page_size, lens, kv_bits)
+    cur = jnp.asarray(lens, jnp.int32)
+    run_int = jax.jit(functools.partial(ops.flash_decode, mode="interpret"))
+    run_ref = jax.jit(functools.partial(ops.flash_decode, mode="ref"))
+    np.testing.assert_array_equal(
+        np.asarray(run_int(q, kv, cur, page_table=pt)),
+        np.asarray(run_ref(q, kv, cur, page_table=pt)))
+
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+def test_paged_matches_gather_fallback_and_oracle(kv_bits):
+    """Fused paged kernel vs the XLA page-gather fallback (mode='auto'
+    off-TPU) vs a from-scratch numpy softmax over the gathered cache."""
+    b, hkv, g, d, ps = 3, 2, 2, 16, 16
+    lens = [1, 19, 41]
+    q, kv, pt, deq = _make_paged(jax.random.PRNGKey(kv_bits), b, hkv, g, d,
+                                 ps, lens, kv_bits)
+    cur = jnp.asarray(lens, jnp.int32)
+    y_int = ops.flash_decode(q, kv, cur, page_table=pt, mode="interpret")
+    y_xla = ops.flash_decode(q, kv, cur, page_table=pt, mode="auto")
+    k_full = _gathered(deq[0], pt)
+    v_full = _gathered(deq[1], pt)
+    y_np = _softmax_oracle(q, k_full, v_full, lens)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_int), y_np, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_interpret_smoke():
+    """Tiny paged interpret run (the CI fast-lane smoke)."""
+    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(0), 2, 2, 2, 8, 8,
+                               [3, 14], 8)
+    y = ops.flash_decode(q, kv, jnp.asarray([3, 14], jnp.int32),
+                         page_table=pt, mode="interpret")
+    assert y.shape == (2, 1, 4, 8) and bool(jnp.isfinite(y).all())
+
+
+def test_paged_zero_length_rows_return_zeros():
+    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(1), 2, 2, 2, 16, 16,
+                               [0, 30], 8)
+    cur = jnp.asarray([0, 30], jnp.int32)
+    for mode in ("interpret", "ref", "auto"):
+        y = ops.flash_decode(q, kv, cur, page_table=pt, mode=mode)
+        np.testing.assert_array_equal(np.asarray(y[0]),
+                                      np.zeros_like(np.asarray(y[0])))
+        assert bool(jnp.any(y[1] != 0))
+
+
+def test_paged_rejects_bad_shapes():
+    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(2), 2, 2, 1, 8, 8,
+                               [4, 8], 16)
+    with pytest.raises(ValueError, match="page_table"):
+        ops.flash_decode(q, kv, jnp.asarray([4, 8]), page_table=pt[:1],
+                         mode="ref")
+
+
+# ---------------------------------------------------------------------------
+# allocator + write semantics
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_accounting():
+    al = kvc.PageAllocator(num_pages=6, max_pages_per_seq=3, max_batch=2)
+    assert al.num_free == 6
+    assert len(al.allocate(0, 2)) == 2 and al.num_in_use == 2
+    assert al.allocate(0, 2) is None          # 2 + 2 > max_pages_per_seq
+    assert al.num_in_use == 2                 # failed alloc left no residue
+    assert al.allocate(0, 1) is not None      # exactly at the per-seq cap
+    assert al.allocate(1, 4) is None          # pool has only 3 left
+    assert al.allocate(1, 3) is not None
+    assert al.num_free == 0
+    assert al.free(0) == 3 and al.num_free == 3
+    assert al.free(1) == 3 and al.num_free == 6
+    assert al.owned[0] == [] and al.owned[1] == []
+
+
+def test_pages_track_sequence_length():
+    """Free-list accounting: a sequence of length n owns exactly
+    ceil(n / page_size) pages through reserve + ensure_append growth."""
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    ps = 8
+    store = kvc.PagedCache(model, max_batch=2, max_len=64, page_size=ps)
+    assert store.reserve(0, 11)               # ceil(11/8) == 2 pages
+    assert len(store.allocator.owned[0]) == 2
+    for n in range(11, 40):
+        assert store.ensure_append(0, n)
+        assert len(store.allocator.owned[0]) == int(np.ceil((n + 1) / ps))
+    n_used = store.allocator.num_in_use
+    assert n_used == int(np.ceil(40 / ps))
+    store.free(0)
+    assert store.allocator.num_free == store.allocator.num_pages
+
+
+def test_unallocated_page_drops_write():
+    """token_write_dest resolves unallocated pages / at-capacity sequences
+    to an out-of-bounds index — the scatter drops the write."""
+    pt = jnp.asarray([[2, -1], [0, 1]], jnp.int32)
+    ps, num_pages = 4, 3
+    # seq 0 at len 4 -> logical page 1 unallocated; seq 1 at len 7 -> page 1
+    dest = kvc.token_write_dest(pt, jnp.asarray([4, 7]), ps, num_pages)
+    assert int(dest[0]) == num_pages * ps          # OOB -> dropped
+    assert int(dest[1]) == 1 * ps + 3
+    # at capacity (len == mpps * ps) the write drops too
+    dest = kvc.token_write_dest(pt, jnp.asarray([8, 8]), ps, num_pages)
+    assert int(dest[0]) == int(dest[1]) == num_pages * ps
+    pool = jnp.zeros((num_pages * ps, 2))
+    out = pool.at[dest].set(jnp.ones((2, 2)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pool))
+
+
+# ---------------------------------------------------------------------------
+# model integration: paged decode == linear decode
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("kv_bits", [8, 16])
+def test_quantized_paged_decode_bit_identical_to_linear(micro, kv_bits):
+    """ref mode, one tile == one page on both layouts: the paged decode
+    step must produce BIT-identical logits and cache contents."""
+    cfg, model, params = micro
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=kv_bits)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    ps = 8
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=ps)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 10), 0,
+                              cfg.vocab_size)
+    lg, lin = qm.prefill(packed, {"tokens": toks}, max_len=32)
+    store = kvc.PagedCache(qm, max_batch=2, max_len=32, page_size=ps)
+    for slot in range(2):
+        assert store.reserve(slot, 10)
+        store.splice(slot, lin, slot, 10)
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    cache_l, cache_p = lin, store.cache
+    for _ in range(3):
+        dl, cache_l = jax.jit(qm.decode_step)(packed, tok, cache_l)
+        dp, cache_p = jax.jit(qm.decode_step)(packed, tok, cache_p)
+        np.testing.assert_array_equal(np.asarray(dl), np.asarray(dp))
+        tok = jnp.argmax(dl[:, -1:], -1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(cache_l["len"]),
+                                  np.asarray(cache_p.lens))
+    # the paged pool holds exactly the linear cache rows, page-permuted
+    s = int(cache_p.lens[0])
+    gathered = np.stack([
+        np.asarray(cache_p.k[li])[np.maximum(np.asarray(cache_p.page_table),
+                                             0)].reshape(2, -1,
+                                                         *cache_p.k.shape[3:])
+        for li in range(cache_p.k.shape[0])])
+    np.testing.assert_array_equal(gathered[:, :, :s],
+                                  np.asarray(cache_l["k"])[:, :, :s])
+
+
+def test_fp_paged_decode_matches_linear(micro):
+    """The fp transformer paged path (XLA page gather off-TPU) matches the
+    linear decode_attention path."""
+    cfg, model, params = micro
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0,
+                              cfg.vocab_size)
+    lg, lin = model.prefill(params, {"tokens": toks}, max_len=32)
+    store = kvc.PagedCache(model, max_batch=2, max_len=32, page_size=8)
+    for slot in range(2):
+        assert store.reserve(slot, 12)
+        store.splice(slot, lin, slot, 12)
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    dl, _ = jax.jit(model.decode_step)(params, tok, lin)
+    dp, cache_p = jax.jit(model.decode_step)(params, tok, store.cache)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(dp),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(cache_p.lens),
+                                  np.full((2,), 13))
+
+
+def test_paged_cache_is_jit_stable_pytree(micro):
+    """PagedKVCache round-trips jit (static page_size, array leaves); a
+    host-side page-table update does not retrigger compilation."""
+    cfg, model, params = micro
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=8)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    store = kvc.PagedCache(qm, max_batch=2, max_len=32, page_size=8)
+    store.reserve(0, 3)
+    store.reserve(1, 5)
+    cache = dataclasses.replace(store.cache,
+                                lens=jnp.asarray([3, 5], jnp.int32))
+    step = jax.jit(qm.decode_step)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    _, c2 = step(packed, tok, cache)
+    n0 = step._cache_size()
+    # host-side table mutation (new pytree, same shapes) -> no recompile
+    c3 = dataclasses.replace(c2, page_table=c2.page_table.at[0, 1].set(7))
+    step(packed, tok, c3)
+    assert step._cache_size() == n0
+
+
+def test_paged_cache_shardings_resolve(micro):
+    """Sharding parity with the linear cache: pool pages shard over the TP
+    axis ('kv_pages' -> model, the analog of the linear 'kv_seq'), page
+    tables and lens over batch, and the dryrun's shardings_for rebuilds a
+    PagedKVCache-shaped sharding tree for jit in_shardings."""
+    cfg, _, _ = micro
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro import sharding
+    from repro.launch.dryrun import shardings_for
+    qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, kv_bits=8)
+    qm = QuantizedModel(cfg, qcfg)
+    specs = qm.paged_cache_specs(batch=4, num_pages=16, page_size=8,
+                                 max_pages_per_seq=4)
+    axes = qm.cache_logical_axes(specs)
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    sh = shardings_for(axes, specs, mesh, sharding.make_rules())
+    assert isinstance(sh, kvc.PagedKVCache)
+    assert sh.k.spec == P(None, "model")
+    assert sh.k_scale.spec == P(None, "model")
+    assert sh.page_table.spec == P("data")
+    assert sh.lens.spec == P("data")
+
+
+# ---------------------------------------------------------------------------
+# no fp logical-cache materialization on the fused paged path
+# ---------------------------------------------------------------------------
+
+def _iter_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            vals = p if isinstance(p, (list, tuple)) else [p]
+            for sub in vals:
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_avals(inner)
+
+
+def _fp_logical_cache_avals(jaxpr, s_log, hkv, d):
+    hits = []
+    for aval in _iter_avals(jaxpr):
+        shape = getattr(aval, "shape", ())
+        dtype = getattr(aval, "dtype", None)
+        if (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+                and len(shape) >= 4 and tuple(shape[-3:]) == (s_log, hkv, d)):
+            hits.append(aval)
+    return hits
+
+
+def test_paged_decode_kv8_has_no_logical_cache_materialization(micro):
+    """The fused paged path never gathers the page table into a logical
+    (B, S, Hkv, D) fp cache — pages stream tile-by-tile. The XLA fallback
+    jaxpr is the positive control (it DOES gather)."""
+    cfg, _, params = micro
+    qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
+                       kv_bits=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    d = cfg.resolved_head_dim
+    b, ps, mpps = 2, 8, 3
+    tok = jnp.zeros((b, 1), jnp.int32)
+
+    def jaxpr_for(mode):
+        qm = QuantizedModel(cfg, qcfg, kernel_mode=mode)
+        store = kvc.PagedCache(qm, max_batch=b, max_len=ps * mpps,
+                               page_size=ps)
+        for slot in range(b):
+            store.reserve(slot, 7)
+        cache = dataclasses.replace(
+            store.cache, lens=jnp.full((b,), 7, jnp.int32))
+        return jax.make_jaxpr(qm.decode_step)(packed, tok, cache).jaxpr
+
+    s_log = ps * mpps
+    fused = _fp_logical_cache_avals(jaxpr_for("interpret"), s_log,
+                                    cfg.num_kv_heads, d)
+    assert not fused, f"logical-cache fp intermediates on fused path: {fused}"
+    control = _fp_logical_cache_avals(jaxpr_for("auto"), s_log,
+                                      cfg.num_kv_heads, d)
+    assert control, "positive control lost: fallback no longer gathers"
