@@ -1,17 +1,28 @@
 """Engine-level serving benchmark: linear vs paged KV cache under a fixed
-mixed-length request trace.
+mixed-length request trace, plus inter-token latency under long-prompt
+arrival (whole-prompt vs chunked admission).
 
-Measures what the kernel benchmarks cannot: scheduler throughput. The same
-trace (prompt lengths spanning 3..~120 tokens, FIFO submission) runs through
-the linear slot-table engine and the paged engine, on the packed
-w4a8 + kv8 serving stack (ref kernels — CPU container; the *relative*
-linear/paged numbers are layout effects, not kernel effects, because both
-layouts run the identical tile math).
+Measures what the kernel benchmarks cannot: scheduler throughput AND tail
+latency. The same trace (prompt lengths spanning 3..~120 tokens, FIFO
+submission) runs through the linear slot-table engine and the paged engine,
+on the packed w4a8 + kv8 serving stack (ref kernels — CPU container; the
+*relative* numbers are layout/scheduling effects, not kernel effects,
+because every mode runs the identical tile math).
+
+The **inter-token-latency trace** (DESIGN.md §10) starts short requests
+decoding, then drops a long prompt on the queue mid-flight: with
+whole-prompt admission the long prefill monopolizes one step and every
+in-flight decode stalls behind it (the p99 spike); with chunked admission
+(``prefill_chunk`` tokens per step) the stall is bounded by one chunk.
+Both engines run the trace twice — the first pass warms every compile so
+the measured pass is steady-state kernel time.  p50/p99 are computed over
+the short requests' consecutive-token gaps.
 
 Besides the CSV rows this writes ``benchmarks/artifacts/BENCH_serve.json``:
-tokens/s, requests/s and cache bytes per layout, the trace itself, and the
-paged pool accounting (pool pages, peak in use, preemptions) — the
-machine-readable serving-perf trajectory CI uploads per commit.
+tokens/s, requests/s and cache bytes per layout, p50/p99 inter-token
+latency per admission mode, the traces themselves, and the paged pool
+accounting (pool pages, peak in use, preemptions) — the machine-readable
+serving-perf trajectory CI uploads per commit.
 
 The paged pool is sized to the trace's working set (max_batch concurrent
 sequences at the P95 trace length), NOT to ``max_batch * max_len`` — that
@@ -45,6 +56,16 @@ MAX_NEW = 8 if common.FAST else 16
 # fixed mixed-length trace: short chat turns + a few long-context requests
 TRACE = [8, 40, 16, 96, 24, 64, 8, 120, 32, 12, 80, 18]
 N_REQ = 6 if common.FAST else len(TRACE)
+
+# inter-token-latency trace: 2 short decoders + a long prompt arriving
+# mid-flight (DESIGN.md §10).  The chunk is sized well below the long
+# prompt so the bounded-stall effect dominates the per-step overhead of
+# the miniature model.
+ITL_SHORTS = [12, 9]
+ITL_LONG = 320 if common.FAST else 512
+ITL_CHUNK = 8
+ITL_MAX_NEW = 24 if common.FAST else 40
+ITL_MAX_LEN = ITL_LONG + ITL_MAX_NEW + 8
 
 
 def _run_engine(qm, packed, prompts, paged: bool):
@@ -81,6 +102,38 @@ def _run_engine(qm, packed, prompts, paged: bool):
     return stats
 
 
+def _itl_engine(qm, packed, prompts_short, prompt_long, chunked: bool):
+    """Inter-token latency of in-flight decodes while a long prompt
+    arrives.  Runs the trace twice on ONE engine (same jit caches): pass 1
+    warms every compile (decode step, chunk step / prefill buckets), pass
+    2 is measured.  Returns consecutive-token gaps of the short requests
+    in milliseconds."""
+    scfg = ServeConfig(max_batch=len(prompts_short) + 1, max_len=ITL_MAX_LEN,
+                       max_new=ITL_MAX_NEW, prefill_bucket=32,
+                       prefill_chunk=ITL_CHUNK if chunked else 0)
+    eng = Engine(qm, packed, scfg)
+
+    def trace_pass():
+        times: dict[int, list] = {}
+        on_tok = lambda r, t: times.setdefault(r.rid, []).append(
+            time.monotonic())
+        shorts = [eng.submit(p, on_token=on_tok) for p in prompts_short]
+        for _ in range(3):          # shorts admit and start decoding
+            eng.step()
+        eng.submit(prompt_long, on_token=on_tok)
+        eng.run()
+        deltas = []
+        for r in shorts:
+            deltas += list(np.diff(times[r.rid]))
+        return [1e3 * d for d in deltas]
+
+    trace_pass()                    # warmup (compiles)
+    deltas = trace_pass()
+    return {"p50_ms": float(np.percentile(deltas, 50)),
+            "p99_ms": float(np.percentile(deltas, 99)),
+            "max_ms": float(np.max(deltas)), "n_gaps": len(deltas)}
+
+
 def run():
     cfg = get_config(ARCH)
     model = build_model(cfg)
@@ -97,6 +150,12 @@ def run():
     pgd = _run_engine(qm, packed, prompts, paged=True)
     identical = lin["outputs"] == pgd["outputs"]
 
+    # inter-token latency: long-prompt arrival against in-flight decodes
+    shorts = [rng.integers(0, cfg.vocab_size, n) for n in ITL_SHORTS]
+    long_p = rng.integers(0, cfg.vocab_size, ITL_LONG)
+    itl_whole = _itl_engine(qm, packed, shorts, long_p, chunked=False)
+    itl_chunk = _itl_engine(qm, packed, shorts, long_p, chunked=True)
+
     doc = {
         "arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref",
         "trace_prompt_lens": [int(len(p)) for p in prompts],
@@ -105,6 +164,15 @@ def run():
         "linear": {k: v for k, v in lin.items() if k != "outputs"},
         "paged": {k: v for k, v in pgd.items() if k != "outputs"},
         "cache_mem_ratio": lin["cache_bytes"] / pgd["cache_bytes"],
+        "itl": {
+            "trace": {"short_prompt_lens": ITL_SHORTS,
+                      "long_prompt_len": ITL_LONG,
+                      "prefill_chunk": ITL_CHUNK,
+                      "max_new": ITL_MAX_NEW},
+            "whole_prompt": itl_whole,
+            "chunked": itl_chunk,
+            "p99_ratio": itl_whole["p99_ms"] / itl_chunk["p99_ms"],
+        },
     }
     common.ART.mkdir(parents=True, exist_ok=True)
     BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
@@ -120,4 +188,10 @@ def run():
     rows.append(("serve/linear_vs_paged_cache_ratio",
                  0.0, f"ratio={doc['cache_mem_ratio']:.2f};"
                       f"token_identical={identical}"))
+    for tag, itl in (("whole", itl_whole), ("chunked", itl_chunk)):
+        rows.append((f"serve/itl_{tag}_prefill", itl["p99_ms"] * 1e3,
+                     f"p50_ms={itl['p50_ms']:.2f};p99_ms="
+                     f"{itl['p99_ms']:.2f};max_ms={itl['max_ms']:.2f}"))
+    rows.append(("serve/itl_chunked_vs_whole_p99", 0.0,
+                 f"ratio={doc['itl']['p99_ratio']:.2f}x"))
     return rows

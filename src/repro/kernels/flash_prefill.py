@@ -1,0 +1,300 @@
+"""Pallas TPU kernel: chunked causal flash-prefill over the quantized KV
+cache.
+
+A query *chunk* of ``C`` tokens (absolute positions ``offset[b] ..
+offset[b] + chunk_len[b] - 1`` per sequence) attends the already-written
+cache prefix AND itself causally.  The chunk's K/V have already been
+quantized-on-write into the cache by the caller (``prefill_chunk`` in the
+serving models), so the kernel reads ONE source — the cache **as stored**:
+int8 codes plus per-(token, head) float32 scales when ``kv_bits < 16``,
+plain fp otherwise — and dequantizes each KV tile in registers.  The fp
+``(B, S, Hkv, D)`` cache materialization of the old whole-prompt prefill
+never exists on this path (jaxpr-pinned, like the decode kernel's).
+
+Layout and grid:
+
+    q         (B, Hkv, C, G, D)   GQA groups folded next to their KV head;
+                                  flattened in-kernel to (C*G, D) rows where
+                                  row r is chunk token r // G
+    k / v     (B, S, Hkv, D)      the cache tensors, untouched (int8 or fp)
+    k/v scale (B, S, Hkv) f32     per-(token, head) scales (kv_bits < 16)
+    offset    (B,) int32          chunk's first absolute position
+                                  (scalar-prefetch)
+    chunk_len (B,) int32          valid chunk rows per sequence
+                                  (scalar-prefetch; rows past it are pads)
+
+    grid (B, Hkv, ceil(S / block_kv))   — KV tiles innermost
+
+The KV grid is **length-masked** on the chunk's end: tile ``t`` of sequence
+``b`` only computes when ``t * block_kv < offset[b] + chunk_len[b]``, and
+the BlockSpec index map clamps out-of-range tiles to the last valid tile
+(repeated block index == skipped copy), so HBM traffic is bounded by the
+tokens actually attended, not ``max_len``.  Masking inside a tile is
+per-(row, position): position ``p`` is valid for row ``r`` iff
+``p <= offset + r // G`` (causal across the chunk/prefix boundary) and
+``r // G < chunk_len`` (pad rows are fully masked and return zeros).
+
+Splitting invariance (the chunked-serving contract): for a fixed cache and
+tile size, each query row's online-softmax state walks the same KV tiles in
+the same order whether the row arrives in a C-token chunk, the whole-prompt
+"one big chunk", or a one-token decode step — trailing fully-masked tiles
+are exact no-ops (``exp(NEG_INF - m)`` underflows to 0 and ``corr`` is
+exactly 1).  Same-shape calls are BIT-identical (a 1-row chunk equals
+``flash_decode`` bit-for-bit — the preempt/resume contract); calls at
+*different* chunk sizes compile to differently-fused XLA graphs and agree
+to f32 ULPs, which is why the engine equivalence contract is stated as
+token identity.  ``ref.flash_prefill_ref`` is the tile-mirroring oracle;
+interpret mode is bit-identical to it under jit.
+
+Paged variant (``flash_prefill_paged``): the cache is the page pool of
+``repro.serve.kv_cache`` — ``(num_pages, page_size, Hkv, D)`` plus
+per-sequence page tables — and the KV grid walks the page table exactly
+like ``flash_decode_paged`` (both scalars AND the table are scalar-prefetch
+operands; the page gather lives in the BlockSpec index map; one tile ==
+one page).  The kernel body is shared verbatim with the linear variant, so
+the two layouts cannot drift.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_KV = 512
+
+
+def _kernel(offs_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_kv: int, n_tiles: int,
+            chunk: int, g: int, scale: float, quantized: bool):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    r = chunk * g
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = offs_ref[b]
+    cl = lens_ref[b]
+
+    # cl == 0 rows (idle/decoding sequences riding along in an engine
+    # chunk step) visit NO tiles: their output is zeros either way, and
+    # gating here keeps their prefix out of the DMA/compute stream
+    @pl.when((t * block_kv < off + cl) & (cl > 0))
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(r, -1)   # (C*G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_kv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # in-register dequant: int8 codes * per-(token, head) f32 scale
+            k = k * ks_ref[...].reshape(block_kv, 1)
+            v = v * vs_ref[...].reshape(block_kv, 1)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (C*G, block_kv)
+        kv_pos = t * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (r, block_kv), 1)
+        row_tok = jax.lax.broadcasted_iota(jnp.int32, (r, block_kv), 0) // g
+        # causal across the chunk/prefix boundary + pad-row masking
+        s = jnp.where((kv_pos <= off + row_tok) & (row_tok < cl), s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == n_tiles - 1)
+    def _done():
+        # pad rows (row_tok >= chunk_len) are fully masked, but masked
+        # scores all equal NEG_INF so p == exp(0) == 1 accumulates junk —
+        # zero them explicitly (valid-row values pass through unchanged)
+        live = jax.lax.broadcasted_iota(jnp.int32, (r, 1), 0) // g < cl
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out = jnp.where(live, out, 0.0)
+        o_ref[0, 0] = out.reshape(chunk, g, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_kv",
+                                             "interpret"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                  offset: jax.Array, chunk_len: jax.Array,
+                  k_scale=None, v_scale=None, *,
+                  scale: float | None = None,
+                  block_kv: int = DEFAULT_BLOCK_KV,
+                  interpret: bool = False) -> jax.Array:
+    """Chunked causal prefill over the cache as stored.
+
+    q (B, Hkv, C, G, D); returns the same shape in q.dtype.  ``k``/``v``
+    are int8 codes when ``k_scale``/``v_scale`` (both or neither) are
+    given, fp otherwise; the chunk's own K/V must already be written at
+    positions ``offset .. offset + chunk_len - 1``.  Pad rows
+    (``i >= chunk_len[b]``) return zeros.  Requires ``S % block_kv == 0``
+    (the ops wrapper clamps).
+    """
+    bsz, hkv, c, g, d = q.shape
+    s = k.shape[1]
+    assert k.shape == v.shape == (bsz, s, hkv, d), (q.shape, k.shape, v.shape)
+    assert s % block_kv == 0, (s, block_kv)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (bsz, s, hkv)
+    n_tiles = s // block_kv
+    scale = scale if scale is not None else d ** -0.5
+    offset = offset.astype(jnp.int32)
+    chunk_len = chunk_len.astype(jnp.int32)
+
+    def _last(offs, lens, b):
+        # clamp out-of-range tiles to the last valid tile: a repeated block
+        # index is not re-fetched, so masked tiles move no HBM bytes.
+        # cl == 0 rows attend nothing — clamp them to tile 0 (one DMA).
+        total = jnp.where(lens[b] > 0, offs[b] + lens[b], 0)
+        return jnp.maximum(pl.cdiv(total, block_kv) - 1, 0)
+
+    def kv_map(b, h, t, offs, lens):
+        return (b, jnp.minimum(t, _last(offs, lens, b)), h, 0)
+
+    def scale_map(b, h, t, offs, lens):
+        return (b, jnp.minimum(t, _last(offs, lens, b)), h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, c, g, d), lambda b, h, t, offs, lens:
+                     (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, block_kv, 1, d), kv_map),
+        pl.BlockSpec((1, block_kv, 1, d), kv_map),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, block_kv, 1), scale_map),
+                     pl.BlockSpec((1, block_kv, 1), scale_map)]
+        args += [k_scale, v_scale]
+
+    body = functools.partial(_kernel, block_kv=block_kv, n_tiles=n_tiles,
+                             chunk=c, g=g, scale=scale, quantized=quantized)
+    if not quantized:
+        # keep one kernel body: bind the absent scale refs to None
+        body = functools.partial(
+            lambda offs, lens, qr, kr, vr, o, m, l, a, *, inner:
+            inner(offs, lens, qr, kr, vr, None, None, o, m, l, a),
+            inner=body)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, c, g, d), lambda b, h, t, offs, lens:
+                               (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c * g, 1), jnp.float32),   # running max
+            pltpu.VMEM((c * g, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((c * g, d), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, c, g, d), q.dtype),
+        interpret=interpret,
+    )(offset, chunk_len, *args)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def flash_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                        page_table: jax.Array, offset: jax.Array,
+                        chunk_len: jax.Array, k_scale=None, v_scale=None, *,
+                        scale: float | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Chunked causal prefill over a paged pool.  q (B, Hkv, C, G, D).
+
+    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, D)`` — int8
+    codes when ``k_scale``/``v_scale`` pools ``(num_pages, page_size, Hkv)``
+    are given, fp otherwise.  ``page_table`` (B, max_pages_per_seq) int32
+    maps logical page ``t`` of sequence ``b`` to a pool page (−1 =
+    unallocated; only entries below ``ceil((offset + chunk_len) /
+    page_size)`` are read).  One KV tile == one page, gathered in the
+    BlockSpec index map exactly like ``flash_decode_paged``.
+    """
+    bsz, hkv, c, g, d = q.shape
+    num_pages, page_size = k.shape[0], k.shape[1]
+    assert k.shape == v.shape == (num_pages, page_size, hkv, d), \
+        (q.shape, k.shape, v.shape)
+    n_tiles = page_table.shape[1]
+    assert page_table.shape == (bsz, n_tiles), (page_table.shape, bsz)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (num_pages, page_size, hkv)
+    scale = scale if scale is not None else d ** -0.5
+    offset = offset.astype(jnp.int32)
+    chunk_len = chunk_len.astype(jnp.int32)
+    page_table = page_table.astype(jnp.int32)
+
+    def _page(b, t, offs, lens, pt):
+        # the page GATHER lives in the index map (see flash_decode_paged):
+        # out-of-range tiles repeat the last valid pool page so Pallas
+        # skips the DMA; cl == 0 rows clamp to logical page 0, and
+        # max(—, 0) guards its possibly-(−1) table entry.
+        total = jnp.where(lens[b] > 0, offs[b] + lens[b], 0)
+        last = jnp.maximum(pl.cdiv(total, page_size) - 1, 0)
+        return jnp.maximum(pt[b, jnp.minimum(t, last)], 0)
+
+    def kv_map(b, h, t, offs, lens, pt):
+        return (_page(b, t, offs, lens, pt), 0, h, 0)
+
+    def scale_map(b, h, t, offs, lens, pt):
+        return (_page(b, t, offs, lens, pt), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, c, g, d), lambda b, h, t, offs, lens, pt:
+                     (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, d), kv_map),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
+                     pl.BlockSpec((1, page_size, 1), scale_map)]
+        args += [k_scale, v_scale]
+
+    # one tile == one page: reuse the linear kernel body verbatim so the
+    # two layouts cannot diverge in op order
+    body = functools.partial(_kernel, block_kv=page_size, n_tiles=n_tiles,
+                             chunk=c, g=g, scale=scale, quantized=quantized)
+    if not quantized:
+        body = functools.partial(
+            lambda offs, lens, qr, kr, vr, o, m, l, a, *, inner:
+            inner(offs, lens, qr, kr, vr, None, None, o, m, l, a),
+            inner=body)
+    kernel = functools.partial(
+        lambda offs, lens, pt, *rest, inner: inner(offs, lens, *rest),
+        inner=body)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, hkv, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, c, g, d),
+                               lambda b, h, t, offs, lens, pt:
+                               (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c * g, 1), jnp.float32),   # running max
+            pltpu.VMEM((c * g, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((c * g, d), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, c, g, d), q.dtype),
+        interpret=interpret,
+    )(offset, chunk_len, page_table, *args)

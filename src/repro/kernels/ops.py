@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core.qtensor import QTensor
 from repro.kernels import dequant_matmul as dq
 from repro.kernels import flash_decode as fd
+from repro.kernels import flash_prefill as fp
 from repro.kernels import int8_matmul as i8
 from repro.kernels import quantize_pack as qp
 from repro.kernels import ref
@@ -214,13 +215,7 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     configs); head_dim needs no clamping — it is the innermost (lane)
     dimension at any size.
     """
-    if len(kv) == 4:
-        k, v, k_scale, v_scale = kv
-    elif len(kv) == 2:
-        (k, v), k_scale, v_scale = kv, None, None
-    else:
-        raise TypeError(f"kv must be (k, v) or (k, v, k_scale, v_scale), "
-                        f"got {len(kv)} entries")
+    k, v, k_scale, v_scale = _unpack_kv(kv)
     b, t, hq, d = q.shape
     if t != 1:
         raise ValueError(f"flash_decode is a one-token decode kernel; got "
@@ -296,6 +291,123 @@ def _flash_decode_paged(q, k, v, k_scale, v_scale, page_table, cur_len,
                                     k_scale, v_scale, scale=scale,
                                     interpret=(impl == "interpret"))
     return out.reshape(b, 1, hq, d)
+
+
+def _unpack_kv(kv):
+    if len(kv) == 4:
+        return kv
+    if len(kv) == 2:
+        return kv[0], kv[1], None, None
+    raise TypeError(f"kv must be (k, v) or (k, v, k_scale, v_scale), "
+                    f"got {len(kv)} entries")
+
+
+def flash_prefill(q, kv, offset, chunk_len, *, scale=None,
+                  block_kv: Optional[int] = None, page_table=None,
+                  mode: Mode = "auto"):
+    """Chunked causal prefill attention over the KV cache **as stored**.
+
+    q (B, C, Hq, D) — a C-token query chunk whose token ``i`` sits at
+    absolute position ``offset[b] + i``; ``kv`` is the cache tuple exactly
+    as the serving model carries it — ``(k, v)`` fp, or ``(k, v, k_scale,
+    v_scale)`` int8 codes + per-(token, head) f32 scales — with the chunk's
+    own (quantized-on-write) K/V already stored at positions ``offset ..
+    offset + chunk_len - 1``.  ``chunk_len`` (B,) int32 counts valid chunk
+    rows; pad rows (``i >= chunk_len[b]``) return zeros, so idle sequences
+    in a batched engine chunk step pass ``chunk_len == 0``.  Returns
+    (B, C, Hq, D) in q.dtype.
+
+    **Paged cache**: with ``page_table`` (B, max_pages_per_seq) int32, the
+    kv entries are page *pools* and the fused kernel walks the page table
+    (one KV tile == one page; ``block_kv`` is ignored), mirroring
+    :func:`flash_decode`.
+
+    Modes follow :func:`flash_decode`: ``pallas``/``interpret`` run the
+    fused :func:`repro.kernels.flash_prefill.flash_prefill` kernel (per-
+    tile in-register dequant, chunk-end-masked KV grid, no full-cache fp
+    materialization); ``ref`` runs the tile-mirroring oracle
+    (bit-identical to interpret mode under jit); ``auto`` compiles the
+    kernel on TPU and otherwise falls back to the portable
+    :func:`repro.models.attention.chunk_prefill_attention` XLA path — the
+    one prefill path that materializes the dequantized fp cache.
+
+    Splitting invariance: with a fixed cache and tile size, a row's result
+    does not depend on which chunk delivered it — trailing fully-masked
+    tiles are exact no-ops.  Same-shape calls are bit-identical (C == 1
+    equals ``flash_decode`` bit-for-bit); different chunk sizes re-fuse
+    under XLA and agree to f32 ULPs — the contract that makes chunked
+    engine admission token-identical to whole-prompt prefill.
+    """
+    k, v, k_scale, v_scale = _unpack_kv(kv)
+    b, c, hq, d = q.shape
+    if c < 1:
+        raise ValueError(f"flash_prefill needs a non-empty chunk; got C={c}")
+    offset = jnp.asarray(offset, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    impl = ("pallas" if _backend() == "tpu" else "xla") if mode == "auto" \
+        else mode
+    if page_table is not None:
+        return _flash_prefill_paged(q, k, v, k_scale, v_scale, page_table,
+                                    offset, chunk_len, scale, impl)
+    s, hkv = k.shape[1], k.shape[2]
+    if impl == "xla":
+        from repro.models import attention as attn_lib
+        if k_scale is not None:
+            k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
+            v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
+        return attn_lib.chunk_prefill_attention(
+            q, k.astype(q.dtype), v.astype(q.dtype), offset, chunk_len,
+            scale=scale)
+    bkv = block_kv or fp.DEFAULT_BLOCK_KV
+    if bkv > s or s % bkv != 0:
+        bkv = s              # single tile (miniature / ragged max_len)
+    q5 = q.reshape(b, c, hkv, hq // hkv, d).transpose(0, 2, 1, 3, 4)
+    if impl == "ref":
+        out = ref.flash_prefill_ref(q5, k, v, offset, chunk_len, k_scale,
+                                    v_scale, scale=scale, block_kv=bkv)
+    else:
+        out = fp.flash_prefill(q5, k, v, offset, chunk_len, k_scale,
+                               v_scale, scale=scale, block_kv=bkv,
+                               interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, hq, d)
+
+
+def _flash_prefill_paged(q, k, v, k_scale, v_scale, page_table, offset,
+                         chunk_len, scale, impl):
+    """Paged dispatch half of :func:`flash_prefill` (kv entries are pools)."""
+    b, c, hq, d = q.shape
+    num_pages, ps, hkv = k.shape[0], k.shape[1], k.shape[2]
+    if k.shape != (num_pages, ps, hkv, d):
+        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, D); "
+                         f"got {k.shape}")
+    if page_table.ndim != 2 or page_table.shape[0] != b:
+        raise ValueError(f"page_table must be (B, max_pages_per_seq); got "
+                         f"{page_table.shape} for B={b}")
+    if impl == "xla":
+        from repro.models import attention as attn_lib
+        pt = jnp.maximum(page_table, 0)
+        s_log = page_table.shape[1] * ps
+        kk = k[pt].reshape(b, s_log, hkv, d)
+        vv = v[pt].reshape(b, s_log, hkv, d)
+        if k_scale is not None:
+            ks = k_scale[pt].reshape(b, s_log, hkv)
+            vs = v_scale[pt].reshape(b, s_log, hkv)
+            kk = (kk.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
+            vv = (vv.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
+        return attn_lib.chunk_prefill_attention(
+            q, kk.astype(q.dtype), vv.astype(q.dtype), offset, chunk_len,
+            scale=scale)
+    q5 = q.reshape(b, c, hkv, hq // hkv, d).transpose(0, 2, 1, 3, 4)
+    if impl == "ref":
+        out = ref.flash_prefill_paged_ref(q5, k, v, page_table, offset,
+                                          chunk_len, k_scale, v_scale,
+                                          scale=scale)
+    else:
+        out = fp.flash_prefill_paged(q5, k, v, page_table, offset,
+                                     chunk_len, k_scale, v_scale,
+                                     scale=scale,
+                                     interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, hq, d)
 
 
 def quantize_pack(w, *, bits: int, group_size: int, mode: Mode = "auto",

@@ -204,6 +204,132 @@ def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
     return out.astype(out_dtype or q.dtype)
 
 
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      offset: jax.Array, chunk_len: jax.Array,
+                      k_scale=None, v_scale=None, *, scale=None,
+                      block_kv: int = 128, out_dtype=None) -> jax.Array:
+    """Tile-structured chunked-prefill oracle (the fused kernel's contract).
+
+    q (B, Hkv, C, G, D) — a C-token query chunk at absolute positions
+    ``offset[b] + i`` attending the cache k/v (B, S, Hkv, D) — int8 codes
+    when ``k_scale``/``v_scale`` (B, S, Hkv) f32 are given, fp otherwise —
+    **as stored**, with the chunk's own K/V already written.  Mirrors
+    ``flash_prefill.flash_prefill`` op-for-op: the same per-tile dequant →
+    scores → causal/pad mask → online-softmax update sequence, with masked
+    (``jnp.where``) state updates standing in for the kernel's predicated
+    tiles — so the kernel in interpret mode is BIT-IDENTICAL to this under
+    jit.  Position ``p`` is valid for chunk row ``i`` iff
+    ``p <= offset[b] + i`` and ``i < chunk_len[b]``; pad rows return zeros.
+    Like the decode oracle this materializes only one (B, block_kv, Hkv, D)
+    fp tile at a time — never the full cache.
+    """
+    bsz, hkv, c, g, d = q.shape
+    s = k.shape[1]
+    assert s % block_kv == 0, (s, block_kv)
+    n_tiles = s // block_kv
+    r = c * g
+    scale = scale if scale is not None else d ** -0.5
+    off = offset.astype(jnp.int32)[:, None, None, None]
+    cl = chunk_len.astype(jnp.int32)[:, None, None, None]
+    # chunk_len == 0 sequences visit no tiles (mirrors the kernel's grid
+    # predicate): their state stays at init and the row mask zeroes them
+    total = jnp.where(cl > 0, off + cl, 0)
+    qf = q.astype(jnp.float32).reshape(bsz, hkv, r, d)
+    row_tok = (jax.lax.broadcasted_iota(jnp.int32, (r, 1), 0)
+               // g)[None, None]                               # (1, 1, r, 1)
+    m = jnp.full((bsz, hkv, r, 1), -1e30, jnp.float32)
+    l = jnp.zeros((bsz, hkv, r, 1), jnp.float32)
+    acc = jnp.zeros((bsz, hkv, r, d), jnp.float32)
+    for t in range(n_tiles):
+        sl = slice(t * block_kv, (t + 1) * block_kv)
+        kt = k[:, sl].astype(jnp.float32)
+        vt = v[:, sl].astype(jnp.float32)
+        if k_scale is not None:
+            kt = kt * k_scale[:, sl][..., None]
+            vt = vt * v_scale[:, sl][..., None]
+        sc = jnp.einsum("bhrd,bkhd->bhrk", qf, kt,
+                        preferred_element_type=jnp.float32) * scale
+        kv_pos = (t * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1))[None, None]          # (1, 1, 1, bk)
+        valid = (kv_pos <= off + row_tok) & (row_tok < cl)
+        sc = jnp.where(valid, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhrk,bkhd->bhrd", p, vt, preferred_element_type=jnp.float32)
+        live = t * block_kv < total
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+    out = acc / jnp.maximum(l, 1e-30)
+    # pad rows are fully masked yet accumulate exp(0) junk — zero them,
+    # exactly as the kernel's final-tile epilogue does
+    out = jnp.where(row_tok < cl, out, 0.0)
+    return out.reshape(bsz, hkv, c, g, d).astype(out_dtype or q.dtype)
+
+
+def flash_prefill_paged_ref(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, page_table: jax.Array,
+                            offset: jax.Array, chunk_len: jax.Array,
+                            k_scale=None, v_scale=None, *, scale=None,
+                            out_dtype=None) -> jax.Array:
+    """Tile-mirroring oracle for the paged chunked-prefill kernel.
+
+    Pools/page-table layout as in :func:`flash_decode_paged_ref`; one tile
+    == one page, tile ``t`` gathers pool page ``page_table[:, t]`` and runs
+    the exact per-tile sequence of ``flash_prefill.flash_prefill_paged``
+    with masked (``jnp.where``) state updates standing in for predication —
+    interpret mode is BIT-IDENTICAL to this under jit.  Tiles at or past
+    ``ceil((offset + chunk_len) / page_size)`` may gather stale or clamped
+    pages; their state updates are discarded, as the kernel's predication
+    discards theirs.  Pad rows return zeros.
+    """
+    bsz, hkv, c, g, d = q.shape
+    ps = k_pool.shape[1]
+    n_tiles = page_table.shape[1]
+    r = c * g
+    scale = scale if scale is not None else d ** -0.5
+    off = offset.astype(jnp.int32)[:, None, None, None]
+    cl = chunk_len.astype(jnp.int32)[:, None, None, None]
+    # chunk_len == 0 sequences visit no tiles (mirrors the kernel's grid
+    # predicate): their state stays at init and the row mask zeroes them
+    total = jnp.where(cl > 0, off + cl, 0)
+    qf = q.astype(jnp.float32).reshape(bsz, hkv, r, d)
+    row_tok = (jax.lax.broadcasted_iota(jnp.int32, (r, 1), 0)
+               // g)[None, None]                               # (1, 1, r, 1)
+    m = jnp.full((bsz, hkv, r, 1), -1e30, jnp.float32)
+    l = jnp.zeros((bsz, hkv, r, 1), jnp.float32)
+    acc = jnp.zeros((bsz, hkv, r, d), jnp.float32)
+    for t in range(n_tiles):
+        pages = jnp.maximum(page_table[:, t], 0)          # (B,)
+        kt = k_pool[pages].astype(jnp.float32)            # (B, ps, Hkv, D)
+        vt = v_pool[pages].astype(jnp.float32)
+        if k_scale is not None:
+            kt = kt * k_scale[pages][..., None]
+            vt = vt * v_scale[pages][..., None]
+        sc = jnp.einsum("bhrd,bkhd->bhrk", qf, kt,
+                        preferred_element_type=jnp.float32) * scale
+        kv_pos = (t * ps + jax.lax.broadcasted_iota(
+            jnp.int32, (1, ps), 1))[None, None]
+        valid = (kv_pos <= off + row_tok) & (row_tok < cl)
+        sc = jnp.where(valid, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhrk,bkhd->bhrd", p, vt, preferred_element_type=jnp.float32)
+        live = t * ps < total
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+    out = acc / jnp.maximum(l, 1e-30)
+    out = jnp.where(row_tok < cl, out, 0.0)
+    return out.reshape(bsz, hkv, c, g, d).astype(out_dtype or q.dtype)
+
+
 def quantize_pack_ref(w: jax.Array, *, bits: int, group_size: int
                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-group asymmetric quantize + pack. w (K, N) float.

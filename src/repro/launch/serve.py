@@ -30,6 +30,13 @@ here; ``ref`` forces the tile-structured reference math (the flash-decode
 lowering without a TPU); ``interpret`` executes the Pallas kernel bodies in
 Python (slow — parity checks only).
 
+``--prefill-chunk N`` turns on chunked admission (DESIGN.md §10): prompts
+prefill in N-token chunks through ``prefill_chunk``, one chunk per engine
+step interleaved with decode, so long prompts never stall in-flight
+decodes for more than one chunk of work — token-identical to whole-prompt
+admission because every prefill path reads the cache as stored through the
+same tiled kernel.
+
 ``--paged`` serves through the page-table KV cache (DESIGN.md §9): the
 engine allocates fixed-size pages (``--page-size``) from a global pool on
 admission, grows sequences page-by-page, preempts the longest sequence when
@@ -80,6 +87,13 @@ def main(argv=None) -> int:
                     choices=["auto", "pallas", "interpret", "ref"],
                     help="kernel dispatch for the packed path (see module "
                          "docstring)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="> 0: chunked admission — prompts prefill in "
+                         "chunks of this many tokens, one chunk per engine "
+                         "step interleaved with decode (bounds inter-token "
+                         "latency under long-prompt arrival; token-"
+                         "identical to whole-prompt admission); 0 = "
+                         "whole-prompt bucketed prefill")
     ap.add_argument("--paged", action="store_true",
                     help="serve through the page-table KV cache (page-pool "
                          "allocation, preemption, reclamation) and report "
@@ -109,7 +123,13 @@ def main(argv=None) -> int:
 
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_new + 8,
-                       max_new=args.max_new)
+                       max_new=args.max_new,
+                       prefill_chunk=args.prefill_chunk)
+    if args.prefill_chunk:
+        logger.info("chunked admission: prompts prefill in %d-token chunks "
+                    "interleaved with decode steps (token-identical to "
+                    "whole-prompt; bounds inter-token latency)",
+                    args.prefill_chunk)
 
     def run(p, tag, serving_model=None, cfg_serve=None):
         eng = Engine(serving_model or model, p, cfg_serve or scfg)

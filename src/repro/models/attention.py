@@ -180,6 +180,41 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def chunk_prefill_attention(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, offset: jax.Array,
+                            chunk_len: jax.Array, *,
+                            scale: Optional[float] = None) -> jax.Array:
+    """Chunked prefill: q (B, C, Hq, D) against caches (B, S, Hkv, D).
+
+    The chunk's query token ``i`` sits at absolute position
+    ``offset[b] + i`` and attends cache positions ``<= offset[b] + i``
+    (causal across the chunk/prefix boundary); rows at or past
+    ``chunk_len[b]`` are pads and return zeros.  This is the portable XLA
+    path behind ``kernels.ops.flash_prefill`` — it materializes the full
+    (B, Hkv, G, C, S) score tensor (and, upstream, the dequantized fp
+    cache), which is exactly what the fused Pallas kernel exists to avoid.
+    """
+    b, c, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qh = q.reshape(b, c, hkv, g, d)
+    scores = jnp.einsum("bchgd,bshd->bhgcs", qh, k_cache.astype(qh.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = offset[:, None] + jnp.arange(c)[None, :]           # (B, C)
+    row_ok = jnp.arange(c)[None, :] < chunk_len[:, None]       # (B, C)
+    valid = (jnp.arange(s)[None, None, :] <= q_pos[:, :, None]) \
+        & row_ok[:, :, None]                                   # (B, C, S)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgcs,bshd->bchgd", probs.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    # pad rows are fully masked (uniform softmax over junk): zero them,
+    # matching the fused kernel's contract
+    out = jnp.where(row_ok[:, :, None, None, None], out, 0.0)
+    return out.reshape(b, c, hq, d).astype(q.dtype)
+
+
 def attention(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
               chunked_threshold: int = 8192, block_q: int = 1024,
               block_kv: int = 1024, scale=None, pin: str = "auto"):

@@ -265,6 +265,18 @@ class Model:
         return (self.cfg.family not in ("mamba2", "griffin", "audio")
                 and not self.cfg.window)
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when the prompt can be prefilled in C-token chunks through
+        ``prefill_chunk`` (the engine's chunked-admission mode): the causal
+        transformer trunk, reading the cache as stored.  Recurrent families
+        and sliding windows are excluded with padded prefill; VLM prefixes
+        make per-chunk absolute positions ambiguous (prefix + text).
+        Chunked == whole-prompt token identity holds for dense models; MoE
+        expert-capacity routing competes per chunk instead of per prompt —
+        the same documented approximation bucket padding already makes."""
+        return self.supports_padded_prefill and self.cfg.family != "vlm"
+
     def init_cache(self, batch: int, max_len: int) -> dict:
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
@@ -372,6 +384,27 @@ class Model:
         length = (lengths if lengths is not None
                   else jnp.full((bsz,), t_all, jnp.int32))
         return logits, {"k": kc, "v": vc, "len": length}
+
+    def prefill_chunk(self, params, batch, cache, offset, *,
+                      last_only: bool = False):
+        """One C-token prefill chunk written into (and attending) ``cache``.
+
+        ``batch`` = {"tokens": (B, C) int32, optional "chunk_len": (B,)
+        int32 valid rows (pad/idle rows pass 0)}; ``offset`` (B,) int32 is
+        each sequence's pre-chunk cache length (the chunk's first absolute
+        position).  ``cache`` is the engine's linear cache dict or a
+        ``PagedKVCache``.  Returns (logits (B, C, vocab), new_cache) —
+        (B, 1, vocab) at the last valid row when ``last_only`` (static).
+        Splitting a prompt across chunk calls is equivalent to one
+        whole-prompt call (see ``kernels.ops.flash_prefill``)."""
+        cfg = self.cfg
+        if not self.supports_chunked_prefill:
+            raise NotImplementedError(
+                f"chunked prefill: unsupported for family={cfg.family} "
+                f"window={cfg.window}")
+        return transformer.prefill_chunk(params, cfg, batch["tokens"],
+                                         batch.get("chunk_len"), cache,
+                                         offset, last_only=last_only)
 
     def decode_step(self, params, token, cache):
         cfg = self.cfg

@@ -206,6 +206,116 @@ def apply_block_decode_paged(p, x, cfg, k_pool, v_pool, page_table,
     return x + y, k_pool, v_pool
 
 
+def apply_block_prefill_chunk(p, x, cfg, kv, pos, offset, chunk_len,
+                              page_table, page_size):
+    """C-token chunk block over the serving cache.  x (B, C, d); ``kv`` is
+    ``(k, v)`` — linear entries (B, S, Hkv, D) or paged pools
+    (num_pages, page_size, Hkv, D) when ``page_table`` is given.
+
+    Same math as :func:`apply_block_full` for the valid rows, except
+    attention reads the CACHE (prefix + the chunk itself, written first)
+    through ``kernels.ops.flash_prefill`` instead of re-materializing the
+    whole sequence's K/V — the chunked-serving write/read contract shared
+    with the packed model.  Pad rows (``i >= chunk_len[b]``) neither write
+    nor attend.
+    """
+    from repro.kernels import ops
+    from repro.serve.kv_cache import (chunk_write_dest,
+                                      linear_chunk_write_dest,
+                                      paged_chunk_write)
+    h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    b, c = x.shape[0], x.shape[1]
+    if page_table is not None:
+        num_pages = kv[0].shape[0]
+        dest = chunk_write_dest(page_table, offset, chunk_len, c, page_size,
+                                num_pages)
+        k_cache = paged_chunk_write(kv[0], k, dest)
+        v_cache = paged_chunk_write(kv[1], v, dest)
+    else:
+        # pad rows and past-capacity positions resolve OOB: scatter drops
+        dest = linear_chunk_write_dest(offset, chunk_len, c, kv[0].shape[1])
+        bidx = jnp.arange(b)[:, None]
+        k_cache = kv[0].at[bidx, dest].set(k.astype(kv[0].dtype))
+        v_cache = kv[1].at[bidx, dest].set(v.astype(kv[1].dtype))
+    out = ops.flash_prefill(q, (k_cache, v_cache), offset, chunk_len,
+                            page_table=page_table)
+    x = x + out.reshape(b, c, -1) @ p["wo"]
+
+    h2 = layers.apply_norm(p["ln_mlp"], x, cfg.norm)
+    if cfg.num_experts:
+        y, _ = moe.apply_moe(p["moe"], h2, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        y = layers.apply_mlp(p["mlp"], h2, cfg.act)
+    return x + y, (k_cache, v_cache)
+
+
+def prefill_chunk(params, cfg, tokens, chunk_len, cache, offset,
+                  last_only: bool = False):
+    """One C-token prefill chunk over the serving cache (fp trunk).
+
+    ``tokens`` (B, C) int32 — token ``i`` of sequence ``b`` sits at
+    absolute position ``offset[b] + i``; ``chunk_len`` (B,) int32 valid
+    rows (None = all C); ``cache`` is the linear decode cache dict or a
+    ``repro.serve.kv_cache.PagedKVCache``.  The chunk's K/V are written
+    into the cache first, then attention reads the cache (prefix + chunk)
+    causally.  Returns (logits (B, C, vocab), new_cache) with
+    ``len``/``lens`` advanced to ``offset + chunk_len`` (idle rows pass
+    ``chunk_len == 0`` and are untouched); ``last_only`` (static) gathers
+    the last valid hidden row before the head — logits (B, 1, vocab), the
+    engine's chunk-step shape.
+    """
+    from repro.serve.kv_cache import PagedKVCache
+    paged = isinstance(cache, PagedKVCache)
+    bsz, c = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    chunk_len = (jnp.full((bsz,), c, jnp.int32) if chunk_len is None
+                 else jnp.asarray(chunk_len, jnp.int32))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = offset[:, None] + jnp.arange(c)[None, :]
+    if cfg.rope_theta == 0:
+        x = x + sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+    x = sharding.shard(x, "batch", "seq", "embed")
+    if paged:
+        kv_in = (cache.k, cache.v)
+        pt, psz = cache.page_table, cache.page_size
+    else:
+        kv_in = (cache["k"], cache["v"])
+        pt, psz = None, None
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, (kc, vc) = apply_block_prefill_chunk(
+            lp, h, cfg, (kc, vc), pos, offset, chunk_len, pt, psz)
+        return h, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"],) + kv_in)
+    else:
+        k_list, v_list = [], []
+        for li, lp in enumerate(params["layers"]):
+            x, (kc, vc) = body(x, (lp, kv_in[0][li], kv_in[1][li]))
+            k_list.append(kc)
+            v_list.append(vc)
+        k_new, v_new = jnp.stack(k_list), jnp.stack(v_list)
+
+    if last_only:
+        x = x[jnp.arange(bsz), jnp.maximum(chunk_len - 1, 0)][:, None]
+    x = layers.apply_norm(params["ln_f"], x, cfg.norm)
+    head = params.get("head", None)
+    logits = x @ (head if head is not None else params["embed"].T)
+    if paged:
+        return logits, dataclasses.replace(
+            cache, k=k_new, v=v_new,
+            lens=jnp.minimum(offset + chunk_len, cache.capacity))
+    new_len = jnp.minimum(offset + chunk_len, cache["k"].shape[2])
+    return logits, {"k": k_new, "v": v_new, "len": new_len}
+
+
 def _masked_decode_attention(q, k_cache, v_cache, valid):
     b, _, hq, d = q.shape
     hkv = k_cache.shape[2]
@@ -256,13 +366,17 @@ def _sinusoidal(t: int, d: int) -> jax.Array:
 
 
 def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
-    """Sinusoidal embedding at per-sequence decode positions (B,) -> (B, d).
+    """Sinusoidal embedding at explicit positions (...,) -> (..., d).
 
-    Shared by the fp and packed decode paths (no-RoPE / OPT family) so the
-    position scheme cannot drift between them.
+    Shared by the fp and packed decode paths ((B,) per-sequence positions)
+    and the chunked-prefill paths ((B, C) per-sequence chunk positions) —
+    no-RoPE / OPT family — so the position scheme cannot drift between
+    phases.
     """
-    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
-    ang = positions[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    i = jnp.arange(d // 2).astype(jnp.float32)
+    shape = (1,) * positions.ndim + (d // 2,)
+    ang = positions[..., None].astype(jnp.float32) \
+        / jnp.power(10000.0, 2 * i / d).reshape(shape)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 

@@ -13,7 +13,20 @@ requirement) and a FIFO queue of pending requests. Per iteration it
      models (``model.supports_padded_prefill`` — recurrent families group
      by exact length instead). Paged mode reserves each prompt's
      ``ceil(len / page_size)`` pages before prefill and the prefilled K/V
-     are spliced into those pages;
+     are spliced into those pages.
+     **Chunked admission** (``prefill_chunk > 0``, vLLM-style): prompts
+     are instead fed through ``model.prefill_chunk`` in
+     ``<= prefill_chunk`` token chunks, ONE chunk per engine step,
+     interleaved with the decode step — a long prompt never stalls
+     in-flight decodes for more than one chunk's worth of work (the
+     inter-token-latency bound BENCH_serve.json measures), and the chunk
+     call is a single compile (shape-stable ``(max_batch,
+     prefill_chunk)``) instead of one per bucket. Because every prefill
+     path reads the cache as stored through the same tiled kernel
+     (DESIGN.md §10), chunked and whole-prompt admission are
+     token-IDENTICAL for dense models (MoE routing competes per chunk —
+     the same approximation bucket padding makes, see the caveat below);
+     preemption resume re-enters through the same chunked path;
   2. **ensures capacity** (paged): a sequence crossing a page boundary gets
      one page from the free list; when the pool runs dry the engine
      preempts the *longest* active sequence — frees its pages and re-queues
@@ -44,8 +57,9 @@ QTensor tree — ``Model`` and ``QuantizedModel`` expose the same
 interface, so the engine is oblivious to quantization.
 
 Caveat (MoE): expert-capacity routing competes across every token in a
-prefill batch, so bucket padding can shift routing for valid tokens —
-dense/GQA models are exact, MoE prefill is the documented approximation.
+prefill batch, so bucket padding — and likewise chunk boundaries in
+chunked admission — can shift routing for valid tokens; dense/GQA models
+are exact, MoE prefill is the documented approximation in both modes.
 """
 from __future__ import annotations
 
@@ -72,6 +86,11 @@ class ServeConfig:
     top_k: int = 0               # 0 = full categorical (when sampling)
     seed: int = 0                # PRNG seed for sampling
     prefill_bucket: int = 32     # prompt-length bucket granularity
+    prefill_chunk: int = 0       # > 0: chunked admission — prompts prefill
+    #                              in <= prefill_chunk token chunks (one
+    #                              chunk per engine step, vLLM-style token
+    #                              budget) interleaved with decode steps;
+    #                              0 = whole-prompt bucketed prefill
     paged: bool = False          # page-table KV cache + admission control
     page_size: int = 64
     num_pages: int = 0           # 0 = auto (max_batch * pages(max_len))
@@ -117,6 +136,9 @@ class Engine:
             self._kv = kv_cache.LinearCache(model, cfg.max_batch,
                                             cfg.max_len)
         self._decode = jax.jit(self._decode_and_sample)
+        # per-instance jit (like _decode): a class-level jit with static
+        # `self` would retain every engine's cache buffers process-wide
+        self._prefill = jax.jit(self._prefill_call, static_argnums=(3,))
         self._pending: deque[Request] = deque()
         self._all: list[Request] = []
         self._slots: list[Optional[Request]] = [None] * cfg.max_batch
@@ -129,6 +151,37 @@ class Engine:
                                     self._base_key.dtype)
         self._supports_padded = bool(
             getattr(model, "supports_padded_prefill", False))
+        # chunked admission: per-slot (request, resume tokens) for prompts
+        # mid-prefill (None = slot idle or decoding); tokens written so
+        # far is _seq_len[slot], same as for decoding slots
+        self._prefill_prog: list[Optional[tuple]] = [None] * cfg.max_batch
+        if cfg.prefill_chunk:
+            if not getattr(model, "supports_chunked_prefill", False):
+                raise ValueError(
+                    f"chunked admission (prefill_chunk={cfg.prefill_chunk}) "
+                    f"needs model.prefill_chunk; "
+                    f"{type(model).__name__} does not support it")
+            self._chunk = jax.jit(self._chunk_prefill_call)
+
+    def _chunk_prefill_call(self, params, tokens, chunk_len, cache, offset):
+        """The one jitted chunk step (shape-stable: (max_batch,
+        prefill_chunk) tokens — ONE compile for all of chunked admission,
+        vs one per bucket x group size for whole-prompt prefill).
+        ``last_only``: only the final chunk's last valid row is ever
+        sampled, so chunk steps skip the (B, C, vocab) head matmul and
+        return (B, 1, vocab)."""
+        return self.model.prefill_chunk(
+            params, {"tokens": tokens, "chunk_len": chunk_len}, cache,
+            offset, last_only=True)
+
+    def _prefill_call(self, params, tokens, lengths, bucket: int):
+        """Whole-prompt batched prefill, jitted per (bucket, group size) —
+        the bounded compile set the bucketing exists for (an eager call
+        would re-trace the layer scan on every admission)."""
+        batch = {"tokens": tokens}
+        if lengths is not None:
+            batch["lengths"] = lengths
+        return self.model.prefill(params, batch, max_len=bucket)
 
     # ------------------------------------------------------------------
     # submission
@@ -230,11 +283,10 @@ class Engine:
             lengths = np.asarray([ln for _, _, ln in fitted], np.int32)
             for row, (_, req, ln) in enumerate(fitted):
                 tokens[row, :ln] = req.resume_tokens()
-            batch = {"tokens": jnp.asarray(tokens)}
-            if self._supports_padded:
-                batch["lengths"] = jnp.asarray(lengths)
-            logits, cache1 = self.model.prefill(self.params, batch,
-                                                max_len=bucket)
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray(tokens),
+                jnp.asarray(lengths) if self._supports_padded else None,
+                bucket)
             toks = np.asarray(self._sample(
                 logits[:, -1, :], self._req_keys([r for _, r, _ in fitted])))
             slot_ids, slot_toks = [], []
@@ -256,6 +308,79 @@ class Engine:
             free.extend(s for s in slot_ids if self._slots[s] is None)
 
     # ------------------------------------------------------------------
+    # chunked admission (ServeConfig.prefill_chunk > 0)
+    # ------------------------------------------------------------------
+    def _admit_chunked(self) -> None:
+        """Assign pending requests to free slots (FIFO) and queue their
+        prompts for chunk-sized prefill; the prefill work itself happens in
+        :meth:`_advance_prefill`, one chunk per engine step, so a long
+        prompt never monopolizes the step loop.  Paged mode reserves the
+        prompt's pages up front exactly like whole-prompt admission (same
+        free-list accounting, same preemption sizes)."""
+        for slot in self._free_slots():
+            if not self._pending:
+                return
+            req = self._pending[0]
+            if not self._kv.reserve(slot, req.resume_len):
+                if not any(s is not None for s in self._slots):
+                    # nothing to wait for: the request exceeds the pool
+                    raise RuntimeError(
+                        f"request rid={req.rid} needs {req.resume_len} "
+                        f"cache tokens but the idle pool cannot hold them "
+                        f"— size num_pages up")
+                return   # pool dry: wait for completions to free pages
+            self._pending.popleft()
+            self._slots[slot] = req
+            self._seq_len[slot] = 0
+            self._prefill_prog[slot] = (req, req.resume_tokens())
+
+    def _advance_prefill(self) -> bool:
+        """Advance the FIFO-oldest mid-prefill slot by one chunk of up to
+        ``prefill_chunk`` tokens (the per-step prefill token budget).  On
+        the final chunk, sample the request's first token and hand the
+        slot to decode — the same gather-at-last-valid-row + sample the
+        whole-prompt path performs, so the two admission modes are
+        token-identical."""
+        slots = [i for i in range(self.cfg.max_batch)
+                 if self._prefill_prog[i] is not None]
+        if not slots:
+            return False
+        slot = min(slots, key=lambda i: self._prefill_prog[i][0].rid)
+        req, toks = self._prefill_prog[slot]
+        done = self._seq_len[slot]          # tokens written so far
+        c = self.cfg.prefill_chunk
+        n = min(c, len(toks) - done)
+        tokens = np.zeros((self.cfg.max_batch, c), np.int32)
+        tokens[slot, :n] = toks[done:done + n]
+        chunk_len = np.zeros((self.cfg.max_batch,), np.int32)
+        chunk_len[slot] = n
+        # every row passes its host-known true length: rows with
+        # chunk_len == 0 neither write nor attend, and the chunk call
+        # resyncs their device lens (decode steps write a droppable
+        # garbage token ahead of mid-prefill slots — the next chunk
+        # overwrites it before it is ever attended)
+        offsets = np.asarray(self._seq_len, np.int32)
+        logits, cache = self._chunk(self.params, jnp.asarray(tokens),
+                                    jnp.asarray(chunk_len), self._kv.cache,
+                                    jnp.asarray(offsets))
+        self._kv.cache = cache
+        self._seq_len[slot] = done + n
+        if done + n < len(toks):
+            return True
+        # prompt fully prefilled: sample the first token from the last
+        # valid chunk row (the chunk call already gathered it) and start
+        # decoding
+        self._prefill_prog[slot] = None
+        tok = int(np.asarray(self._sample(logits[slot],
+                                          self._req_keys([req])))[0])
+        req.out_tokens.append(tok)
+        if req.on_token:
+            req.on_token(req, tok)
+        self._last_tok = self._last_tok.at[slot, 0].set(tok)
+        self._maybe_finish(slot, tok)
+        return True
+
+    # ------------------------------------------------------------------
     # preemption (paged admission control)
     # ------------------------------------------------------------------
     def _preempt(self, slot: int) -> None:
@@ -265,18 +390,25 @@ class Engine:
         req.preemptions += 1
         self._slots[slot] = None
         self._seq_len[slot] = 0
+        self._prefill_prog[slot] = None   # mid-prefill victims restart
         self._kv.free(slot)
         self._pending.appendleft(req)   # resumes first when pages free up
 
     def _ensure_capacity(self, active: list[int]) -> list[int]:
         """Make every active slot's next token write page-backed; evict the
-        longest sequence (freeing its pages) when the pool runs dry."""
+        sequence holding the most pages (mid-prefill prompts included —
+        their pages are reserved up front, so a half-prefilled long prompt
+        is the biggest reclaim) when the pool runs dry.  A preempted
+        mid-prefill request restarts through the same chunked path on
+        resume, token-identically."""
         for slot in list(active):
             if self._slots[slot] is None:
                 continue
             while not self._kv.ensure_append(slot, self._seq_len[slot]):
-                live = [i for i in active if self._slots[i] is not None]
-                victim = max(live, key=lambda i: (self._seq_len[i], -i))
+                live = [i for i, s in enumerate(self._slots)
+                        if s is not None]
+                victim = max(live, key=lambda i: (self._kv.owned_pages(i),
+                                                  self._seq_len[i], -i))
                 self._preempt(victim)
                 if victim == slot:
                     break
@@ -298,15 +430,25 @@ class Engine:
             self._kv.free(slot)
 
     def step(self) -> int:
-        """One engine iteration: admit + ensure pages + one batched decode
-        step. Returns the number of sequences decoded."""
-        self._admit()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
+        """One engine iteration: admit + (chunked mode) one prefill chunk
+        + ensure pages + one batched decode step.  Chunked admission
+        interleaves a bounded ``prefill_chunk`` tokens of prompt work with
+        every decode step, so in-flight decodes keep streaming while a
+        long prompt drips in.  Returns the number of sequences advanced."""
+        if self.cfg.prefill_chunk:
+            self._admit_chunked()
+            did_chunk = self._advance_prefill()
+        else:
+            self._admit()
+            did_chunk = False
+        active = [i for i, s in enumerate(self._slots)
+                  if s is not None and self._prefill_prog[i] is None]
         if self.cfg.paged:
             active = self._ensure_capacity(active)
         if not active:
-            return 0
-        reqs = [self._slots[i] if self._slots[i] is not None
+            return int(did_chunk)
+        reqs = [self._slots[i] if (self._slots[i] is not None
+                                   and self._prefill_prog[i] is None)
                 else _IDLE_REQ for i in range(self.cfg.max_batch)]
         nxt, cache = self._decode(self.params, self._last_tok,
                                   self._kv.cache, self._req_keys(reqs))
@@ -321,7 +463,7 @@ class Engine:
                 req.on_token(req, tok)
             self._seq_len[i] += 1
             self._maybe_finish(i, tok)
-        return len(active)
+        return len(active) + int(did_chunk)
 
     def run(self) -> list[Request]:
         """Drain the queue; returns every submitted request, in

@@ -78,6 +78,48 @@ class PagedKVCache:
         return self.k_scale is not None
 
 
+def chunk_write_dest(page_table: jax.Array, offset: jax.Array,
+                     chunk_len: jax.Array, chunk: int, page_size: int,
+                     num_pages: int) -> jax.Array:
+    """Flat pool indices (B, chunk) (into a ``(num_pages * page_size, ...)``
+    view) where a C-token prefill chunk's tokens land.
+
+    Token ``i`` of sequence ``b`` goes to absolute position
+    ``offset[b] + i``.  Pad rows (``i >= chunk_len[b]``), unallocated
+    logical pages, and at-capacity positions resolve to
+    ``num_pages * page_size`` (out of bounds — the scatter drops the write,
+    the linear cache's drop-at-capacity contract).  The ONE destination
+    formula the decode write (:func:`token_write_dest` is its C == 1
+    column) and the chunked-prefill write share, so the semantics cannot
+    drift between phases.
+    """
+    b, mpps = page_table.shape
+    pos = offset[:, None] + jnp.arange(chunk)[None, :]          # (B, C)
+    page_idx = jnp.minimum(pos // page_size, mpps - 1)
+    page = page_table[jnp.arange(b)[:, None], page_idx]
+    valid = (page >= 0) & (pos < mpps * page_size) \
+        & (jnp.arange(chunk)[None, :] < chunk_len[:, None])
+    return jnp.where(valid, page * page_size + pos % page_size,
+                     num_pages * page_size)
+
+
+def linear_chunk_write_dest(offset: jax.Array, chunk_len: jax.Array,
+                            chunk: int, max_len: int) -> jax.Array:
+    """Sequence-axis indices (B, chunk) where a C-token prefill chunk
+    lands in a linear ``(B, S, ...)`` cache entry.
+
+    Token ``i`` of sequence ``b`` goes to position ``offset[b] + i``; pad
+    rows (``i >= chunk_len[b]``) and past-capacity positions resolve to
+    ``max_len`` (out of bounds — the scatter drops the write).  The ONE
+    linear-destination formula the fp and packed chunk writers share, the
+    linear twin of :func:`chunk_write_dest`.
+    """
+    pos = offset[:, None] + jnp.arange(chunk)[None, :]          # (B, C)
+    valid = (jnp.arange(chunk)[None, :] < chunk_len[:, None]) \
+        & (pos < max_len)
+    return jnp.where(valid, pos, max_len)
+
+
 def token_write_dest(page_table: jax.Array, lens: jax.Array,
                      page_size: int, num_pages: int) -> jax.Array:
     """Flat pool index (into a ``(num_pages * page_size, ...)`` view) where
@@ -86,14 +128,12 @@ def token_write_dest(page_table: jax.Array, lens: jax.Array,
     Returns ``num_pages * page_size`` (out of bounds — the scatter drops the
     write, matching the linear cache's drop-at-capacity contract) where the
     logical page is unallocated or the sequence is at capacity.  Shared by
-    the fp and packed decode paths so the write semantics cannot drift.
+    the fp and packed decode paths so the write semantics cannot drift;
+    implemented as the C == 1 column of :func:`chunk_write_dest` so decode
+    and chunked prefill share one destination formula.
     """
-    b, mpps = page_table.shape
-    page_idx = jnp.minimum(lens // page_size, mpps - 1)
-    page = page_table[jnp.arange(b), page_idx]
-    valid = (page >= 0) & (lens < mpps * page_size)
-    return jnp.where(valid, page * page_size + lens % page_size,
-                     num_pages * page_size)
+    return chunk_write_dest(page_table, lens, jnp.ones_like(lens), 1,
+                            page_size, num_pages)[:, 0]
 
 
 def paged_token_write(pool: jax.Array, val: jax.Array,
@@ -105,6 +145,19 @@ def paged_token_write(pool: jax.Array, val: jax.Array,
     :func:`token_write_dest` (out-of-bounds entries drop).  The one write
     implementation both the fp and packed paged decode paths call, so the
     drop-at-capacity contract cannot drift between them.
+    """
+    return paged_chunk_write(pool, val[:, None], dest[:, None])
+
+
+def paged_chunk_write(pool: jax.Array, val: jax.Array,
+                      dest: jax.Array) -> jax.Array:
+    """Scatter a C-token chunk per sequence into a page pool.
+
+    ``pool`` (num_pages, page_size, ...); ``val`` (B, C, ...) matching the
+    pool's trailing dims; ``dest`` (B, C) flat indices from
+    :func:`chunk_write_dest` (out-of-bounds entries drop).  The decode
+    write (:func:`paged_token_write`) is the C == 1 case of this same
+    scatter.
     """
     flat = pool.reshape(pool.shape[0] * pool.shape[1], *pool.shape[2:])
     return flat.at[dest].set(val.astype(pool.dtype)).reshape(pool.shape)
@@ -245,6 +298,10 @@ class LinearCache:
         past-capacity writes drop (see transformer.apply_block_decode)."""
         return True
 
+    def owned_pages(self, slot: int) -> int:
+        """Linear slots hold no pages (preemption never triggers)."""
+        return 0
+
     def splice(self, slot: int, seq_cache: dict, row: int,
                length: int) -> None:
         """Write row ``row`` of a prefilled cache into ``slot``.
@@ -325,6 +382,10 @@ class PagedCache:
         pt = self.cache.page_table.at[slot, idx].set(pages[0])
         self.cache = dataclasses.replace(self.cache, page_table=pt)
         return True
+
+    def owned_pages(self, slot: int) -> int:
+        """Pages currently backing ``slot`` (the engine's eviction rank)."""
+        return len(self.allocator.owned[slot])
 
     def splice(self, slot: int, seq_cache: dict, row: int,
                length: int) -> None:

@@ -60,10 +60,9 @@ from repro.configs.base import ModelConfig
 from repro.core.qtensor import QTensor, tree_has_qtensor
 from repro.core.quantizer import QuantConfig, quantize_codes
 from repro.kernels import ops
-from repro.models import attention as attn_lib
 from repro.models import layers
 from repro.models.model import build_model
-from repro.models.transformer import _sinusoidal, sinusoidal_at
+from repro.models.transformer import sinusoidal_at
 
 PACKED_WEIGHTS = ("wq", "wk", "wv", "wo")
 PACKED_MLP = ("w_gate", "w_up", "w_down")
@@ -185,6 +184,13 @@ class QuantizedModel:
         ``lengths``) is exact for the causal transformer trunk."""
         return True
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked engine admission (``ServeConfig.prefill_chunk > 0``):
+        every prefill already routes through :meth:`prefill_chunk`, so
+        chunked and whole-prompt admission are token-identical."""
+        return True
+
     # cache API identical to Model (int8 codes + per-(token, head) scales
     # when kv_bits < 16)
     def init_cache(self, batch: int, max_len: int) -> dict:
@@ -228,61 +234,130 @@ class QuantizedModel:
                                           page_size, max_pages_per_seq)
 
     # ------------------------------------------------------------------
-    # prefill (batched token matmuls; dequant_matmul handles ragged M)
+    # prefill: chunked forward over the cache AS STORED
     # ------------------------------------------------------------------
     def prefill(self, params, batch, max_len: int):
-        """Full-prompt forward building the decode cache on packed weights.
+        """Full-prompt prefill == ONE chunk of :meth:`prefill_chunk` at
+        offset 0.
 
         ``batch["lengths"]`` (B,) int32, if present, marks per-sequence
         valid prompt lengths for bucketed engine prefill: prompts are
         end-padded to a shared bucket, so causality keeps every valid
         position exact; logits are gathered at ``lengths - 1`` and the
-        cache ``len`` records the true lengths (pad K/V beyond them are
-        never attended and get overwritten by decode writes)."""
+        cache ``len`` records the true lengths.  Pad positions neither
+        write the cache nor attend (chunk-row masking), and prompt tokens
+        attend the cache exactly as decode will (dequantized int8 codes at
+        ``kv_bits < 16``, never a transient fp copy) — so whole-prompt and
+        C-token chunked admission are token-identical (same-shape calls
+        bit-identical, cross-shape to f32 ULPs; see
+        ``kernels.ops.flash_prefill``).  Returns (last-valid-token logits
+        (B, 1, vocab), cache)."""
+        tokens = batch["tokens"]
+        bsz, t = tokens.shape
+        lengths = batch.get("lengths")
+        lengths = (jnp.full((bsz,), t, jnp.int32) if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        cache = self.init_cache(bsz, max(max_len, t))
+        x, cache = self._forward_chunk(
+            params, tokens, lengths, cache, jnp.zeros((bsz,), jnp.int32))
+        # gather the last valid hidden row BEFORE the head: whole-prompt
+        # prefill never materializes (B, T, vocab) logits
+        x = x[jnp.arange(bsz), lengths - 1][:, None]
+        x = layers.apply_norm(params["ln_f"], x, self.cfg.norm)
+        head = params.get("head")
+        logits = x @ (head if head is not None else params["embed"].T)
+        return logits, cache
+
+    def prefill_chunk(self, params, batch, cache, offset, *,
+                      last_only: bool = False):
+        """One C-token prefill chunk on packed weights, written into (and
+        attending) ``cache`` — linear dict or ``PagedKVCache``.
+
+        ``batch`` = {"tokens": (B, C), optional "chunk_len": (B,) valid
+        rows (idle engine rows pass 0)}; ``offset`` (B,) int32 is each
+        sequence's pre-chunk cache length.  Quantize-on-write is fused into
+        the chunk: at ``kv_bits < 16`` the chunk's K/V enter the cache as
+        int8 codes + per-(token, head) f32 scales and attention reads the
+        codes back through ``ops.flash_prefill`` — the only fp K/V
+        intermediate is the (B, C, Hkv, D) chunk itself, never the
+        (B, S, Hkv, D) cache (jaxpr-pinned).  Returns
+        (logits (B, C, vocab), new_cache) with ``len``/``lens`` advanced to
+        ``offset + chunk_len`` — or logits (B, 1, vocab) gathered at the
+        last valid row (pre-head, like :meth:`prefill`) when ``last_only``
+        (static): the engine's chunk steps only ever read that row, so
+        they skip the (B, C, vocab) head matmul."""
         cfg = self.cfg
         tokens = batch["tokens"]
-        lengths = batch.get("lengths")
-        bsz, t = tokens.shape
-        x = jnp.take(params["embed"], tokens, axis=0)
-        if cfg.rope_theta == 0:
-            x = x + _sinusoidal(t, cfg.d_model).astype(x.dtype)[None]
-        positions = jnp.arange(t)[None, :]
-
-        def body(h, lp):
-            h, k, v = self._block_prefill(lp, h, positions)
-            return h, (k, v)
-
-        if cfg.scan_layers:
-            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-        else:
-            raise NotImplementedError("packed serving assumes scan layout")
-        if lengths is not None:
-            lengths = jnp.asarray(lengths, jnp.int32)
-            x = x[jnp.arange(bsz), lengths - 1][:, None]
-        else:
-            x = x[:, -1:, :]
+        bsz, c = tokens.shape
+        chunk_len = batch.get("chunk_len")
+        chunk_len = (jnp.full((bsz,), c, jnp.int32) if chunk_len is None
+                     else jnp.asarray(chunk_len, jnp.int32))
+        x, cache = self._forward_chunk(params, tokens, chunk_len, cache,
+                                       offset)
+        if last_only:
+            x = x[jnp.arange(bsz), jnp.maximum(chunk_len - 1, 0)][:, None]
         x = layers.apply_norm(params["ln_f"], x, cfg.norm)
         head = params.get("head")
         logits = x @ (head if head is not None else params["embed"].T)
-        max_len = max(max_len, t)
-        cache = self.init_cache(bsz, max_len)
-        length = (lengths if lengths is not None
-                  else jnp.full((bsz,), t, jnp.int32))
-        if self._kv_quantized:
-            kq, k_s = _kv_quantize(ks, self.qcfg.kv_bits)
-            vq, v_s = _kv_quantize(vs, self.qcfg.kv_bits)
-            return logits, {
-                "k": cache["k"].at[:, :, :t].set(kq),
-                "v": cache["v"].at[:, :, :t].set(vq),
-                "k_scale": cache["k_scale"].at[:, :, :t].set(k_s),
-                "v_scale": cache["v_scale"].at[:, :, :t].set(v_s),
-                "len": length}
-        kc = cache["k"].at[:, :, :t].set(ks.astype(cache["k"].dtype))
-        vc = cache["v"].at[:, :, :t].set(vs.astype(cache["v"].dtype))
-        return logits, {"k": kc, "v": vc, "len": length}
+        return logits, cache
 
-    def _block_prefill(self, p, x, positions):
+    def _forward_chunk(self, params, tokens, chunk_len, cache, offset):
+        """Chunk trunk shared by :meth:`prefill` and :meth:`prefill_chunk`:
+        embed → scan blocks (cache write + as-stored attention) — returns
+        the pre-``ln_f`` hidden states (B, C, d) and the updated cache, so
+        whole-prompt prefill can gather one row before the vocab matmul
+        while the chunked engine keeps per-row logits."""
+        from repro.serve.kv_cache import PagedKVCache
         cfg = self.cfg
+        bsz, c = tokens.shape
+        offset = jnp.asarray(offset, jnp.int32)
+        chunk_len = jnp.asarray(chunk_len, jnp.int32)
+        paged = isinstance(cache, PagedKVCache)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        pos = offset[:, None] + jnp.arange(c)[None, :]
+        if cfg.rope_theta == 0:
+            x = x + sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+        if paged:
+            kv_in = (cache.k, cache.v)
+            if self._kv_quantized:
+                kv_in += (cache.k_scale, cache.v_scale)
+            pt, psz = cache.page_table, cache.page_size
+        else:
+            kv_in = (cache["k"], cache["v"])
+            if self._kv_quantized:
+                kv_in += (cache["k_scale"], cache["v_scale"])
+            pt, psz = None, None
+
+        def body(h, xs):
+            lp, kv = xs[0], xs[1:]
+            h, kv = self._block_prefill_chunk(lp, h, kv, pos, offset,
+                                              chunk_len, pt, psz)
+            return h, kv
+
+        if cfg.scan_layers:
+            x, kv_new = jax.lax.scan(body, x, (params["layers"],) + kv_in)
+        else:
+            raise NotImplementedError("packed serving assumes scan layout")
+        if paged:
+            new = {"k": kv_new[0], "v": kv_new[1],
+                   "lens": jnp.minimum(offset + chunk_len, cache.capacity)}
+            if self._kv_quantized:
+                new["k_scale"], new["v_scale"] = kv_new[2], kv_new[3]
+            return x, dataclasses.replace(cache, **new)
+        s = cache["k"].shape[2]
+        new_cache = {"k": kv_new[0], "v": kv_new[1],
+                     "len": jnp.minimum(offset + chunk_len, s)}
+        if self._kv_quantized:
+            new_cache["k_scale"], new_cache["v_scale"] = kv_new[2], kv_new[3]
+        return x, new_cache
+
+    def _block_prefill_chunk(self, p, x, kv, pos, offset, chunk_len,
+                             page_table, page_size):
+        from repro.serve.kv_cache import (chunk_write_dest,
+                                          linear_chunk_write_dest,
+                                          paged_chunk_write)
+        cfg = self.cfg
+        b, c = x.shape[0], x.shape[1]
         h = layers.apply_norm(p["ln_attn"], x, cfg.norm)
         h = _act_transform(p.get("attn_t"), h)
         q = self._mm(h, p["wq"])
@@ -290,20 +365,43 @@ class QuantizedModel:
         v = self._mm(h, p["wv"])
         if "bq" in p:
             q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-        b, t = x.shape[0], x.shape[1]
         hd = cfg.resolved_head_dim
-        q = q.reshape(b, t, cfg.num_heads, hd)
-        k = k.reshape(b, t, cfg.num_kv_heads, hd)
-        v = v.reshape(b, t, cfg.num_kv_heads, hd)
+        q = q.reshape(b, c, cfg.num_heads, hd)
+        k = k.reshape(b, c, cfg.num_kv_heads, hd)
+        v = v.reshape(b, c, cfg.num_kv_heads, hd)
         if cfg.rope_theta > 0:
-            q = layers.apply_rope(q, positions, cfg.rope_theta)
-            k = layers.apply_rope(k, positions, cfg.rope_theta)
-        out = attn_lib.attention(q, k, v, causal=cfg.causal,
-                                 window=cfg.window,
-                                 chunked_threshold=cfg.attn_chunk_threshold)
-        x = x + self._mm(out.reshape(b, t, -1), p["wo"])
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        if page_table is not None:
+            num_pages = kv[0].shape[0]
+            dest = chunk_write_dest(page_table, offset, chunk_len, c,
+                                    page_size, num_pages)
+            write = lambda pool, val: paged_chunk_write(pool, val, dest)
+        else:
+            # pad rows / past-capacity positions resolve OOB: scatter drops
+            dest = linear_chunk_write_dest(offset, chunk_len, c,
+                                           kv[0].shape[1])
+            bidx = jnp.arange(b)[:, None]
+            write = lambda ct, val: ct.at[bidx, dest].set(val.astype(ct.dtype))
+        if len(kv) == 4:
+            # fused quantize-on-write: the chunk enters the cache as codes
+            kc, vc, ksc, vsc = kv
+            kq, k_s = _kv_quantize(k, self.qcfg.kv_bits)
+            vq, v_s = _kv_quantize(v, self.qcfg.kv_bits)
+            kv = (write(kc, kq), write(vc, vq),
+                  write(ksc, k_s), write(vsc, v_s))
+        else:
+            kc, vc = kv
+            kv = (write(kc, k), write(vc, v))
+        # attention reads the cache AS STORED (prefix + this chunk):
+        # in-register tile dequant, chunk-end-masked KV grid — bit-identical
+        # per row to flash_decode over the same cache (resume exactness)
+        out = ops.flash_prefill(q, kv, offset, chunk_len,
+                                block_kv=self.flash_block_kv,
+                                page_table=page_table, mode=self.kernel_mode)
+        x = x + self._mm(out.reshape(b, c, -1), p["wo"])
         x = x + self._mlp(p, x)
-        return x, k, v
+        return x, kv
 
     # ------------------------------------------------------------------
     # decode

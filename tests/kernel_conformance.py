@@ -1,0 +1,210 @@
+"""Shared kernel-conformance harness (not a test module).
+
+Every fused Pallas kernel in this repo carries the same contract: its
+``interpret``-mode execution is BIT-identical under jit to a tile-mirroring
+pure-jnp oracle (``repro.kernels.ref``), and both match an independent
+from-scratch numpy softmax / matmul to fp tolerance.  The sweep boilerplate
+that proves it — cache/pool builders with quantize-on-write layouts, the
+jit-wrapped interpret-vs-ref assertion, the shared parameter grids, and the
+jaxpr traversal that pins "no fp full-cache intermediate" — was duplicated
+across test_kernels.py / test_flash_decode.py / test_paged_cache.py; this
+module is the one copy all kernel test files (including the flash-prefill
+sweep) import.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the canonical sweep axes: quantized + fp cache, MQA + GQA, multi-tile +
+# single-tile blocks (tests parametrize over these so every kernel family
+# covers the same grid)
+KV_BITS = (8, 16)
+GQA_GROUPS = (1, 4)
+KV_BLOCKS = (16, 64)
+
+
+# ---------------------------------------------------------------------------
+# input builders (the serving cache layouts)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x, kv_bits):
+    """Symmetric per-(token, head) KV quantization — the serving layout.
+
+    x (..., H, D) -> (int8 codes, f32 scale (..., H)); mirrors
+    ``repro.serve.quantized._kv_quantize``.
+    """
+    qmax = 2.0 ** (kv_bits - 1) - 1.0
+    bound = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
+    scale = bound / qmax
+    codes = jnp.clip(jnp.round(x / scale[..., None]),
+                     -qmax - 1.0, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def make_cache_inputs(key, b, s, hkv, g, d, kv_bits, chunk=1):
+    """Random q + linear cache in the serving layout.
+
+    Returns (q (B, chunk, Hq, D), kv tuple as the model carries it — int8
+    codes + per-(token, head) f32 scales for kv_bits < 16, fp otherwise —
+    and the dequantized (k, v) for oracle checks).
+    """
+    hq = hkv * g
+    q = jax.random.normal(key, (b, chunk, hq, d), jnp.float32)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    if kv_bits >= 16:
+        return q, (kf, vf), (kf, vf)
+    kq, ks = quantize_kv(kf, kv_bits)
+    vq, vs = quantize_kv(vf, kv_bits)
+    deq = (kq.astype(jnp.float32) * ks[..., None],
+           vq.astype(jnp.float32) * vs[..., None])
+    return q, (kq, vq, ks, vs), deq
+
+
+def make_paged_inputs(key, b, hkv, g, d, page_size, lens, kv_bits,
+                      slack_pages=3, chunk=1):
+    """Random q + a paged cache with SHUFFLED page assignment (pages of one
+    sequence are non-contiguous and unordered in the pool).
+
+    Returns (q, kv pools tuple, page_table (B, mpps) int32, dequantized
+    pool pair for oracle checks).
+    """
+    hq = hkv * g
+    q = jax.random.normal(key, (b, chunk, hq, d), jnp.float32)
+    per_seq = [int(np.ceil(l / page_size)) for l in lens]
+    mpps = max(max(per_seq), 1)   # a 0-length row keeps an all-(-1) table
+    num_pages = sum(per_seq) + slack_pages
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+    perm = rng.permutation(num_pages)
+    pt = np.full((b, mpps), -1, np.int32)
+    off = 0
+    for i, n in enumerate(per_seq):
+        pt[i, :n] = perm[off:off + n]
+        off += n
+    kf = jax.random.normal(jax.random.fold_in(key, 1),
+                           (num_pages, page_size, hkv, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2),
+                           (num_pages, page_size, hkv, d))
+    if kv_bits >= 16:
+        return q, (kf, vf), jnp.asarray(pt), (kf, vf)
+    kq, ks = quantize_kv(kf, kv_bits)
+    vq, vs = quantize_kv(vf, kv_bits)
+    deq = (kq.astype(jnp.float32) * ks[..., None],
+           vq.astype(jnp.float32) * vs[..., None])
+    return q, (kq, vq, ks, vs), jnp.asarray(pt), deq
+
+
+def gathered(pool, pt):
+    """Logical (B, S, ...) view of a paged pool (test-side reference)."""
+    return np.asarray(pool)[np.maximum(np.asarray(pt), 0)].reshape(
+        pt.shape[0], -1, *pool.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def softmax_oracle(q, k, v, cur_len):
+    """From-scratch masked decode softmax (no online recurrence, no shared
+    code). q (B, 1, Hq, D); k/v (B, S, Hkv, D) fp; cur_len (B,)."""
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    out = np.zeros((b, 1, hq, d), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bi in range(b):
+        n = int(cur_len[bi])
+        for h in range(hq):
+            kv_h = h // (hq // hkv)
+            sc = (kn[bi, :n, kv_h] @ qn[bi, 0, h]) / np.sqrt(d)
+            e = np.exp(sc - sc.max()) if n else np.zeros((0,))
+            p = e / e.sum() if n else e
+            out[bi, 0, h] = p @ vn[bi, :n, kv_h] if n else 0.0
+    return out
+
+
+def prefill_softmax_oracle(q, k, v, offset, chunk_len):
+    """From-scratch chunked-prefill softmax: chunk row i of sequence b
+    attends positions 0 .. offset[b] + i; pad rows return zeros.
+    q (B, C, Hq, D); k/v (B, S, Hkv, D) fp."""
+    b, c, hq, d = q.shape
+    hkv = k.shape[2]
+    out = np.zeros((b, c, hq, d), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for bi in range(b):
+        for i in range(int(chunk_len[bi])):
+            n = int(offset[bi]) + i + 1
+            for h in range(hq):
+                kv_h = h // (hq // hkv)
+                sc = (kn[bi, :n, kv_h] @ qn[bi, i, h]) / np.sqrt(d)
+                e = np.exp(sc - sc.max())
+                out[bi, i, h] = (e / e.sum()) @ vn[bi, :n, kv_h]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the conformance assertions
+# ---------------------------------------------------------------------------
+
+def assert_interpret_matches_ref(op, *args, static=None, **kwargs):
+    """THE bit-identity contract: ``op(mode="interpret")`` under jit equals
+    ``op(mode="ref")`` under jit bit-for-bit.
+
+    ``op`` is a ``repro.kernels.ops`` dispatcher; ``static`` holds
+    static/config kwargs baked into both partials (block sizes, a_bits...),
+    ``kwargs`` are traced keyword args (page_table...).  Returns the
+    interpret-mode result so callers can chain fp-tolerance checks against
+    independent oracles without re-running the kernel.
+    """
+    static = static or {}
+    run_int = jax.jit(functools.partial(op, mode="interpret", **static))
+    run_ref = jax.jit(functools.partial(op, mode="ref", **static))
+    y_int = run_int(*args, **kwargs)
+    y_ref = run_ref(*args, **kwargs)
+    np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_ref))
+    return y_int
+
+
+def assert_matches_fallback(op, *args, static=None, rtol=1e-5, atol=1e-5,
+                            **kwargs):
+    """Interpret-mode kernel vs the mode='auto' off-TPU XLA fallback —
+    independent implementations agreeing to fp tolerance.  Returns the
+    interpret-mode result."""
+    static = static or {}
+    y_int = op(*args, mode="interpret", **static, **kwargs)
+    y_xla = op(*args, mode="auto", **static, **kwargs)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
+                               rtol=rtol, atol=atol)
+    return y_int
+
+
+# ---------------------------------------------------------------------------
+# jaxpr traversal: "no fp full-cache intermediate" (the fused-path pin)
+# ---------------------------------------------------------------------------
+
+def iter_avals(jaxpr):
+    """All intermediate avals of a jaxpr, recursing into sub-jaxprs
+    (scan bodies, pallas_call kernels, cond branches...)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            vals = p if isinstance(p, (list, tuple)) else [p]
+            for sub in vals:
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    yield from iter_avals(inner)
+
+
+def fp_cache_avals(jaxpr, s, hkv, d):
+    """Float avals shaped like a per-layer (B, S, Hkv, D) KV cache (or the
+    stacked (L, B, S, Hkv, D) carrier / a gathered logical paged cache)."""
+    hits = []
+    for aval in iter_avals(jaxpr):
+        shape = getattr(aval, "shape", ())
+        dtype = getattr(aval, "dtype", None)
+        if (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+                and len(shape) >= 4 and tuple(shape[-3:]) == (s, hkv, d)):
+            hits.append(aval)
+    return hits

@@ -1,0 +1,234 @@
+"""Property-based engine fuzzing: random traces of prompt lengths /
+max_new / arrival order / page-pool pressure, asserting that every
+admission mode of the scheduler produces the SAME token streams and
+conserves the page pool.
+
+Invariants per trace (the scheduler's contracts, DESIGN.md §9-§10):
+  * **token identity**: chunked admission == whole-prompt-bucketed
+    admission == solo runs of each prompt, across linear and paged caches
+    and kv_bits 8/16 (ref kernels, tile == page) — including traces that
+    force preemption (evict + resume round-trips, mid-prefill included);
+  * **FIFO**: first tokens are emitted in submission order, and (uniform
+    max_new, no preemption) requests complete in submission order;
+  * **free-list conservation**: during a trace a sequence never holds more
+    pages than its reservation/length bound, and after the drain every
+    page is back on the free list with peak usage within the pool.
+
+The hypothesis tests shrink failing traces to minimal repros (replacing
+the fixed mixed-length trace of the earlier suite); the seeded variants
+run the same checker without hypothesis installed.  Profiles: a bounded
+fast profile (CI fast lane) and an ``@slow`` deep profile; both
+``derandomize`` so CI is reproducible.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kv_cache import pages_for
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dep: the seeded tests still run
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+                                "(requirements-dev.txt)")
+
+PS = 8   # page size == flash tile (the bit-identical linear/paged config)
+
+_SERVED: dict = {}
+
+
+def _served(kv_bits):
+    """llama-micro on the w8 packed stack (kv8 or fp cache), ref kernels,
+    tile == page — built once per bit-width, shared across traces."""
+    if kv_bits not in _SERVED:
+        cfg = get_config("llama-micro")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                           kv_bits=kv_bits)
+        packed = quantize_lm_packed(params, cfg, qcfg)
+        qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=PS)
+        _SERVED[kv_bits] = (cfg, qm, packed)
+    return _SERVED[kv_bits]
+
+
+@dataclasses.dataclass
+class Trace:
+    prompt_lens: tuple       # submission order == arrival order
+    max_new: int
+    max_batch: int
+    prefill_chunk: int
+    kv_bits: int
+    pool_slack: int          # pages beyond the single-request minimum
+    seed: int = 0
+
+    def __repr__(self):      # the shrunk repro hypothesis prints
+        return (f"Trace(prompt_lens={self.prompt_lens}, "
+                f"max_new={self.max_new}, max_batch={self.max_batch}, "
+                f"prefill_chunk={self.prefill_chunk}, "
+                f"kv_bits={self.kv_bits}, pool_slack={self.pool_slack}, "
+                f"seed={self.seed})")
+
+
+def _check_page_invariants(eng):
+    """A sequence never holds more pages than its bound: the up-front
+    reservation while mid-prefill, ceil((len + 1) / page_size) while
+    decoding (next-token page pre-allocated at boundaries)."""
+    al = eng._kv.allocator
+    for slot, req in enumerate(eng._slots):
+        owned = len(al.owned[slot])
+        if req is None:
+            # mid-admission a reservation can precede the slot assignment;
+            # the end-of-trace conservation check catches real leaks
+            continue
+        elif eng._prefill_prog[slot] is not None:
+            limit = pages_for(req.resume_len, PS)
+            assert owned <= limit, (req.rid, owned, limit)
+        else:
+            limit = pages_for(eng._seq_len[slot] + 1, PS)
+            assert owned <= limit, (req.rid, owned, limit)
+    assert al.num_in_use <= al.num_pages
+
+
+def _run_engine(qm, packed, scfg, prompts):
+    eng = Engine(qm, packed, scfg)
+    first_order, done_order = [], []
+
+    def on_token(r, _t):
+        if len(r.out_tokens) == 1:
+            first_order.append(r.rid)
+        if scfg.paged:
+            _check_page_invariants(eng)
+
+    reqs = [eng.submit(p, on_token=on_token,
+                       on_done=lambda r: done_order.append(r.rid))
+            for p in prompts]
+    eng.run()
+    assert all(r.done for r in reqs)
+    if scfg.paged:
+        al = eng._kv.allocator
+        # free-list conservation after every trace
+        assert al.num_free == al.num_pages, (al.num_free, al.num_pages)
+        assert all(not o for o in al.owned)
+        assert al.peak_in_use <= al.num_pages
+    preempts = sum(r.preemptions for r in reqs)
+    if preempts == 0:
+        # FIFO: first tokens in submission order; completions too
+        # (uniform max_new).  Preemption legitimately reorders restarts.
+        assert first_order == sorted(first_order), first_order
+        assert done_order == sorted(done_order), done_order
+    return [r.out_tokens for r in reqs], preempts
+
+
+def check_trace(tr: Trace, solo: bool = True, expect_preempt: bool = False):
+    cfg, qm, packed = _served(tr.kv_bits)
+    rng = np.random.default_rng(tr.seed)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in tr.prompt_lens]
+    # capacity must hold prompt + generation; multiple of PS keeps
+    # tile == page (the bit-identical linear/paged configuration)
+    max_len = -(-(max(tr.prompt_lens) + tr.max_new + 1) // PS) * PS
+    # pool floor: the largest single request must always fit alone
+    # (admission reserve + decode growth), else the engine raises
+    pool_min = pages_for(max(tr.prompt_lens) + tr.max_new, PS)
+
+    def scfg(paged=False, chunked=False, tight=False):
+        return ServeConfig(
+            max_batch=tr.max_batch, max_len=max_len, max_new=tr.max_new,
+            prefill_bucket=16, page_size=PS, paged=paged,
+            num_pages=(pool_min + tr.pool_slack) if (paged and tight) else 0,
+            prefill_chunk=tr.prefill_chunk if chunked else 0)
+
+    base, _ = _run_engine(qm, packed, scfg(), prompts)
+    for tag, cfg_v in (("chunked-linear", scfg(chunked=True)),
+                       ("whole-paged", scfg(paged=True)),
+                       ("chunked-paged", scfg(paged=True, chunked=True))):
+        outs, _ = _run_engine(qm, packed, cfg_v, prompts)
+        assert outs == base, f"{tag} diverged from whole-linear on {tr}"
+    # page-pool pressure: a tight pool must preempt yet stay identical
+    outs, preempts = _run_engine(qm, packed,
+                                 scfg(paged=True, chunked=True, tight=True),
+                                 prompts)
+    assert outs == base, f"tight chunked-paged diverged on {tr}"
+    if expect_preempt:
+        assert preempts > 0, f"pool never ran dry on {tr}"
+    if solo:
+        for i, p in enumerate(prompts):
+            solo_out, _ = _run_engine(
+                qm, packed, dataclasses.replace(scfg(), max_batch=1), [p])
+            assert solo_out[0] == base[i], f"solo run {i} diverged on {tr}"
+    return base
+
+
+# ---------------------------------------------------------------------------
+# seeded variants (run without hypothesis — and in this repo's fast lane)
+# ---------------------------------------------------------------------------
+
+def test_trace_equivalence_seeded_kv8():
+    """Mixed-length arrival order incl. a prompt longer than the chunk,
+    solo-run identity, kv8."""
+    check_trace(Trace(prompt_lens=(13, 3, 26), max_new=5, max_batch=2,
+                      prefill_chunk=8, kv_bits=8, pool_slack=4, seed=1))
+
+
+def test_trace_equivalence_seeded_pressure_kv16():
+    """Three growing sequences against a pool sized to force eviction
+    (mid-flight preemption + resume), kv16, no solo re-runs."""
+    check_trace(Trace(prompt_lens=(15, 14, 13), max_new=16, max_batch=3,
+                      prefill_chunk=4, kv_bits=16, pool_slack=2, seed=2),
+                solo=False, expect_preempt=True)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (shrinkable repros; skipped cleanly without the dep)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    trace_strategy = st.builds(
+        Trace,
+        prompt_lens=st.lists(st.integers(1, 30), min_size=1, max_size=4)
+        .map(tuple),
+        max_new=st.integers(1, 6),
+        max_batch=st.integers(1, 3),
+        prefill_chunk=st.sampled_from([4, 8, 16]),
+        kv_bits=st.sampled_from([8, 16]),
+        pool_slack=st.integers(0, 4),
+        seed=st.integers(0, 2 ** 16),
+    )
+
+    @needs_hypothesis
+    @settings(max_examples=2, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=trace_strategy)
+    def test_engine_fuzz_fast(tr):
+        """Bounded fast profile: 2 shrinkable examples per run (CI fast
+        lane); no solo re-runs to bound wall time."""
+        check_trace(tr, solo=False)
+
+    @needs_hypothesis
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=trace_strategy)
+    def test_engine_fuzz_deep(tr):
+        """Deep profile (@slow): more examples, solo-run identity
+        included — the full satellite contract."""
+        check_trace(tr, solo=True)
+else:
+    @needs_hypothesis
+    def test_engine_fuzz_fast():
+        pass
+
+    @needs_hypothesis
+    def test_engine_fuzz_deep():
+        pass

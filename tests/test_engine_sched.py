@@ -205,6 +205,74 @@ def test_oversized_request_raises_instead_of_deadlock(served):
         eng.run()
 
 
+# ---------------------------------------------------------------------------
+# chunked admission (prefill_chunk > 0)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_admission_token_identical_to_whole(served, paged):
+    """Acceptance: chunked admission (prompts drip-fed prefill_chunk
+    tokens per step, interleaved with decode) produces the exact token
+    streams of whole-prompt bucketed admission, on both cache layouts."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [5, 20, 11, 33, 8, 26])
+    _, whole = _run(qm, packed, _scfg(paged=paged, max_new=6), prompts)
+    _, chunked = _run(qm, packed,
+                      _scfg(paged=paged, max_new=6, prefill_chunk=8),
+                      prompts)
+    assert [r.out_tokens for r in chunked] == [r.out_tokens for r in whole]
+
+
+def test_chunked_oversized_request_raises(served):
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg(paged=True, num_pages=2,
+                                   prefill_chunk=8))
+    eng.submit(_prompts(cfg, [40])[0])
+    with pytest.raises(RuntimeError, match="pool"):
+        eng.run()
+
+
+def test_chunked_rejects_unsupported_model():
+    """A model without prefill_chunk support must be rejected at engine
+    construction, not fail mid-serve."""
+    import dataclasses as dc
+    cfg = dc.replace(get_config("llama-micro"), window=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunked"):
+        Engine(model, params, _scfg(prefill_chunk=8))
+
+
+def test_preempt_mid_prefill_resumes_token_identical(served):
+    """Satellite: evict a request WHILE its prompt is partially chunked —
+    the short request's decode crosses a page boundary with the pool dry,
+    the long mid-prefill request holds the most pages and is evicted,
+    then resumes through the chunked path token-identically."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [10, 30])   # short decodes while long chunks
+    scfg_roomy = _scfg(max_new=10, prefill_chunk=4)
+    scfg_tight = _scfg(max_new=10, prefill_chunk=4, paged=True,
+                       num_pages=6)    # 2 (short) + 4 (long): dry at the
+    #                                    short's first boundary crossing
+    _, roomy = _run(qm, packed, scfg_roomy, prompts)
+    eng = Engine(qm, packed, scfg_tight)
+    for p in prompts:
+        eng.submit(p)
+    saw_mid_prefill_evict = []
+    orig = eng._preempt
+
+    def spy(slot):
+        saw_mid_prefill_evict.append(eng._prefill_prog[slot] is not None)
+        orig(slot)
+
+    eng._preempt = spy
+    tight = eng.run()
+    assert sum(r.preemptions for r in tight) > 0, "pool never ran dry"
+    assert any(saw_mid_prefill_evict), "no mid-prefill eviction happened"
+    assert [r.out_tokens for r in tight] == [r.out_tokens for r in roomy]
+    assert eng._kv.allocator.num_free == 6
+
+
 def test_windowed_transformer_uses_exact_length_prefill():
     """A sliding-window cache holds only ``window`` slots, so bucketed
     padded prefill would overflow the splice — windowed configs must fall

@@ -1,6 +1,7 @@
 """Fused flash-decode over the quantized KV cache: parity + capacity.
 
-Contract under test (DESIGN.md §8):
+Contract under test (DESIGN.md §8), asserted through the shared
+``tests/kernel_conformance`` harness:
   * ``ops.flash_decode`` in interpret mode is BIT-identical to
     ``ref.flash_decode_ref`` under jit for every (kv_bits, GQA group,
     block_kv, ragged cur_len) combination;
@@ -11,99 +12,51 @@ Contract under test (DESIGN.md §8):
   * a full cache is never corrupted by further decode steps (writes drop,
     ``len`` saturates).
 """
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import kernel_conformance as kc
 from repro.configs import get_config
 from repro.core.quantizer import QuantConfig
-from repro.kernels import ops, ref
-from repro.models import attention as attn_lib
+from repro.kernels import ops
 from repro.models import build_model
 from repro.serve.quantized import QuantizedModel, quantize_lm_packed
 
 
-def _make_qkv(key, b, s, hkv, g, d, kv_bits):
-    """Random q + cache in the serving layout: int8 codes + per-(token,
-    head) f32 scales for kv_bits < 16, fp cache otherwise."""
-    hq = hkv * g
-    q = jax.random.normal(key, (b, 1, hq, d), jnp.float32)
-    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
-    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
-    if kv_bits >= 16:
-        return q, (kf, vf), (kf, vf)
-    qmax = 2.0 ** (kv_bits - 1) - 1.0
-    def quant(x):
-        bound = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
-        scale = bound / qmax
-        codes = jnp.clip(jnp.round(x / scale[..., None]),
-                         -qmax - 1.0, qmax).astype(jnp.int8)
-        return codes, scale
-    kq, ks = quant(kf)
-    vq, vs = quant(vf)
-    deq = (kq.astype(jnp.float32) * ks[..., None],
-           vq.astype(jnp.float32) * vs[..., None])
-    return q, (kq, vq, ks, vs), deq
-
-
-def _softmax_oracle(q, k, v, cur_len):
-    """From-scratch masked softmax (no online recurrence, no shared code)."""
-    b, _, hq, d = q.shape
-    s, hkv = k.shape[1], k.shape[2]
-    out = np.zeros((b, 1, hq, d), np.float32)
-    qn, kn, vn = map(np.asarray, (q, k, v))
-    for bi in range(b):
-        n = int(cur_len[bi])
-        for h in range(hq):
-            kv_h = h // (hq // hkv)
-            sc = (kn[bi, :n, kv_h] @ qn[bi, 0, h]) / np.sqrt(d)
-            e = np.exp(sc - sc.max()) if n else np.zeros((0,))
-            p = e / e.sum() if n else e
-            out[bi, 0, h] = p @ vn[bi, :n, kv_h] if n else 0.0
-    return out
-
-
-@pytest.mark.parametrize("kv_bits", [8, 16])
-@pytest.mark.parametrize("g", [1, 4])
-@pytest.mark.parametrize("block_kv", [16, 64])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
+@pytest.mark.parametrize("g", kc.GQA_GROUPS)
+@pytest.mark.parametrize("block_kv", kc.KV_BLOCKS)
 def test_flash_decode_interpret_bit_identical_to_ref(kv_bits, g, block_kv):
     """Ragged cur_len in one batch: near-empty, mid-tile, and full-cache
     rows all run through the length-masked grid bit-identically."""
     b, s, hkv, d = 3, 64, 2, 32
     key = jax.random.PRNGKey(kv_bits * 10 + g)
-    q, kv, _ = _make_qkv(key, b, s, hkv, g, d, kv_bits)
+    q, kv, _ = kc.make_cache_inputs(key, b, s, hkv, g, d, kv_bits)
     cur = jnp.array([1, 37, s], jnp.int32)
-    run_int = jax.jit(functools.partial(ops.flash_decode, mode="interpret",
-                                        block_kv=block_kv))
-    run_ref = jax.jit(functools.partial(ops.flash_decode, mode="ref",
-                                        block_kv=block_kv))
-    np.testing.assert_array_equal(np.asarray(run_int(q, kv, cur)),
-                                  np.asarray(run_ref(q, kv, cur)))
+    kc.assert_interpret_matches_ref(ops.flash_decode, q, kv, cur,
+                                    static=dict(block_kv=block_kv))
 
 
-@pytest.mark.parametrize("kv_bits", [8, 16])
-@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
+@pytest.mark.parametrize("g", kc.GQA_GROUPS)
 def test_flash_decode_matches_fallback_and_oracle(kv_bits, g):
     """Kernel vs decode_attention (the portable fallback, via mode='auto'
     off-TPU) vs a from-scratch numpy softmax — three independent paths."""
     b, s, hkv, d = 3, 48, 2, 16
     key = jax.random.PRNGKey(kv_bits + g)
-    q, kv, (k_fp, v_fp) = _make_qkv(key, b, s, hkv, g, d, kv_bits)
+    q, kv, (k_fp, v_fp) = kc.make_cache_inputs(key, b, s, hkv, g, d, kv_bits)
     cur = jnp.array([1, 23, s - 1], jnp.int32)
-    y_int = ops.flash_decode(q, kv, cur, mode="interpret", block_kv=16)
-    y_xla = ops.flash_decode(q, kv, cur, mode="auto", block_kv=16)
-    y_np = _softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
-    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
-                               rtol=1e-5, atol=1e-5)
+    y_int = kc.assert_matches_fallback(ops.flash_decode, q, kv, cur,
+                                       static=dict(block_kv=16))
+    y_np = kc.softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
     np.testing.assert_allclose(np.asarray(y_int), y_np, rtol=1e-4, atol=1e-4)
 
 
 def test_flash_decode_interpret_smoke():
     """Tiny single-tile interpret run (the CI fast-lane smoke)."""
-    q, kv, _ = _make_qkv(jax.random.PRNGKey(0), 2, 16, 2, 2, 8, 8)
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(0), 2, 16, 2, 2, 8, 8)
     y = ops.flash_decode(q, kv, jnp.array([3, 16], jnp.int32),
                          mode="interpret")
     assert y.shape == (2, 1, 4, 8) and bool(jnp.isfinite(y).all())
@@ -112,9 +65,9 @@ def test_flash_decode_interpret_smoke():
 def test_flash_decode_zero_length_rows_return_zeros():
     """cur_len == 0 visits no KV tile: zeros for that row on EVERY mode —
     including the auto/XLA fallback, where an all-masked softmax would
-    otherwise emit the uniform mean of the (uninitialized) slots. Decode
-    always passes cur_len + 1 >= 1; this pins the edge."""
-    q, kv, _ = _make_qkv(jax.random.PRNGKey(1), 2, 32, 2, 2, 16, 8)
+    otherwise emit the uniform mean of the slots. Decode always passes
+    cur_len + 1 >= 1; this pins the edge."""
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(1), 2, 32, 2, 2, 16, 8)
     cur = jnp.array([0, 32], jnp.int32)
     for mode in ("interpret", "ref", "auto"):
         y = ops.flash_decode(q, kv, cur, mode=mode, block_kv=16)
@@ -127,16 +80,13 @@ def test_flash_decode_clamps_block_to_ragged_max_len():
     """S=56 is no multiple of any default block: the dispatcher clamps to a
     single tile and still matches the fallback."""
     b, s, hkv, g, d = 2, 56, 2, 2, 16
-    q, kv, _ = _make_qkv(jax.random.PRNGKey(2), b, s, hkv, g, d, 8)
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(2), b, s, hkv, g, d, 8)
     cur = jnp.array([5, 56], jnp.int32)
-    y_int = ops.flash_decode(q, kv, cur, mode="interpret")
-    y_xla = ops.flash_decode(q, kv, cur, mode="auto")
-    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
-                               rtol=1e-5, atol=1e-5)
+    kc.assert_matches_fallback(ops.flash_decode, q, kv, cur)
 
 
 def test_flash_decode_rejects_bad_inputs():
-    q, kv, _ = _make_qkv(jax.random.PRNGKey(3), 2, 16, 2, 1, 8, 16)
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(3), 2, 16, 2, 1, 8, 16)
     cur = jnp.array([4, 8], jnp.int32)
     with pytest.raises(TypeError, match="kv"):
         ops.flash_decode(q, kv + (kv[0],), cur)
@@ -147,33 +97,6 @@ def test_flash_decode_rejects_bad_inputs():
 # ---------------------------------------------------------------------------
 # serving integration: no full-cache dequant, capacity semantics
 # ---------------------------------------------------------------------------
-
-def _iter_avals(jaxpr):
-    """All intermediate avals of a jaxpr, recursing into sub-jaxprs
-    (scan bodies, pallas_call kernels, cond branches...)."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            vals = p if isinstance(p, (list, tuple)) else [p]
-            for sub in vals:
-                inner = getattr(sub, "jaxpr", sub)
-                if hasattr(inner, "eqns"):
-                    yield from _iter_avals(inner)
-
-
-def _fp_full_cache_avals(jaxpr, s, hkv, d):
-    """Float avals shaped like a per-layer (B, S, Hkv, D) KV cache (or the
-    stacked (L, B, S, Hkv, D) carrier)."""
-    hits = []
-    for aval in _iter_avals(jaxpr):
-        shape = getattr(aval, "shape", ())
-        dtype = getattr(aval, "dtype", None)
-        if (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
-                and len(shape) >= 4 and tuple(shape[-3:]) == (s, hkv, d)):
-            hits.append(aval)
-    return hits
-
 
 def test_decode_step_kv8_has_no_full_cache_dequantize():
     """Acceptance: kv_bits=8 decode on the fused path carries NO fp
@@ -196,16 +119,14 @@ def test_decode_step_kv8_has_no_full_cache_dequantize():
         cache = dict(cache, len=jnp.full((b,), 7, jnp.int32))
         return jax.make_jaxpr(qm.decode_step)(packed, tok, cache).jaxpr
 
-    fused = _fp_full_cache_avals(jaxpr_for("interpret"), s,
-                                 cfg.num_kv_heads, d)
+    fused = kc.fp_cache_avals(jaxpr_for("interpret"), s, cfg.num_kv_heads, d)
     assert not fused, f"full-cache fp intermediates on fused path: {fused}"
     # tile-mirroring ref at block_kv < S is also materialization-free
-    control = _fp_full_cache_avals(jaxpr_for("auto"), s,
-                                   cfg.num_kv_heads, d)
+    control = kc.fp_cache_avals(jaxpr_for("auto"), s, cfg.num_kv_heads, d)
     assert control, "positive control lost: fallback no longer materializes"
 
 
-@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
 def test_decode_past_capacity_drops_write_and_saturates(kv_bits):
     """A decode step on a full cache must not clobber slot S-1 and must
     leave `len` saturated at S (observable exhaustion, no corruption)."""
@@ -253,8 +174,9 @@ def test_quantized_decode_full_cache_attends_everything():
     """At cur_len == S the fused path must attend ALL stored positions
     (regression guard for an off-by-one in the tile mask)."""
     b, s, hkv, g, d = 2, 32, 2, 2, 16
-    q, kv, (k_fp, v_fp) = _make_qkv(jax.random.PRNGKey(6), b, s, hkv, g, d, 8)
+    q, kv, (k_fp, v_fp) = kc.make_cache_inputs(jax.random.PRNGKey(6), b, s,
+                                               hkv, g, d, 8)
     cur = jnp.full((b,), s, jnp.int32)
     y = ops.flash_decode(q, kv, cur, mode="interpret", block_kv=16)
-    y_np = _softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
+    y_np = kc.softmax_oracle(q, k_fp, v_fp, np.asarray(cur))
     np.testing.assert_allclose(np.asarray(y), y_np, rtol=1e-4, atol=1e-4)

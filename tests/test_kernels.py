@@ -1,11 +1,14 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
-import functools
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode.
 
+Bit-identity sweeps run through the shared ``tests/kernel_conformance``
+harness (the same jit-wrapped interpret-vs-ref assertion the flash-decode /
+flash-prefill / paged sweeps use)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import kernel_conformance as kc
 from repro.core.quantizer import QuantConfig, quantize_codes
 from repro.kernels import ops, ref
 from repro.kernels.dequant_matmul import dequant_matmul
@@ -89,27 +92,21 @@ def test_w8a8_per_slab_error_bounded():
 # fused weight-activation kernel (w4a8_matmul) vs its oracle
 # ---------------------------------------------------------------------------
 
-_jref = jax.jit(ref.quant_matmul_ref,
-                static_argnames=("bits", "group_size", "a_bits", "out_dtype"))
-
-
 @pytest.mark.parametrize("bits", [2, 4, 8])
 @pytest.mark.parametrize("a_bits", [4, 8])
 @pytest.mark.parametrize("g", [32, 0])
 def test_w4a8_matmul_bit_identical_to_ref(bits, a_bits, g):
-    """bk >= K (one K block = whole-row activation scale): the fused kernel
-    in interpret mode must be BIT-IDENTICAL to the jitted oracle — same op
-    sequence, same XLA fusions."""
+    """K == one K block (whole-row activation scale, the dispatcher clamp
+    for K < DEFAULT_BK): quant_matmul in interpret mode must be
+    BIT-IDENTICAL to the ref oracle — same op sequence, same XLA
+    fusions."""
     m, k, n = 64, 128, 64
     key = jax.random.PRNGKey(bits * 100 + a_bits)
-    w = jax.random.normal(key, (k, n), jnp.float32)
-    packed, scale, zp = ref.quantize_pack_ref(w, bits=bits, group_size=g)
+    qt = quantize_codes(jax.random.normal(key, (k, n), jnp.float32),
+                        QuantConfig(w_bits=bits, group_size=g, lwc=False))
     x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
-    y_ref = _jref(x, packed, scale, zp, bits=bits, group_size=g,
-                  a_bits=a_bits)
-    y_ker = w4a8_matmul(x, packed, scale, zp, bits=bits, group_size=g,
-                        a_bits=a_bits, bm=64, bn=64, bk=128, interpret=True)
-    np.testing.assert_array_equal(np.asarray(y_ker), np.asarray(y_ref))
+    kc.assert_interpret_matches_ref(ops.quant_matmul, x, qt,
+                                    static=dict(a_bits=a_bits))
 
 
 def test_w4a8_close_to_dequant_matmul():
@@ -153,14 +150,9 @@ def test_quant_matmul_dispatch_ragged_batch(a_bits):
     qt = quantize_codes(jax.random.normal(key, (k, n)),
                         QuantConfig(w_bits=4, group_size=g, lwc=False))
     x = jax.random.normal(jax.random.fold_in(key, 1), (3, 37, k))
-    run_ref = jax.jit(functools.partial(ops.quant_matmul, a_bits=a_bits,
-                                        mode="ref"))
-    run_int = jax.jit(functools.partial(ops.quant_matmul, a_bits=a_bits,
-                                        mode="interpret"))
-    y_ref = run_ref(x, qt)
-    y_int = run_int(x, qt)
-    assert y_ref.shape == (3, 37, n)
-    np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_ref))
+    y = kc.assert_interpret_matches_ref(ops.quant_matmul, x, qt,
+                                        static=dict(a_bits=a_bits))
+    assert y.shape == (3, 37, n)
 
 
 def test_w8a8_dispatch_ragged_batch():
@@ -170,8 +162,8 @@ def test_w8a8_dispatch_ragged_batch():
     wq = jax.random.randint(key, (k, n), -128, 128).astype(jnp.int8)
     ws = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n,))) + 0.1
     x = jax.random.normal(jax.random.fold_in(key, 2), (37, k))
-    run_ref = jax.jit(functools.partial(ops.w8a8_matmul, mode="ref"))
-    run_int = jax.jit(functools.partial(ops.w8a8_matmul, mode="interpret"))
+    run_ref = jax.jit(lambda *a: ops.w8a8_matmul(*a, mode="ref"))
+    run_int = jax.jit(lambda *a: ops.w8a8_matmul(*a, mode="interpret"))
     np.testing.assert_allclose(np.asarray(run_int(x, wq, ws)),
                                np.asarray(run_ref(x, wq, ws)),
                                rtol=1e-6, atol=1e-6)

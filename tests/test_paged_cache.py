@@ -17,87 +17,28 @@ Contract under test (DESIGN.md §9):
     (jaxpr traversal; the gather fallback is the positive control).
 """
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import kernel_conformance as kc
 from repro.configs import get_config
 from repro.core.quantizer import QuantConfig
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.models import build_model
 from repro.serve import kv_cache as kvc
 from repro.serve.quantized import QuantizedModel, quantize_lm_packed
-
-
-def _make_paged(key, b, hkv, g, d, page_size, lens, kv_bits, slack_pages=3):
-    """Random q + a paged cache with SHUFFLED page assignment (pages of one
-    sequence are non-contiguous and unordered in the pool)."""
-    hq = hkv * g
-    q = jax.random.normal(key, (b, 1, hq, d), jnp.float32)
-    per_seq = [int(np.ceil(l / page_size)) for l in lens]
-    mpps = max(max(per_seq), 1)
-    num_pages = sum(per_seq) + slack_pages
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
-    perm = rng.permutation(num_pages)
-    pt = np.full((b, mpps), -1, np.int32)
-    off = 0
-    for i, n in enumerate(per_seq):
-        pt[i, :n] = perm[off:off + n]
-        off += n
-    kf = jax.random.normal(jax.random.fold_in(key, 1),
-                           (num_pages, page_size, hkv, d))
-    vf = jax.random.normal(jax.random.fold_in(key, 2),
-                           (num_pages, page_size, hkv, d))
-    if kv_bits >= 16:
-        return q, (kf, vf), jnp.asarray(pt), (kf, vf)
-    qmax = 2.0 ** (kv_bits - 1) - 1.0
-
-    def quant(x):
-        bound = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8)
-        scale = bound / qmax
-        codes = jnp.clip(jnp.round(x / scale[..., None]),
-                         -qmax - 1.0, qmax).astype(jnp.int8)
-        return codes, scale
-
-    kq, ks = quant(kf)
-    vq, vs = quant(vf)
-    deq = (kq.astype(jnp.float32) * ks[..., None],
-           vq.astype(jnp.float32) * vs[..., None])
-    return q, (kq, vq, ks, vs), jnp.asarray(pt), deq
-
-
-def _gathered(pool, pt):
-    """Logical (B, S, ...) view of a paged pool (test-side reference)."""
-    return np.asarray(pool)[np.maximum(np.asarray(pt), 0)].reshape(
-        pt.shape[0], -1, *pool.shape[2:])
-
-
-def _softmax_oracle(q, k, v, cur_len):
-    b, _, hq, d = q.shape
-    hkv = k.shape[2]
-    out = np.zeros((b, 1, hq, d), np.float32)
-    qn, kn, vn = map(np.asarray, (q, k, v))
-    for bi in range(b):
-        n = int(cur_len[bi])
-        for h in range(hq):
-            kv_h = h // (hq // hkv)
-            sc = (kn[bi, :n, kv_h] @ qn[bi, 0, h]) / np.sqrt(d)
-            e = np.exp(sc - sc.max()) if n else np.zeros((0,))
-            p = e / e.sum() if n else e
-            out[bi, 0, h] = p @ vn[bi, :n, kv_h] if n else 0.0
-    return out
 
 
 # ---------------------------------------------------------------------------
 # kernel parity (the acceptance sweep)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kv_bits", [8, 16])
-@pytest.mark.parametrize("g", [1, 4])
-@pytest.mark.parametrize("page_size", [16, 64])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
+@pytest.mark.parametrize("g", kc.GQA_GROUPS)
+@pytest.mark.parametrize("page_size", kc.KV_BLOCKS)
 def test_paged_interpret_bit_identical_to_ref(kv_bits, g, page_size):
     """Ragged cur_len in one batch — empty row, single token, exact page
     boundary, and a mid-page tail — all bit-identical through the
@@ -105,37 +46,33 @@ def test_paged_interpret_bit_identical_to_ref(kv_bits, g, page_size):
     b, hkv, d = 4, 2, 32
     lens = [0, 1, page_size, 2 * page_size + 7]
     key = jax.random.PRNGKey(kv_bits * 10 + g + page_size)
-    q, kv, pt, _ = _make_paged(key, b, hkv, g, d, page_size, lens, kv_bits)
+    q, kv, pt, _ = kc.make_paged_inputs(key, b, hkv, g, d, page_size, lens,
+                                        kv_bits)
     cur = jnp.asarray(lens, jnp.int32)
-    run_int = jax.jit(functools.partial(ops.flash_decode, mode="interpret"))
-    run_ref = jax.jit(functools.partial(ops.flash_decode, mode="ref"))
-    np.testing.assert_array_equal(
-        np.asarray(run_int(q, kv, cur, page_table=pt)),
-        np.asarray(run_ref(q, kv, cur, page_table=pt)))
+    kc.assert_interpret_matches_ref(ops.flash_decode, q, kv, cur,
+                                    page_table=pt)
 
 
-@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
 def test_paged_matches_gather_fallback_and_oracle(kv_bits):
     """Fused paged kernel vs the XLA page-gather fallback (mode='auto'
     off-TPU) vs a from-scratch numpy softmax over the gathered cache."""
     b, hkv, g, d, ps = 3, 2, 2, 16, 16
     lens = [1, 19, 41]
-    q, kv, pt, deq = _make_paged(jax.random.PRNGKey(kv_bits), b, hkv, g, d,
-                                 ps, lens, kv_bits)
+    q, kv, pt, deq = kc.make_paged_inputs(jax.random.PRNGKey(kv_bits), b,
+                                          hkv, g, d, ps, lens, kv_bits)
     cur = jnp.asarray(lens, jnp.int32)
-    y_int = ops.flash_decode(q, kv, cur, page_table=pt, mode="interpret")
-    y_xla = ops.flash_decode(q, kv, cur, page_table=pt, mode="auto")
-    k_full = _gathered(deq[0], pt)
-    v_full = _gathered(deq[1], pt)
-    y_np = _softmax_oracle(q, k_full, v_full, lens)
-    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_xla),
-                               rtol=1e-5, atol=1e-5)
+    y_int = kc.assert_matches_fallback(ops.flash_decode, q, kv, cur,
+                                       page_table=pt)
+    k_full = kc.gathered(deq[0], pt)
+    v_full = kc.gathered(deq[1], pt)
+    y_np = kc.softmax_oracle(q, k_full, v_full, lens)
     np.testing.assert_allclose(np.asarray(y_int), y_np, rtol=1e-4, atol=1e-4)
 
 
 def test_paged_interpret_smoke():
     """Tiny paged interpret run (the CI fast-lane smoke)."""
-    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(0), 2, 2, 2, 8, 8,
+    q, kv, pt, _ = kc.make_paged_inputs(jax.random.PRNGKey(0), 2, 2, 2, 8, 8,
                                [3, 14], 8)
     y = ops.flash_decode(q, kv, jnp.asarray([3, 14], jnp.int32),
                          page_table=pt, mode="interpret")
@@ -143,7 +80,7 @@ def test_paged_interpret_smoke():
 
 
 def test_paged_zero_length_rows_return_zeros():
-    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(1), 2, 2, 2, 16, 16,
+    q, kv, pt, _ = kc.make_paged_inputs(jax.random.PRNGKey(1), 2, 2, 2, 16, 16,
                                [0, 30], 8)
     cur = jnp.asarray([0, 30], jnp.int32)
     for mode in ("interpret", "ref", "auto"):
@@ -154,7 +91,7 @@ def test_paged_zero_length_rows_return_zeros():
 
 
 def test_paged_rejects_bad_shapes():
-    q, kv, pt, _ = _make_paged(jax.random.PRNGKey(2), 2, 2, 1, 8, 8,
+    q, kv, pt, _ = kc.make_paged_inputs(jax.random.PRNGKey(2), 2, 2, 1, 8, 8,
                                [4, 8], 16)
     with pytest.raises(ValueError, match="page_table"):
         ops.flash_decode(q, kv, jnp.asarray([4, 8]), page_table=pt[:1],
@@ -226,7 +163,7 @@ def micro():
     return cfg, model, model.init(jax.random.PRNGKey(0))
 
 
-@pytest.mark.parametrize("kv_bits", [8, 16])
+@pytest.mark.parametrize("kv_bits", kc.KV_BITS)
 def test_quantized_paged_decode_bit_identical_to_linear(micro, kv_bits):
     """ref mode, one tile == one page on both layouts: the paged decode
     step must produce BIT-identical logits and cache contents."""
@@ -335,29 +272,6 @@ def test_paged_cache_shardings_resolve(micro):
 # no fp logical-cache materialization on the fused paged path
 # ---------------------------------------------------------------------------
 
-def _iter_avals(jaxpr):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            vals = p if isinstance(p, (list, tuple)) else [p]
-            for sub in vals:
-                inner = getattr(sub, "jaxpr", sub)
-                if hasattr(inner, "eqns"):
-                    yield from _iter_avals(inner)
-
-
-def _fp_logical_cache_avals(jaxpr, s_log, hkv, d):
-    hits = []
-    for aval in _iter_avals(jaxpr):
-        shape = getattr(aval, "shape", ())
-        dtype = getattr(aval, "dtype", None)
-        if (dtype is not None and jnp.issubdtype(dtype, jnp.floating)
-                and len(shape) >= 4 and tuple(shape[-3:]) == (s_log, hkv, d)):
-            hits.append(aval)
-    return hits
-
-
 def test_paged_decode_kv8_has_no_logical_cache_materialization(micro):
     """The fused paged path never gathers the page table into a logical
     (B, S, Hkv, D) fp cache — pages stream tile-by-tile. The XLA fallback
@@ -381,9 +295,9 @@ def test_paged_decode_kv8_has_no_logical_cache_materialization(micro):
         return jax.make_jaxpr(qm.decode_step)(packed, tok, cache).jaxpr
 
     s_log = ps * mpps
-    fused = _fp_logical_cache_avals(jaxpr_for("interpret"), s_log,
+    fused = kc.fp_cache_avals(jaxpr_for("interpret"), s_log,
                                     cfg.num_kv_heads, d)
     assert not fused, f"logical-cache fp intermediates on fused path: {fused}"
-    control = _fp_logical_cache_avals(jaxpr_for("auto"), s_log,
+    control = kc.fp_cache_avals(jaxpr_for("auto"), s_log,
                                       cfg.num_kv_heads, d)
     assert control, "positive control lost: fallback no longer gathers"

@@ -214,10 +214,13 @@ def test_kv8_cache_quantize_on_write(model_and_params):
     assert cache["k"].dtype == jnp.int8
     assert cache["k_scale"].shape == cache["k"].shape[:-1]
     assert tree_bytes(cache_fp) / tree_bytes(cache) > 3.0
-    # prefill logits identical: kv quant only affects the cache, not the
-    # prompt forward
+    # prefill attends the cache AS STORED (DESIGN.md §10): kv8 prompt
+    # attention reads dequantized int8 codes, so the logits must DIFFER
+    # from the fp-cache path — proof prefill sees exactly what decode will
+    # — while staying within the kv-quantization error
+    assert not np.allclose(np.asarray(lg), np.asarray(lg_fp), atol=1e-7)
     np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_fp),
-                               rtol=1e-5, atol=1e-5)
+                               rtol=0.1, atol=0.1)
     tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
     d, cache2 = jax.jit(qm.decode_step)(packed, tok, cache)
     d_fp, _ = jax.jit(qm_fp.decode_step)(packed, tok, cache_fp)
