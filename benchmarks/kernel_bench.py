@@ -68,9 +68,11 @@ def run():
         rows.append((f"kernel/quant_matmul_w{bits}a{a_bits}", us,
                      f"weight_bytes={w_bytes};int8_mxu_rate=2x_bf16;"
                      f"rel_err={err:.4f}"))
-    rows += _flash_decode_rows()
+    flash_rows, flash_jrows = _flash_decode_rows()
+    rows += flash_rows
     e2e_rows, bench_doc = _decode_e2e()
     rows += e2e_rows
+    bench_doc["rows"] += flash_jrows
     BENCH_DECODE_JSON.parent.mkdir(parents=True, exist_ok=True)
     BENCH_DECODE_JSON.write_text(json.dumps(bench_doc, indent=2))
     return rows
@@ -79,47 +81,75 @@ def run():
 def _kv_read_bytes(layers, batch, positions, hkv, d, kv_bits):
     """HBM bytes one decode step streams from the KV cache (k + v).
 
-    ``kv_bits < 16``: int8 codes (d bytes/position/head) + one f32
-    per-(token, head) scale; otherwise f32 cache entries."""
-    per_pos = hkv * (d + 4) if kv_bits < 16 else hkv * d * 4
+    ``kv_bits == 4``: packed nibbles (d/2 bytes/position/head) + one bf16
+    scale per 32-value block (d/16 bytes); ``kv_bits == 8``: int8 codes
+    (d bytes) + one f32 per-(token, head) scale; otherwise f32 entries."""
+    if kv_bits == 4:
+        per_pos = hkv * (d // 2 + (d // 32) * 2)
+    elif kv_bits < 16:
+        per_pos = hkv * (d + 4)
+    else:
+        per_pos = hkv * d * 4
     return 2 * layers * batch * positions * per_pos
 
 
 def _flash_decode_rows():
-    """Kernel-level flash-decode rows: HBM bytes bounded by cur_len.
+    """Kernel-level flash-decode rows: HBM bytes bounded by cur_len, at
+    kv_bits 8 (int8 + f32 scales) and 4 (packed nibbles + bf16 block-32
+    scales, read as stored).
 
     The length-masked KV grid reads ceil(cur_len / block_kv) tiles per
     sequence instead of the full max_len buffer; ``hbm_bytes_fused`` below
     is that analytic quantity (the TPU-relevant one — CPU wall-times run
-    the tile-structured XLA reference, which computes masked tiles too)."""
+    the tile-structured XLA reference, which computes masked tiles too).
+    Returns (csv_rows, BENCH_decode.json rows named w4a4kv{4,8}_flash —
+    the kv4-vs-kv8 cache-bandwidth acceptance curve)."""
+    import functools
+
+    from repro.kernels.quantize_pack import kv4_quantize
+
     b, hkv, g, d = 4, 8, 4, 64
     s, bkv = 4096, 256
     key = jax.random.PRNGKey(7)
     q = jax.random.normal(key, (b, 1, hkv * g, d), jnp.float32)
-    kc = jax.random.randint(jax.random.fold_in(key, 1), (b, s, hkv, d),
-                            -127, 128).astype(jnp.int8)
-    vc = jax.random.randint(jax.random.fold_in(key, 2), (b, s, hkv, d),
-                            -127, 128).astype(jnp.int8)
-    ks = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3),
-                                   (b, s, hkv))) * 0.01 + 1e-3
-    vs = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4),
-                                   (b, s, hkv))) * 0.01 + 1e-3
-    kv = (kc, vc, ks, vs)
-    import functools
-    fn = jax.jit(functools.partial(ops.flash_decode, mode="ref",
-                                   block_kv=bkv))
-    full = _kv_read_bytes(1, b, s, hkv, d, 8)
-    rows = []
-    for cur in (256, 1024, 4096):
-        cur_len = jnp.full((b,), cur, jnp.int32)
-        _, us = common.timed(fn, q, kv, cur_len)
-        tiles = -(-cur // bkv)
-        fused = _kv_read_bytes(1, b, tiles * bkv, hkv, d, 8)
-        rows.append((f"kernel/flash_decode_kv8_cur{cur}", us,
-                     f"max_len={s};block_kv={bkv};hbm_bytes_fused={fused};"
-                     f"hbm_bytes_full_cache={full};"
-                     f"read_frac={fused / full:.4f}"))
-    return rows
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d)) * 0.1
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d)) * 0.1
+    qmax = 127.0
+    kv_by_bits = {}
+    ks8 = jnp.maximum(jnp.max(jnp.abs(kf), -1), 1e-8) / qmax
+    vs8 = jnp.maximum(jnp.max(jnp.abs(vf), -1), 1e-8) / qmax
+    kv_by_bits[8] = (
+        jnp.clip(jnp.round(kf / ks8[..., None]), -128, 127).astype(jnp.int8),
+        jnp.clip(jnp.round(vf / vs8[..., None]), -128, 127).astype(jnp.int8),
+        ks8, vs8)
+    kv_by_bits[4] = kv4_quantize(kf) + kv4_quantize(vf)
+    kv_by_bits[4] = (kv_by_bits[4][0], kv_by_bits[4][2],
+                     kv_by_bits[4][1], kv_by_bits[4][3])
+    rows, jrows = [], []
+    for bits in (8, 4):
+        kv = kv_by_bits[bits]
+        fn = jax.jit(functools.partial(ops.flash_decode, mode="ref",
+                                       block_kv=bkv))
+        full = _kv_read_bytes(1, b, s, hkv, d, bits)
+        for cur in (256, 1024, 4096):
+            cur_len = jnp.full((b,), cur, jnp.int32)
+            _, us = common.timed(fn, q, kv, cur_len)
+            tiles = -(-cur // bkv)
+            fused = _kv_read_bytes(1, b, tiles * bkv, hkv, d, bits)
+            rows.append((f"kernel/flash_decode_kv{bits}_cur{cur}", us,
+                         f"max_len={s};block_kv={bkv};"
+                         f"hbm_bytes_fused={fused};"
+                         f"hbm_bytes_full_cache={full};"
+                         f"read_frac={fused / full:.4f}"))
+            jrows.append({"name": f"w4a4kv{bits}_flash",
+                          "us_per_call": round(us, 1),
+                          "kv_bits": bits, "cur_len": cur,
+                          "max_len": s, "block_kv": bkv,
+                          "kv_read_bytes_per_step": fused,
+                          "kv_bytes_full_cache": full,
+                          "attention_path": "flash_decode",
+                          "scope": "kernel"})
+    return rows, jrows
 
 
 def _decode_e2e():
@@ -185,14 +215,16 @@ def _decode_e2e():
 
     # weight-activation decode: fused int-activation kernel path (w4a4 is
     # the paper's Table 3 deployment; w8a8 the classic int8-serving point).
-    # kv8 rows run twice: decode_attention fallback (full-cache fp detour)
-    # vs the fused flash-decode path (length-bounded, cache read as stored).
+    # kv8/kv4 rows run twice: decode_attention fallback (full-cache fp
+    # detour) vs the fused flash path (length-bounded, cache read as
+    # stored — packed nibbles + bf16 block scales at kv4).
     flash_bkv = 64   # explicit tile size so the 128-slot miniature cache is
     #                  NOT one clamped full-cache tile: kv bytes below are
     #                  the ceil(cur_len/block_kv) tiles the step really reads
     for w_bits, a_bits, kv_bits, flash in (
             (4, 8, 16, False), (8, 8, 16, False), (4, 4, 16, False),
-            (4, 4, 8, False), (4, 4, 8, True)):
+            (4, 4, 8, False), (4, 4, 8, True),
+            (4, 4, 4, False), (4, 4, 4, True)):
         qcfg = QuantConfig(w_bits=w_bits, a_bits=a_bits, group_size=64,
                            kv_bits=kv_bits)
         packed = quantize_lm_packed(params, cfg, qcfg)

@@ -1,0 +1,64 @@
+"""KV-cache bit-width perplexity ablation (EXPERIMENTS.md §KV cache).
+
+The table benches (table1/3/4) evaluate fake-quant WEIGHT paths through the
+fp ``Model.loss``; this bench instead measures the SERVING path — packed
+weights + quantize-on-write KV cache, prompts scored through
+``QuantizedModel.prefill_chunk`` with full logits — so the reported ppl
+includes exactly the cache error a deployed engine sees (the cache is
+attended as stored: int8 + f32 scales at kv8, packed nibbles + bf16
+block-32 scales at kv4).
+
+Rows: fp baseline, then {kv16, kv8, kv4} at near-fp weights (w8a16 —
+isolates the KV-cache term) and {kv8, kv4} on the w4a8 deployment stack.
+The claim tracked across PRs: kv8 is ppl-neutral to ~1e-3 and kv4's
+degradation stays small against the 2x cache-stream reduction
+(BENCH_decode.json `kv_read_bytes_per_step`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+from benchmarks import common
+
+ARCH = "llama-mini"
+BLOCK_KV = 16
+
+
+def serving_ppl(cfg, qcfg, params, toks) -> float:
+    """Next-token ppl of the packed serving stack: one whole-prompt
+    prefill chunk (quantize-on-write + attend-as-stored), full logits."""
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref",
+                        flash_block_kv=BLOCK_KV)
+    bsz, t = toks.shape
+    max_len = -(-t // BLOCK_KV) * BLOCK_KV
+    cache = qm.init_cache(bsz, max_len)
+    logits, _ = jax.jit(qm.prefill_chunk)(
+        packed, {"tokens": toks}, cache, jnp.zeros((bsz,), jnp.int32))
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, toks[:, 1:, None], axis=-1)
+    return float(jnp.exp(nll.mean()))
+
+
+def run(arch: str = ARCH):
+    cfg, model, params = common.trained_model(arch)
+    _, test = common.eval_sets(cfg)
+    rows = [(f"kvppl/{arch}/fp", 0.0,
+             f"ppl={common.ppl(model, params, test):.4f}")]
+    grids = [(8, 16, 16), (8, 16, 8), (8, 16, 4),
+             (4, 8, 8), (4, 8, 4)]
+    for w_bits, a_bits, kv_bits in grids:
+        qcfg = QuantConfig(w_bits=w_bits, a_bits=a_bits, group_size=32,
+                           lwc=False, kv_bits=kv_bits)
+        p = serving_ppl(cfg, qcfg, params, test)
+        rows.append((f"kvppl/{arch}/w{w_bits}a{a_bits}kv{kv_bits}", 0.0,
+                     f"ppl={p:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

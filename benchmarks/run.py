@@ -25,9 +25,9 @@ def main() -> int:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (fig3_loss_curves, kernel_bench, roofline_report,
-                            serve_bench, table1_weight_only, table3_w4a4,
-                            table4_precision, table5_stability,
+    from benchmarks import (fig3_loss_curves, kernel_bench, kv_cache_ppl,
+                            roofline_report, serve_bench, table1_weight_only,
+                            table3_w4a4, table4_precision, table5_stability,
                             table6_gradual_mask)
     suites = {
         "table1": table1_weight_only.run,
@@ -39,6 +39,7 @@ def main() -> int:
         "roofline": roofline_report.run,
         "kernels": kernel_bench.run,
         "serve": serve_bench.run,
+        "kvppl": kv_cache_ppl.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -150,6 +150,18 @@ def run():
     pgd = _run_engine(qm, packed, prompts, paged=True)
     identical = lin["outputs"] == pgd["outputs"]
 
+    # the w4a4kv4 deployment point: same trace on the packed-nibble KV
+    # cache (int4 weights + activations + KV, bf16 block-32 scales) —
+    # the cache-bytes delta vs kv8 is the tentpole's serving-memory win
+    qcfg4 = QuantConfig(w_bits=4, a_bits=4, group_size=32, lwc=False,
+                        kv_bits=4)
+    packed4 = quantize_lm_packed(params, cfg, qcfg4)
+    qm4 = QuantizedModel(cfg, qcfg4, kernel_mode="ref",
+                         flash_block_kv=PAGE_SIZE)
+    lin4 = _run_engine(qm4, packed4, prompts, paged=False)
+    pgd4 = _run_engine(qm4, packed4, prompts, paged=True)
+    identical4 = lin4["outputs"] == pgd4["outputs"]
+
     # inter-token latency: long-prompt arrival against in-flight decodes
     shorts = [rng.integers(0, cfg.vocab_size, n) for n in ITL_SHORTS]
     long_p = rng.integers(0, cfg.vocab_size, ITL_LONG)
@@ -164,6 +176,13 @@ def run():
         "linear": {k: v for k, v in lin.items() if k != "outputs"},
         "paged": {k: v for k, v in pgd.items() if k != "outputs"},
         "cache_mem_ratio": lin["cache_bytes"] / pgd["cache_bytes"],
+        "w4a4kv4": {
+            "quant": "w4a4g32kv4", "token_identical": identical4,
+            "linear": {k: v for k, v in lin4.items() if k != "outputs"},
+            "paged": {k: v for k, v in pgd4.items() if k != "outputs"},
+            "kv4_vs_kv8_cache_ratio":
+                pgd["cache_bytes"] / pgd4["cache_bytes"],
+        },
         "itl": {
             "trace": {"short_prompt_lens": ITL_SHORTS,
                       "long_prompt_len": ITL_LONG,
@@ -188,6 +207,16 @@ def run():
     rows.append(("serve/linear_vs_paged_cache_ratio",
                  0.0, f"ratio={doc['cache_mem_ratio']:.2f};"
                       f"token_identical={identical}"))
+    for tag, st in (("linear", lin4), ("paged", pgd4)):
+        us_per_tok = 1e6 * st["wall_s"] / max(st["new_tokens"], 1)
+        rows.append((
+            f"serve/engine_{tag}_w4a4kv4", us_per_tok,
+            f"tok_s={st['tokens_per_s']:.1f};req_s="
+            f"{st['requests_per_s']:.2f};cache_MiB="
+            f"{st['cache_bytes'] / 2**20:.2f};"
+            f"token_identical={identical4}"))
+    rows.append(("serve/kv4_vs_kv8_paged_cache_ratio", 0.0,
+                 f"ratio={doc['w4a4kv4']['kv4_vs_kv8_cache_ratio']:.2f}"))
     for tag, itl in (("whole", itl_whole), ("chunked", itl_chunk)):
         rows.append((f"serve/itl_{tag}_prefill", itl["p99_ms"] * 1e3,
                      f"p50_ms={itl['p50_ms']:.2f};p99_ms="

@@ -10,6 +10,13 @@ b <= 8). This keeps the packed tensor contiguous along the same axis the
 matmul streams, so a (bk, bn) weight block maps to a (bk*bits/8, bn) packed
 block — a clean BlockSpec for the Pallas kernel.
 
+A second, simpler layout serves the kv4 cache (:func:`pack_nibbles` /
+:func:`unpack_nibbles`): two SIGNED int4 codes per int8 byte along the
+*last* axis (byte ``j`` holds value ``2j`` in its low nibble and ``2j+1``
+in its high nibble), so a (block_kv, D) KV tile maps to a (block_kv, D//2)
+packed tile and the unpack is two VREG shifts — the attention kernels call
+:func:`unpack_nibbles` in-register on each tile.
+
 All functions are jit-safe and shape-polymorphic in the leading dims.
 """
 from __future__ import annotations
@@ -100,3 +107,37 @@ def unpack(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
         vals.append(v)
     codes = jnp.stack(vals, axis=-2)  # (..., n_units, 8, d_out)
     return codes.reshape(lead + (d_in, d_out)).astype(jnp.uint8)
+
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """Pack signed int4 codes (values in [-8, 7]) two-per-byte along the
+    LAST axis: (..., D) -> (..., D // 2) int8.
+
+    Byte ``j`` holds value ``2j`` in its low nibble and value ``2j + 1`` in
+    its high nibble, so a contiguous D-vector stays contiguous packed — the
+    kv4 cache layout the flash kernels read tile-by-tile.
+    """
+    d = codes.shape[-1]
+    if d % 2 != 0:
+        raise ValueError(f"pack_nibbles needs an even last axis (two codes "
+                         f"per byte); got D={d}")
+    c = codes.astype(jnp.int32) & 0xF
+    lo = c[..., 0::2]
+    hi = c[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`: (..., D // 2) int8 -> (..., D) int32
+    with values sign-extended back to [-8, 7].
+
+    Two arithmetic shifts per byte — the int8 -> int32 upcast already
+    sign-extends bit 7, so ``>> 4`` yields the signed high nibble and
+    ``<< 28 >> 28`` the signed low nibble.  Cheap enough to run in-register
+    inside the flash kernels' per-tile dequant epilogue.
+    """
+    xi = packed.astype(jnp.int32)
+    lo = (xi << 28) >> 28
+    hi = xi >> 4
+    d2 = packed.shape[-1]
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], d2 * 2)

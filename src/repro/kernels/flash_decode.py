@@ -1,17 +1,29 @@
 """Pallas TPU kernel: fused flash-decode attention over the quantized KV cache.
 
-One-token decode attention reads the cache **as stored** — int8 codes plus
-per-(token, head) float32 scales when ``kv_bits < 16``, plain fp otherwise —
-and dequantizes each KV tile in registers on its way to the MXU. The
-full-cache fp materialization the XLA fallback pays every layer, every step
-(``(B, S, Hkv, D)`` floats) never exists on this path.
+One-token decode attention reads the cache **as stored** and dequantizes
+each KV tile in registers on its way to the MXU — three formats, inferred
+from the scale operands:
+
+    kv16  k/v (B, S, Hkv, D) fp, no scales
+    kv8   k/v (B, S, Hkv, D) int8 + per-(token, head) f32 scales (B, S, Hkv)
+    kv4   k/v (B, S, Hkv, D//2) int8 packed nibbles + bf16 block-32
+          microscaling scales (B, S, Hkv, D//32) — a 4D scale, one rank
+          higher than kv8's, which is how the format is told apart
+
+The full-cache fp materialization the XLA fallback pays every layer, every
+step (``(B, S, Hkv, D)`` floats) never exists on this path.  The kv4
+epilogue is :func:`repro.kernels.quantize_pack.kv4_dequant` — two VREG
+shifts to unpack the nibbles plus a block-scale multiply — shared with the
+ref oracles so bit-identity survives the sub-byte layout.
 
 Layout and grid:
 
     q        (B, Hkv, G, D)    GQA groups folded next to their KV head so
                                one q block (G, D) attends one KV head
-    k / v    (B, S, Hkv, D)    the cache tensors, untouched (int8 or fp)
-    k/v scale(B, S, Hkv) f32   per-(token, head) scales (kv_bits < 16 only)
+    k / v    (B, S, Hkv, Dk)   the cache tensors, untouched
+                               (Dk = D//2 packed int4, else D)
+    k/v scale                  (B, S, Hkv) f32 for kv8;
+                               (B, S, Hkv, D//32) bf16 for kv4
     cur_len  (B,) int32        valid positions per sequence (scalar-prefetch)
 
     grid (B, Hkv, ceil(S / block_kv))   — KV tiles innermost
@@ -53,13 +65,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quantize_pack import (KV_BLOCK, kv4_check_head_dim,
+                                         kv4_dequant)
+
 NEG_INF = -1e30
 DEFAULT_BLOCK_KV = 512
 
 
 def _kernel(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
             m_ref, l_ref, acc_ref, *, block_kv: int, n_tiles: int,
-            scale: float, quantized: bool):
+            scale: float, kv_bits: int):
     b = pl.program_id(0)
     t = pl.program_id(2)
 
@@ -74,9 +89,15 @@ def _kernel(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
     @pl.when(t * block_kv < cur)
     def _tile():
         q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (block_kv, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        if quantized:
+        if kv_bits == 4:
+            # in-register nibble unpack + block-32 microscaling dequant:
+            # codes tile (block_kv, D//2), scales tile (block_kv, D//32)
+            k = kv4_dequant(k_ref[0, :, 0, :], ks_ref[0, :, 0, :])
+            v = kv4_dequant(v_ref[0, :, 0, :], vs_ref[0, :, 0, :])
+        else:
+            k = k_ref[0, :, 0, :].astype(jnp.float32)    # (block_kv, D)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_bits == 8:
             # in-register dequant: int8 codes * per-(token, head) f32 scale
             k = k * ks_ref[...].reshape(block_kv, 1)
             v = v * vs_ref[...].reshape(block_kv, 1)
@@ -112,18 +133,26 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  interpret: bool = False) -> jax.Array:
     """Flash-decode over the cache as stored. Returns (B, Hkv, G, D) q.dtype.
 
-    ``k``/``v`` are int8 codes when ``k_scale``/``v_scale`` (both or
-    neither) are given, fp otherwise. ``cur_len`` counts valid positions;
-    positions ``>= cur_len[b]`` are masked, a zero-length row returns zeros.
+    ``k``/``v`` are kv8 int8 codes when 3D ``k_scale``/``v_scale`` (both or
+    neither) are given, kv4 packed nibbles when the scales are 4D block-32
+    grids, fp otherwise. ``cur_len`` counts valid positions; positions
+    ``>= cur_len[b]`` are masked, a zero-length row returns zeros.
     Requires ``S % block_kv == 0`` (the ops wrapper clamps).
     """
     bsz, hkv, g, d = q.shape
     s = k.shape[1]
-    assert k.shape == v.shape == (bsz, s, hkv, d), (q.shape, k.shape, v.shape)
     assert s % block_kv == 0, (s, block_kv)
     quantized = k_scale is not None
     assert quantized == (v_scale is not None)
-    if quantized:
+    packed = quantized and k_scale.ndim == k.ndim
+    kv_bits = 4 if packed else (8 if quantized else 16)
+    dk = d // 2 if packed else d
+    assert k.shape == v.shape == (bsz, s, hkv, dk), \
+        (q.shape, k.shape, v.shape, kv_bits)
+    if packed:
+        kv4_check_head_dim(d)
+        assert k_scale.shape == v_scale.shape == (bsz, s, hkv, d // KV_BLOCK)
+    elif quantized:
         assert k_scale.shape == v_scale.shape == (bsz, s, hkv)
     n_tiles = s // block_kv
     scale = scale if scale is not None else d ** -0.5
@@ -141,17 +170,22 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
     in_specs = [
         pl.BlockSpec((1, 1, g, d), lambda b, h, t, lens: (b, h, 0, 0)),
-        pl.BlockSpec((1, block_kv, 1, d), kv_map),
-        pl.BlockSpec((1, block_kv, 1, d), kv_map),
+        pl.BlockSpec((1, block_kv, 1, dk), kv_map),
+        pl.BlockSpec((1, block_kv, 1, dk), kv_map),
     ]
     args = [q, k, v]
-    if quantized:
+    if packed:
+        # 4D block-scale tile rides the same clamped kv_map as the codes
+        sspec = pl.BlockSpec((1, block_kv, 1, d // KV_BLOCK), kv_map)
+        in_specs += [sspec, sspec]
+        args += [k_scale, v_scale]
+    elif quantized:
         in_specs += [pl.BlockSpec((1, block_kv, 1), scale_map),
                      pl.BlockSpec((1, block_kv, 1), scale_map)]
         args += [k_scale, v_scale]
 
     kernel = functools.partial(_kernel, block_kv=block_kv, n_tiles=n_tiles,
-                               scale=scale, quantized=quantized)
+                               scale=scale, kv_bits=kv_bits)
     if not quantized:
         # keep one kernel body: bind the absent scale refs to None
         kernel = functools.partial(
@@ -186,24 +220,32 @@ def flash_decode_paged(q: jax.Array, k: jax.Array, v: jax.Array,
                        interpret: bool = False) -> jax.Array:
     """Flash-decode over a paged pool. Returns (B, Hkv, G, D) q.dtype.
 
-    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, D)`` — int8
-    codes when ``k_scale``/``v_scale`` pools ``(num_pages, page_size, Hkv)``
-    are given, fp otherwise.  ``page_table`` (B, max_pages_per_seq) int32
-    maps logical page ``t`` of sequence ``b`` to a pool page (−1 =
-    unallocated; only entries below ``ceil(cur_len[b] / page_size)`` are
-    read).  One KV tile == one page; the grid is
-    ``(B, Hkv, max_pages_per_seq)`` and tile ``t`` DMAs pool page
-    ``page_table[b, t]`` via its BlockSpec index map.
+    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, Dk)`` — kv8
+    int8 codes (Dk = D) when ``k_scale``/``v_scale`` pools ``(num_pages,
+    page_size, Hkv)`` are given, kv4 packed nibbles (Dk = D//2) when the
+    scale pools are 4D ``(num_pages, page_size, Hkv, D//32)`` bf16, fp
+    otherwise.  ``page_table`` (B, max_pages_per_seq) int32 maps logical
+    page ``t`` of sequence ``b`` to a pool page (−1 = unallocated; only
+    entries below ``ceil(cur_len[b] / page_size)`` are read).  One KV tile
+    == one page; the grid is ``(B, Hkv, max_pages_per_seq)`` and tile ``t``
+    DMAs pool page ``page_table[b, t]`` via its BlockSpec index map.
     """
     bsz, hkv, g, d = q.shape
     num_pages, page_size = k.shape[0], k.shape[1]
-    assert k.shape == v.shape == (num_pages, page_size, hkv, d), \
-        (q.shape, k.shape, v.shape)
     n_tiles = page_table.shape[1]
     assert page_table.shape == (bsz, n_tiles), (page_table.shape, bsz)
     quantized = k_scale is not None
     assert quantized == (v_scale is not None)
-    if quantized:
+    packed = quantized and k_scale.ndim == k.ndim
+    kv_bits = 4 if packed else (8 if quantized else 16)
+    dk = d // 2 if packed else d
+    assert k.shape == v.shape == (num_pages, page_size, hkv, dk), \
+        (q.shape, k.shape, v.shape, kv_bits)
+    if packed:
+        kv4_check_head_dim(d)
+        assert k_scale.shape == v_scale.shape == \
+            (num_pages, page_size, hkv, d // KV_BLOCK)
+    elif quantized:
         assert k_scale.shape == v_scale.shape == (num_pages, page_size, hkv)
     scale = scale if scale is not None else d ** -0.5
     cur_len = cur_len.astype(jnp.int32)
@@ -226,11 +268,16 @@ def flash_decode_paged(q: jax.Array, k: jax.Array, v: jax.Array,
 
     in_specs = [
         pl.BlockSpec((1, 1, g, d), lambda b, h, t, lens, pt: (b, h, 0, 0)),
-        pl.BlockSpec((1, page_size, 1, d), kv_map),
-        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, dk), kv_map),
+        pl.BlockSpec((1, page_size, 1, dk), kv_map),
     ]
     args = [q, k, v]
-    if quantized:
+    if packed:
+        # 4D block-scale page gathered by the same kv_map as the codes
+        sspec = pl.BlockSpec((1, page_size, 1, d // KV_BLOCK), kv_map)
+        in_specs += [sspec, sspec]
+        args += [k_scale, v_scale]
+    elif quantized:
         in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
                      pl.BlockSpec((1, page_size, 1), scale_map)]
         args += [k_scale, v_scale]
@@ -238,7 +285,7 @@ def flash_decode_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     # one tile == one page: reuse the linear kernel body verbatim so the
     # two layouts cannot diverge in op order
     body = functools.partial(_kernel, block_kv=page_size, n_tiles=n_tiles,
-                             scale=scale, quantized=quantized)
+                             scale=scale, kv_bits=kv_bits)
     if not quantized:
         body = functools.partial(
             lambda lens, qr, kr, vr, o, m, l, a, *, inner:

@@ -5,9 +5,12 @@ A query *chunk* of ``C`` tokens (absolute positions ``offset[b] ..
 offset[b] + chunk_len[b] - 1`` per sequence) attends the already-written
 cache prefix AND itself causally.  The chunk's K/V have already been
 quantized-on-write into the cache by the caller (``prefill_chunk`` in the
-serving models), so the kernel reads ONE source — the cache **as stored**:
-int8 codes plus per-(token, head) float32 scales when ``kv_bits < 16``,
-plain fp otherwise — and dequantizes each KV tile in registers.  The fp
+serving models), so the kernel reads ONE source — the cache **as stored**,
+in the same three formats as ``flash_decode`` (inferred from the scale
+operands): fp (kv16), int8 + per-(token, head) f32 scales (kv8), or packed
+int4 nibbles + bf16 block-32 microscaling scales one rank higher (kv4,
+dequantized per tile by the shared
+:func:`repro.kernels.quantize_pack.kv4_dequant` epilogue).  The fp
 ``(B, S, Hkv, D)`` cache materialization of the old whole-prompt prefill
 never exists on this path (jaxpr-pinned, like the decode kernel's).
 
@@ -16,8 +19,10 @@ Layout and grid:
     q         (B, Hkv, C, G, D)   GQA groups folded next to their KV head;
                                   flattened in-kernel to (C*G, D) rows where
                                   row r is chunk token r // G
-    k / v     (B, S, Hkv, D)      the cache tensors, untouched (int8 or fp)
-    k/v scale (B, S, Hkv) f32     per-(token, head) scales (kv_bits < 16)
+    k / v     (B, S, Hkv, Dk)     the cache tensors, untouched
+                                  (Dk = D//2 packed int4, else D)
+    k/v scale                     (B, S, Hkv) f32 for kv8;
+                                  (B, S, Hkv, D//32) bf16 for kv4
     offset    (B,) int32          chunk's first absolute position
                                   (scalar-prefetch)
     chunk_len (B,) int32          valid chunk rows per sequence
@@ -63,13 +68,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quantize_pack import (KV_BLOCK, kv4_check_head_dim,
+                                         kv4_dequant)
+
 NEG_INF = -1e30
 DEFAULT_BLOCK_KV = 512
 
 
 def _kernel(offs_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
             m_ref, l_ref, acc_ref, *, block_kv: int, n_tiles: int,
-            chunk: int, g: int, scale: float, quantized: bool):
+            chunk: int, g: int, scale: float, kv_bits: int):
     b = pl.program_id(0)
     t = pl.program_id(2)
     r = chunk * g
@@ -89,9 +97,15 @@ def _kernel(offs_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
     @pl.when((t * block_kv < off + cl) & (cl > 0))
     def _tile():
         q = q_ref[0, 0].astype(jnp.float32).reshape(r, -1)   # (C*G, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_kv, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        if quantized:
+        if kv_bits == 4:
+            # in-register nibble unpack + block-32 microscaling dequant:
+            # codes tile (block_kv, D//2), scales tile (block_kv, D//32)
+            k = kv4_dequant(k_ref[0, :, 0, :], ks_ref[0, :, 0, :])
+            v = kv4_dequant(v_ref[0, :, 0, :], vs_ref[0, :, 0, :])
+        else:
+            k = k_ref[0, :, 0, :].astype(jnp.float32)        # (block_kv, D)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_bits == 8:
             # in-register dequant: int8 codes * per-(token, head) f32 scale
             k = k * ks_ref[...].reshape(block_kv, 1)
             v = v * vs_ref[...].reshape(block_kv, 1)
@@ -135,19 +149,27 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     """Chunked causal prefill over the cache as stored.
 
     q (B, Hkv, C, G, D); returns the same shape in q.dtype.  ``k``/``v``
-    are int8 codes when ``k_scale``/``v_scale`` (both or neither) are
-    given, fp otherwise; the chunk's own K/V must already be written at
+    are kv8 int8 codes when 3D ``k_scale``/``v_scale`` (both or neither)
+    are given, kv4 packed nibbles when the scales are 4D block-32 grids,
+    fp otherwise; the chunk's own K/V must already be written at
     positions ``offset .. offset + chunk_len - 1``.  Pad rows
     (``i >= chunk_len[b]``) return zeros.  Requires ``S % block_kv == 0``
     (the ops wrapper clamps).
     """
     bsz, hkv, c, g, d = q.shape
     s = k.shape[1]
-    assert k.shape == v.shape == (bsz, s, hkv, d), (q.shape, k.shape, v.shape)
     assert s % block_kv == 0, (s, block_kv)
     quantized = k_scale is not None
     assert quantized == (v_scale is not None)
-    if quantized:
+    packed = quantized and k_scale.ndim == k.ndim
+    kv_bits = 4 if packed else (8 if quantized else 16)
+    dk = d // 2 if packed else d
+    assert k.shape == v.shape == (bsz, s, hkv, dk), \
+        (q.shape, k.shape, v.shape, kv_bits)
+    if packed:
+        kv4_check_head_dim(d)
+        assert k_scale.shape == v_scale.shape == (bsz, s, hkv, d // KV_BLOCK)
+    elif quantized:
         assert k_scale.shape == v_scale.shape == (bsz, s, hkv)
     n_tiles = s // block_kv
     scale = scale if scale is not None else d ** -0.5
@@ -170,17 +192,22 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     in_specs = [
         pl.BlockSpec((1, 1, c, g, d), lambda b, h, t, offs, lens:
                      (b, h, 0, 0, 0)),
-        pl.BlockSpec((1, block_kv, 1, d), kv_map),
-        pl.BlockSpec((1, block_kv, 1, d), kv_map),
+        pl.BlockSpec((1, block_kv, 1, dk), kv_map),
+        pl.BlockSpec((1, block_kv, 1, dk), kv_map),
     ]
     args = [q, k, v]
-    if quantized:
+    if packed:
+        # 4D block-scale tile rides the same clamped kv_map as the codes
+        sspec = pl.BlockSpec((1, block_kv, 1, d // KV_BLOCK), kv_map)
+        in_specs += [sspec, sspec]
+        args += [k_scale, v_scale]
+    elif quantized:
         in_specs += [pl.BlockSpec((1, block_kv, 1), scale_map),
                      pl.BlockSpec((1, block_kv, 1), scale_map)]
         args += [k_scale, v_scale]
 
     body = functools.partial(_kernel, block_kv=block_kv, n_tiles=n_tiles,
-                             chunk=c, g=g, scale=scale, quantized=quantized)
+                             chunk=c, g=g, scale=scale, kv_bits=kv_bits)
     if not quantized:
         # keep one kernel body: bind the absent scale refs to None
         body = functools.partial(
@@ -216,23 +243,32 @@ def flash_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
                         interpret: bool = False) -> jax.Array:
     """Chunked causal prefill over a paged pool.  q (B, Hkv, C, G, D).
 
-    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, D)`` — int8
-    codes when ``k_scale``/``v_scale`` pools ``(num_pages, page_size, Hkv)``
-    are given, fp otherwise.  ``page_table`` (B, max_pages_per_seq) int32
-    maps logical page ``t`` of sequence ``b`` to a pool page (−1 =
-    unallocated; only entries below ``ceil((offset + chunk_len) /
-    page_size)`` are read).  One KV tile == one page, gathered in the
-    BlockSpec index map exactly like ``flash_decode_paged``.
+    ``k``/``v`` are page pools ``(num_pages, page_size, Hkv, Dk)`` — kv8
+    int8 codes (Dk = D) when ``k_scale``/``v_scale`` pools ``(num_pages,
+    page_size, Hkv)`` are given, kv4 packed nibbles (Dk = D//2) when the
+    scale pools are 4D ``(num_pages, page_size, Hkv, D//32)`` bf16, fp
+    otherwise.  ``page_table`` (B, max_pages_per_seq) int32 maps logical
+    page ``t`` of sequence ``b`` to a pool page (−1 = unallocated; only
+    entries below ``ceil((offset + chunk_len) / page_size)`` are read).
+    One KV tile == one page, gathered in the BlockSpec index map exactly
+    like ``flash_decode_paged``.
     """
     bsz, hkv, c, g, d = q.shape
     num_pages, page_size = k.shape[0], k.shape[1]
-    assert k.shape == v.shape == (num_pages, page_size, hkv, d), \
-        (q.shape, k.shape, v.shape)
     n_tiles = page_table.shape[1]
     assert page_table.shape == (bsz, n_tiles), (page_table.shape, bsz)
     quantized = k_scale is not None
     assert quantized == (v_scale is not None)
-    if quantized:
+    packed = quantized and k_scale.ndim == k.ndim
+    kv_bits = 4 if packed else (8 if quantized else 16)
+    dk = d // 2 if packed else d
+    assert k.shape == v.shape == (num_pages, page_size, hkv, dk), \
+        (q.shape, k.shape, v.shape, kv_bits)
+    if packed:
+        kv4_check_head_dim(d)
+        assert k_scale.shape == v_scale.shape == \
+            (num_pages, page_size, hkv, d // KV_BLOCK)
+    elif quantized:
         assert k_scale.shape == v_scale.shape == (num_pages, page_size, hkv)
     scale = scale if scale is not None else d ** -0.5
     offset = offset.astype(jnp.int32)
@@ -257,11 +293,16 @@ def flash_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     in_specs = [
         pl.BlockSpec((1, 1, c, g, d), lambda b, h, t, offs, lens, pt:
                      (b, h, 0, 0, 0)),
-        pl.BlockSpec((1, page_size, 1, d), kv_map),
-        pl.BlockSpec((1, page_size, 1, d), kv_map),
+        pl.BlockSpec((1, page_size, 1, dk), kv_map),
+        pl.BlockSpec((1, page_size, 1, dk), kv_map),
     ]
     args = [q, k, v]
-    if quantized:
+    if packed:
+        # 4D block-scale page gathered by the same kv_map as the codes
+        sspec = pl.BlockSpec((1, page_size, 1, d // KV_BLOCK), kv_map)
+        in_specs += [sspec, sspec]
+        args += [k_scale, v_scale]
+    elif quantized:
         in_specs += [pl.BlockSpec((1, page_size, 1), scale_map),
                      pl.BlockSpec((1, page_size, 1), scale_map)]
         args += [k_scale, v_scale]
@@ -269,7 +310,7 @@ def flash_prefill_paged(q: jax.Array, k: jax.Array, v: jax.Array,
     # one tile == one page: reuse the linear kernel body verbatim so the
     # two layouts cannot diverge in op order
     body = functools.partial(_kernel, block_kv=page_size, n_tiles=n_tiles,
-                             chunk=c, g=g, scale=scale, quantized=quantized)
+                             chunk=c, g=g, scale=scale, kv_bits=kv_bits)
     if not quantized:
         body = functools.partial(
             lambda offs, lens, qr, kr, vr, o, m, l, a, *, inner:

@@ -184,10 +184,12 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     """One-token decode attention over the KV cache **as stored**.
 
     q (B, 1, Hq, D); ``kv`` is the cache tuple exactly as the serving model
-    carries it — ``(k, v)`` fp, or ``(k, v, k_scale, v_scale)`` int8 codes
-    (B, S, Hkv, D) + per-(token, head) f32 scales (B, S, Hkv). ``cur_len``
-    (B,) int32 counts valid positions (the just-written token included).
-    Returns (B, 1, Hq, D) in q.dtype.
+    carries it — ``(k, v)`` fp, or ``(k, v, k_scale, v_scale)``: kv8 int8
+    codes (B, S, Hkv, D) + per-(token, head) f32 scales (B, S, Hkv), or kv4
+    packed nibbles (B, S, Hkv, D//2) + bf16 block-32 scales
+    (B, S, Hkv, D//32) — the 4D (code-rank) scale is what marks the packed
+    format. ``cur_len`` (B,) int32 counts valid positions (the just-written
+    token included).  Returns (B, 1, Hq, D) in q.dtype.
 
     **Paged cache**: with ``page_table`` (B, max_pages_per_seq) int32, the
     kv entries are page *pools* — (num_pages, page_size, Hkv, D) codes and
@@ -230,7 +232,11 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     s, hkv = k.shape[1], k.shape[2]
     if impl == "xla":
         from repro.models import attention as attn_lib
-        if k_scale is not None:
+        if k_scale is not None and k_scale.ndim == k.ndim:
+            # kv4: the one path that materializes the dequantized cache
+            k = qp.kv4_dequant(k, k_scale).astype(q.dtype)
+            v = qp.kv4_dequant(v, v_scale).astype(q.dtype)
+        elif k_scale is not None:
             k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
             v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
         out = attn_lib.decode_attention(q, k.astype(q.dtype),
@@ -259,9 +265,12 @@ def _flash_decode_paged(q, k, v, k_scale, v_scale, page_table, cur_len,
     """Paged dispatch half of :func:`flash_decode` (kv entries are pools)."""
     b, _, hq, d = q.shape
     num_pages, ps, hkv = k.shape[0], k.shape[1], k.shape[2]
-    if k.shape != (num_pages, ps, hkv, d):
-        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, D); "
-                         f"got {k.shape}")
+    packed = k_scale is not None and k_scale.ndim == k.ndim
+    dk = d // 2 if packed else d
+    if k.shape != (num_pages, ps, hkv, dk):
+        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, "
+                         f"{'D//2 packed' if packed else 'D'}); got "
+                         f"{k.shape}")
     if page_table.ndim != 2 or page_table.shape[0] != b:
         raise ValueError(f"page_table must be (B, max_pages_per_seq); got "
                          f"{page_table.shape} for B={b}")
@@ -269,9 +278,14 @@ def _flash_decode_paged(q, k, v, k_scale, v_scale, page_table, cur_len,
         from repro.models import attention as attn_lib
         pt = jnp.maximum(page_table, 0)
         s_log = page_table.shape[1] * ps
-        kk = k[pt].reshape(b, s_log, hkv, d)
-        vv = v[pt].reshape(b, s_log, hkv, d)
-        if k_scale is not None:
+        kk = k[pt].reshape(b, s_log, hkv, dk)
+        vv = v[pt].reshape(b, s_log, hkv, dk)
+        if packed:
+            ks = k_scale[pt].reshape(b, s_log, hkv, -1)
+            vs = v_scale[pt].reshape(b, s_log, hkv, -1)
+            kk = qp.kv4_dequant(kk, ks).astype(q.dtype)
+            vv = qp.kv4_dequant(vv, vs).astype(q.dtype)
+        elif k_scale is not None:
             ks = k_scale[pt].reshape(b, s_log, hkv)
             vs = v_scale[pt].reshape(b, s_log, hkv)
             kk = (kk.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
@@ -310,7 +324,9 @@ def flash_prefill(q, kv, offset, chunk_len, *, scale=None,
     q (B, C, Hq, D) — a C-token query chunk whose token ``i`` sits at
     absolute position ``offset[b] + i``; ``kv`` is the cache tuple exactly
     as the serving model carries it — ``(k, v)`` fp, or ``(k, v, k_scale,
-    v_scale)`` int8 codes + per-(token, head) f32 scales — with the chunk's
+    v_scale)`` kv8 int8 codes + per-(token, head) f32 scales, or kv4
+    packed nibbles + 4D bf16 block-32 scales (see :func:`flash_decode`) —
+    with the chunk's
     own (quantized-on-write) K/V already stored at positions ``offset ..
     offset + chunk_len - 1``.  ``chunk_len`` (B,) int32 counts valid chunk
     rows; pad rows (``i >= chunk_len[b]``) return zeros, so idle sequences
@@ -352,7 +368,11 @@ def flash_prefill(q, kv, offset, chunk_len, *, scale=None,
     s, hkv = k.shape[1], k.shape[2]
     if impl == "xla":
         from repro.models import attention as attn_lib
-        if k_scale is not None:
+        if k_scale is not None and k_scale.ndim == k.ndim:
+            # kv4: the one path that materializes the dequantized cache
+            k = qp.kv4_dequant(k, k_scale).astype(q.dtype)
+            v = qp.kv4_dequant(v, v_scale).astype(q.dtype)
+        elif k_scale is not None:
             k = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
             v = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
         return attn_lib.chunk_prefill_attention(
@@ -377,9 +397,12 @@ def _flash_prefill_paged(q, k, v, k_scale, v_scale, page_table, offset,
     """Paged dispatch half of :func:`flash_prefill` (kv entries are pools)."""
     b, c, hq, d = q.shape
     num_pages, ps, hkv = k.shape[0], k.shape[1], k.shape[2]
-    if k.shape != (num_pages, ps, hkv, d):
-        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, D); "
-                         f"got {k.shape}")
+    packed = k_scale is not None and k_scale.ndim == k.ndim
+    dk = d // 2 if packed else d
+    if k.shape != (num_pages, ps, hkv, dk):
+        raise ValueError(f"paged kv pools must be (P, page_size, Hkv, "
+                         f"{'D//2 packed' if packed else 'D'}); got "
+                         f"{k.shape}")
     if page_table.ndim != 2 or page_table.shape[0] != b:
         raise ValueError(f"page_table must be (B, max_pages_per_seq); got "
                          f"{page_table.shape} for B={b}")
@@ -387,9 +410,14 @@ def _flash_prefill_paged(q, k, v, k_scale, v_scale, page_table, offset,
         from repro.models import attention as attn_lib
         pt = jnp.maximum(page_table, 0)
         s_log = page_table.shape[1] * ps
-        kk = k[pt].reshape(b, s_log, hkv, d)
-        vv = v[pt].reshape(b, s_log, hkv, d)
-        if k_scale is not None:
+        kk = k[pt].reshape(b, s_log, hkv, dk)
+        vv = v[pt].reshape(b, s_log, hkv, dk)
+        if packed:
+            ks = k_scale[pt].reshape(b, s_log, hkv, -1)
+            vs = v_scale[pt].reshape(b, s_log, hkv, -1)
+            kk = qp.kv4_dequant(kk, ks).astype(q.dtype)
+            vv = qp.kv4_dequant(vv, vs).astype(q.dtype)
+        elif k_scale is not None:
             ks = k_scale[pt].reshape(b, s_log, hkv)
             vs = v_scale[pt].reshape(b, s_log, hkv)
             kk = (kk.astype(jnp.float32) * ks[..., None]).astype(q.dtype)

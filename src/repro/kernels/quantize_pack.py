@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: per-group asymmetric quantize + sub-byte pack.
+"""Pallas TPU kernel: per-group asymmetric quantize + sub-byte pack — plus
+the kv4 microscaling quantize/dequant pair the sub-byte KV cache shares.
 
 Offline weight preparation for the serving path: streams a bf16/f32 weight
 through VMEM once and emits packed uint8 codes + per-group scale/zp. The
@@ -8,6 +9,14 @@ group axis is K (input features), matching the dequant-matmul layout.
     w block  (g, bn)       VMEM in
     packed   (g//8*bits, bn) VMEM out
     scale/zp (1, bn)       VMEM out
+
+kv4 (MX-style microscaling, ``kv_bits=4``): :func:`kv4_quantize` packs K/V
+vectors into two int4 codes per byte along D with ONE bf16 scale per block
+of ``KV_BLOCK`` = 32 values — 2 B of scale per 32 values instead of the kv8
+layout's 4 B f32 per whole (token, head) row.  :func:`kv4_dequant` is the
+ONE unpack + block-scale epilogue shared verbatim by the flash kernel
+bodies, the tile-mirroring ref oracles, and the XLA fallbacks — sharing it
+is what keeps interpret mode bit-identical to ``ref`` at kv_bits=4.
 """
 from __future__ import annotations
 
@@ -16,6 +25,55 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.packing import pack_nibbles, unpack_nibbles
+
+KV_BLOCK = 32     # values sharing one bf16 microscaling scale
+KV4_QMAX = 7.0    # symmetric int4 grid: codes in [-8, 7]
+
+
+def kv4_check_head_dim(d: int) -> None:
+    """kv4 needs D % 32 == 0: one bf16 scale per 32-value block and two
+    codes per byte (32 | D implies 2 | D)."""
+    if d % KV_BLOCK != 0:
+        raise ValueError(
+            f"kv_bits=4 requires head_dim % {KV_BLOCK} == 0 (one bf16 scale "
+            f"per {KV_BLOCK}-value block, two int4 codes per byte); got "
+            f"head_dim={d}")
+
+
+def kv4_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Block-32 microscaling int4 quantization along the last axis.
+
+    x (..., D) fp -> (packed codes int8 (..., D//2), scales bf16
+    (..., D//32)).  Symmetric per block: ``scale = bf16(max|x_block| / 7)``;
+    codes are rounded against the bf16-ROUNDED scale (the exact value
+    :func:`kv4_dequant` reads back), so quantize -> dequant round-trips on
+    one grid.  The serving quantize-on-write path and the test-input
+    builders both call this, so the cache layout cannot drift.
+    """
+    d = x.shape[-1]
+    kv4_check_head_dim(d)
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], d // KV_BLOCK, KV_BLOCK)
+    bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
+    scales = (bound / KV4_QMAX).astype(jnp.bfloat16)
+    q = jnp.clip(jnp.round(xf / scales.astype(jnp.float32)[..., None]),
+                 -KV4_QMAX - 1.0, KV4_QMAX).astype(jnp.int8)
+    return pack_nibbles(q.reshape(*x.shape[:-1], d)), scales
+
+
+def kv4_dequant(packed: jax.Array, scales: jax.Array) -> jax.Array:
+    """In-register unpack + block-scale dequant: (..., D//2) int8 packed
+    codes + (..., D//32) bf16 scales -> (..., D) float32.
+
+    THE shared kv4 epilogue: the flash kernel bodies run it on (block_kv,
+    D//2) tiles, the ref oracles on (B, block_kv, Hkv, D//2) slices, and
+    the XLA fallbacks on the whole cache — same elementwise op order
+    everywhere, so interpret mode stays bit-identical to ``ref``.
+    """
+    codes = unpack_nibbles(packed)                       # (..., D) int32
+    block_scale = jnp.repeat(scales.astype(jnp.float32), KV_BLOCK, axis=-1)
+    return codes.astype(jnp.float32) * block_scale
 
 
 def _pack_block(codes: jax.Array, bits: int) -> jax.Array:

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import unpack
+from repro.kernels.quantize_pack import kv4_dequant
 
 
 def dequant_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
@@ -103,8 +104,10 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      out_dtype=None) -> jax.Array:
     """Tile-structured flash-decode oracle (the fused kernel's contract).
 
-    q (B, Hkv, G, D); k/v (B, S, Hkv, D) — int8 codes when ``k_scale`` /
-    ``v_scale`` (B, S, Hkv) f32 are given, fp otherwise; cur_len (B,) valid
+    q (B, Hkv, G, D); k/v (B, S, Hkv, D) — kv8 int8 codes when 3D
+    ``k_scale`` / ``v_scale`` (B, S, Hkv) f32 are given, kv4 packed nibbles
+    (B, S, Hkv, D//2) when the scales are 4D (B, S, Hkv, D//32) bf16 block
+    grids, fp otherwise; cur_len (B,) valid
     positions. Mirrors ``flash_decode.flash_decode`` op-for-op: the same
     per-tile dequant → scores → mask → online-softmax update sequence, with
     masked (``jnp.where``) state updates standing in for the kernel's
@@ -117,6 +120,7 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     s = k.shape[1]
     assert s % block_kv == 0, (s, block_kv)
     n_tiles = s // block_kv
+    packed = k_scale is not None and k_scale.ndim == k.ndim
     scale = scale if scale is not None else d ** -0.5
     cur = cur_len.astype(jnp.int32)[:, None, None, None]
     qf = q.astype(jnp.float32)
@@ -125,11 +129,17 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     acc = jnp.zeros((bsz, hkv, g, d), jnp.float32)
     for t in range(n_tiles):
         sl = slice(t * block_kv, (t + 1) * block_kv)
-        kt = k[:, sl].astype(jnp.float32)
-        vt = v[:, sl].astype(jnp.float32)
-        if k_scale is not None:
-            kt = kt * k_scale[:, sl][..., None]
-            vt = vt * v_scale[:, sl][..., None]
+        if packed:
+            # SAME kv4_dequant the kernel body runs — elementwise, so the
+            # extra batch/head ranks change nothing bit-wise
+            kt = kv4_dequant(k[:, sl], k_scale[:, sl])
+            vt = kv4_dequant(v[:, sl], v_scale[:, sl])
+        else:
+            kt = k[:, sl].astype(jnp.float32)
+            vt = v[:, sl].astype(jnp.float32)
+            if k_scale is not None:
+                kt = kt * k_scale[:, sl][..., None]
+                vt = vt * v_scale[:, sl][..., None]
         sc = jnp.einsum("bhgd,bkhd->bhgk", qf, kt,
                         preferred_element_type=jnp.float32) * scale
         pos = t * block_kv + jax.lax.broadcasted_iota(
@@ -156,8 +166,10 @@ def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
     """Tile-mirroring oracle for the paged flash-decode kernel.
 
     q (B, Hkv, G, D); ``k_pool``/``v_pool`` are page pools
-    (num_pages, page_size, Hkv, D) — int8 codes when ``k_scale``/``v_scale``
-    pools (num_pages, page_size, Hkv) f32 are given, fp otherwise;
+    (num_pages, page_size, Hkv, Dk) — kv8 int8 codes (Dk = D) when
+    ``k_scale``/``v_scale`` pools (num_pages, page_size, Hkv) f32 are
+    given, kv4 packed nibbles (Dk = D//2) when the scale pools are 4D
+    (num_pages, page_size, Hkv, D//32) bf16, fp otherwise;
     ``page_table`` (B, max_pages_per_seq) int32 (−1 = unallocated);
     ``cur_len`` (B,) valid positions.  One tile == one page: tile ``t``
     gathers pool page ``page_table[:, t]`` and runs the exact per-tile
@@ -173,6 +185,7 @@ def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
     bsz, hkv, g, d = q.shape
     ps = k_pool.shape[1]
     n_tiles = page_table.shape[1]
+    packed = k_scale is not None and k_scale.ndim == k_pool.ndim
     scale = scale if scale is not None else d ** -0.5
     cur = cur_len.astype(jnp.int32)[:, None, None, None]
     qf = q.astype(jnp.float32)
@@ -181,11 +194,16 @@ def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
     acc = jnp.zeros((bsz, hkv, g, d), jnp.float32)
     for t in range(n_tiles):
         pages = jnp.maximum(page_table[:, t], 0)          # (B,)
-        kt = k_pool[pages].astype(jnp.float32)            # (B, ps, Hkv, D)
-        vt = v_pool[pages].astype(jnp.float32)
-        if k_scale is not None:
-            kt = kt * k_scale[pages][..., None]
-            vt = vt * v_scale[pages][..., None]
+        if packed:
+            # SAME kv4_dequant the kernel body runs, on the gathered pages
+            kt = kv4_dequant(k_pool[pages], k_scale[pages])
+            vt = kv4_dequant(v_pool[pages], v_scale[pages])
+        else:
+            kt = k_pool[pages].astype(jnp.float32)        # (B, ps, Hkv, D)
+            vt = v_pool[pages].astype(jnp.float32)
+            if k_scale is not None:
+                kt = kt * k_scale[pages][..., None]
+                vt = vt * v_scale[pages][..., None]
         sc = jnp.einsum("bhgd,bkhd->bhgk", qf, kt,
                         preferred_element_type=jnp.float32) * scale
         pos = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
@@ -211,8 +229,10 @@ def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     """Tile-structured chunked-prefill oracle (the fused kernel's contract).
 
     q (B, Hkv, C, G, D) — a C-token query chunk at absolute positions
-    ``offset[b] + i`` attending the cache k/v (B, S, Hkv, D) — int8 codes
-    when ``k_scale``/``v_scale`` (B, S, Hkv) f32 are given, fp otherwise —
+    ``offset[b] + i`` attending the cache k/v (B, S, Hkv, D) — kv8 int8
+    codes when 3D ``k_scale``/``v_scale`` (B, S, Hkv) f32 are given, kv4
+    packed nibbles (B, S, Hkv, D//2) when the scales are 4D
+    (B, S, Hkv, D//32) bf16 block grids, fp otherwise —
     **as stored**, with the chunk's own K/V already written.  Mirrors
     ``flash_prefill.flash_prefill`` op-for-op: the same per-tile dequant →
     scores → causal/pad mask → online-softmax update sequence, with masked
@@ -227,6 +247,7 @@ def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     s = k.shape[1]
     assert s % block_kv == 0, (s, block_kv)
     n_tiles = s // block_kv
+    packed = k_scale is not None and k_scale.ndim == k.ndim
     r = c * g
     scale = scale if scale is not None else d ** -0.5
     off = offset.astype(jnp.int32)[:, None, None, None]
@@ -242,11 +263,16 @@ def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     acc = jnp.zeros((bsz, hkv, r, d), jnp.float32)
     for t in range(n_tiles):
         sl = slice(t * block_kv, (t + 1) * block_kv)
-        kt = k[:, sl].astype(jnp.float32)
-        vt = v[:, sl].astype(jnp.float32)
-        if k_scale is not None:
-            kt = kt * k_scale[:, sl][..., None]
-            vt = vt * v_scale[:, sl][..., None]
+        if packed:
+            # SAME kv4_dequant the kernel body runs
+            kt = kv4_dequant(k[:, sl], k_scale[:, sl])
+            vt = kv4_dequant(v[:, sl], v_scale[:, sl])
+        else:
+            kt = k[:, sl].astype(jnp.float32)
+            vt = v[:, sl].astype(jnp.float32)
+            if k_scale is not None:
+                kt = kt * k_scale[:, sl][..., None]
+                vt = vt * v_scale[:, sl][..., None]
         sc = jnp.einsum("bhrd,bkhd->bhrk", qf, kt,
                         preferred_element_type=jnp.float32) * scale
         kv_pos = (t * block_kv + jax.lax.broadcasted_iota(
@@ -289,6 +315,7 @@ def flash_prefill_paged_ref(q: jax.Array, k_pool: jax.Array,
     bsz, hkv, c, g, d = q.shape
     ps = k_pool.shape[1]
     n_tiles = page_table.shape[1]
+    packed = k_scale is not None and k_scale.ndim == k_pool.ndim
     r = c * g
     scale = scale if scale is not None else d ** -0.5
     off = offset.astype(jnp.int32)[:, None, None, None]
@@ -304,11 +331,16 @@ def flash_prefill_paged_ref(q: jax.Array, k_pool: jax.Array,
     acc = jnp.zeros((bsz, hkv, r, d), jnp.float32)
     for t in range(n_tiles):
         pages = jnp.maximum(page_table[:, t], 0)          # (B,)
-        kt = k_pool[pages].astype(jnp.float32)            # (B, ps, Hkv, D)
-        vt = v_pool[pages].astype(jnp.float32)
-        if k_scale is not None:
-            kt = kt * k_scale[pages][..., None]
-            vt = vt * v_scale[pages][..., None]
+        if packed:
+            # SAME kv4_dequant the kernel body runs, on the gathered pages
+            kt = kv4_dequant(k_pool[pages], k_scale[pages])
+            vt = kv4_dequant(v_pool[pages], v_scale[pages])
+        else:
+            kt = k_pool[pages].astype(jnp.float32)        # (B, ps, Hkv, D)
+            vt = v_pool[pages].astype(jnp.float32)
+            if k_scale is not None:
+                kt = kt * k_scale[pages][..., None]
+                vt = vt * v_scale[pages][..., None]
         sc = jnp.einsum("bhrd,bkhd->bhrk", qf, kt,
                         preferred_element_type=jnp.float32) * scale
         kv_pos = (t * ps + jax.lax.broadcasted_iota(

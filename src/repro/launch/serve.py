@@ -81,8 +81,10 @@ def main(argv=None) -> int:
                     help="activation bits for the packed path (16 = fp "
                          "activations; 8/4 = fused int-activation kernel)")
     ap.add_argument("--kvbits", type=int, default=16,
-                    help="KV-cache bits for the packed path (16 = model "
-                         "dtype; 8/4 = int8-coded cache + per-token scales)")
+                    help="KV-cache bits for the packed path (>= 16 = model "
+                         "dtype; 8 = int8 codes + per-(token, head) f32 "
+                         "scales; 4 = packed int4 nibbles + bf16 block-32 "
+                         "microscaling scales)")
     ap.add_argument("--kernel-mode", default="auto",
                     choices=["auto", "pallas", "interpret", "ref"],
                     help="kernel dispatch for the packed path (see module "
@@ -105,6 +107,13 @@ def main(argv=None) -> int:
                          "sizing: max_batch * pages(prompt_len + max_new))")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # fail loudly on cache widths no kernel serves — a typo like
+    # --kvbits 6 must not silently fall back to the fp cache path
+    if args.kvbits < 16 and args.kvbits not in (4, 8):
+        ap.error(f"--kvbits {args.kvbits} unsupported: use 4 (packed int4 "
+                 "+ bf16 block-32 scales), 8 (int8 + f32 per-(token, head) "
+                 "scales), or >= 16 (fp cache)")
 
     cfg = get_config(args.arch)
     model = build_model(cfg)

@@ -436,6 +436,17 @@ def forward(params, cfg, tokens=None, prefix_embeds=None,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    """Linear fp decode cache: ``k``/``v`` (L, B, S, Hkv, D) + ``len`` (B,).
+
+    Cache layout CONTRACT (shared with ``serve/kv_cache.py`` and
+    ``serve/quantized.py``): entries with a sequence axis keep it at
+    position 2, leading dims are always (L, B, S, ...).  Quantized serving
+    narrows/splits only the TRAILING dims — kv8 stores int8 codes at the
+    same shape plus f32 ``k_scale``/``v_scale`` (L, B, S, Hkv); kv4 stores
+    packed int4 nibbles (L, B, S, Hkv, D//2) plus bf16 block-32 scales
+    (L, B, S, Hkv, D//32) — so splice/write/shard helpers that only touch
+    the leading dims work on every format unchanged.
+    """
     hd = cfg.resolved_head_dim
     dtype = dtype or jnp.dtype(cfg.dtype)
     s = min(max_len, cfg.window) if cfg.window else max_len

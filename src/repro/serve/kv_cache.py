@@ -6,11 +6,13 @@ max_len`` slab per slot, so a 512-token request in a 32k-slot engine wastes
 ~98% of the int8 cache the quantized pipeline worked to shrink.  The paged
 layout (vLLM-style) carves the cache into fixed-size pages:
 
-    pool          k / v: (L, num_pages, page_size, Hkv, D)
-                  int8 codes when ``kv_bits < 16`` (plus per-(token, head)
-                  f32 scale pools (L, num_pages, page_size, Hkv)), fp pages
-                  otherwise — the exact per-token layout of the linear cache,
-                  just page-blocked
+    pool          k / v: (L, num_pages, page_size, Hkv, Dk)
+                  fp pages at ``kv_bits >= 16`` (Dk = D); int8 codes at
+                  kv8 (Dk = D, plus per-(token, head) f32 scale pools
+                  (L, num_pages, page_size, Hkv)); packed int4 nibbles at
+                  kv4 (Dk = D//2, plus bf16 block-32 scale pools
+                  (L, num_pages, page_size, Hkv, D//32)) — the exact
+                  per-token layout of the linear cache, just page-blocked
     page tables   (max_batch, max_pages_per_seq) int32 — logical page ``j``
                   of sequence ``b`` lives in pool page ``page_table[b, j]``;
                   ``-1`` marks an unallocated logical page
@@ -46,9 +48,11 @@ from repro.utils import ceil_div, tree_bytes
 class PagedKVCache:
     """Device-side paged cache state (the decode step's carry).
 
-    ``k``/``v``: (L, num_pages, page_size, Hkv, D) pools — int8 codes or fp.
-    ``k_scale``/``v_scale``: (L, num_pages, page_size, Hkv) f32, or None
-    when the cache stores fp pages (``kv_bits >= 16``).
+    ``k``/``v``: (L, num_pages, page_size, Hkv, Dk) pools — fp, int8 codes
+    (Dk = D), or kv4 packed nibbles (Dk = D//2).
+    ``k_scale``/``v_scale``: (L, num_pages, page_size, Hkv) f32 at kv8,
+    (L, num_pages, page_size, Hkv, D//32) bf16 at kv4, or None when the
+    cache stores fp pages (``kv_bits >= 16``).
     ``page_table``: (max_batch, max_pages_per_seq) int32; -1 = unallocated.
     ``lens``: (B,) int32 valid positions per sequence.
     """
@@ -177,8 +181,13 @@ def paged_cache_logical_axes(cache: PagedKVCache) -> dict:
             "lens": ("batch",),
             "k_scale": None, "v_scale": None}
     if cache.k_scale is not None:
-        axes["k_scale"] = ("layers", "kv_pages", None, None)
-        axes["v_scale"] = ("layers", "kv_pages", None, None)
+        # kv8 scale pools are 4D; kv4 block-scale pools keep a 5th
+        # (block) axis and shard like the code pools
+        sc = ("layers", "kv_pages", None, None)
+        if cache.k_scale.ndim == 5:
+            sc = ("layers", "kv_pages", None, None, None)
+        axes["k_scale"] = sc
+        axes["v_scale"] = sc
     return axes
 
 
@@ -189,12 +198,22 @@ def pages_for(length: int, page_size: int) -> int:
 def make_paged_cache(*, num_layers: int, num_kv_heads: int, head_dim: int,
                      batch: int, num_pages: int, page_size: int,
                      max_pages_per_seq: int, dtype,
-                     quantized: bool) -> PagedKVCache:
+                     quantized: bool, kv_bits: int = 8) -> PagedKVCache:
     """The one pool constructor both the fp and packed model paths call —
-    int8 code pages + f32 scale pages when ``quantized``, ``dtype`` pages
-    otherwise — so the paged layout cannot diverge between them."""
+    code pages + scale pages when ``quantized`` (int8 + f32 at
+    ``kv_bits=8``; packed int4 nibbles + bf16 block-32 scales at
+    ``kv_bits=4``), ``dtype`` pages otherwise — so the paged layout cannot
+    diverge between them."""
     shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
-    if quantized:
+    if quantized and kv_bits == 4:
+        from repro.kernels.quantize_pack import KV_BLOCK, kv4_check_head_dim
+        kv4_check_head_dim(head_dim)
+        shape = shape[:-1] + (head_dim // 2,)
+        sshape = shape[:-1] + (head_dim // KV_BLOCK,)
+        kdt = jnp.int8
+        ks = jnp.zeros(sshape, jnp.bfloat16)
+        vs = jnp.zeros(sshape, jnp.bfloat16)
+    elif quantized:
         kdt = jnp.int8
         ks = jnp.zeros(shape[:-1], jnp.float32)
         vs = jnp.zeros(shape[:-1], jnp.float32)

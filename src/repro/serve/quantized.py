@@ -25,9 +25,12 @@ setting): every packed matmul routes through ``kernels.ops.quant_matmul``,
 which fuses per-token dynamic activation quantization into the int-MXU
 kernel — activations hit the MXU as int8 lanes, never materialized in int8
 in HBM, and there is no fp-activation fallback in the decode path.
-``qcfg.kv_bits < 16`` additionally stores the KV cache as int8 codes with a
-per-(token, head) float32 scale (quantize-on-write in prefill and decode),
-cutting long-context decode cache memory ~2x. Decode attention reads the
+``qcfg.kv_bits < 16`` additionally quantizes the KV cache on write (prefill
+and decode): ``kv_bits=8`` stores int8 codes with a per-(token, head)
+float32 scale (~2x cache memory), ``kv_bits=4`` stores packed int4 nibbles
+(two codes per byte along head_dim) with one bf16 scale per block of 32
+values (~4x codes, and scale overhead down from 4 B per (token, head) row
+to 2 B per 32 values). Decode attention reads the
 cache **as stored** through ``kernels.ops.flash_decode`` (DESIGN.md §8): the
 fused Pallas kernel dequantizes per KV tile in registers and bounds work to
 the valid ``cur_len`` tiles — no full-cache fp materialization, no
@@ -60,6 +63,8 @@ from repro.configs.base import ModelConfig
 from repro.core.qtensor import QTensor, tree_has_qtensor
 from repro.core.quantizer import QuantConfig, quantize_codes
 from repro.kernels import ops
+from repro.kernels.quantize_pack import (KV_BLOCK, kv4_check_head_dim,
+                                         kv4_quantize)
 from repro.models import layers
 from repro.models.model import build_model
 from repro.models.transformer import sinusoidal_at
@@ -125,13 +130,20 @@ def _act_transform(t: Optional[dict], h: jax.Array) -> jax.Array:
 
 def _kv_quantize(x: jax.Array, kv_bits: int
                  ) -> tuple[jax.Array, jax.Array]:
-    """Symmetric per-(token, head) KV quantization into int8 lanes.
+    """Quantize-on-write entry point for the KV cache, both formats.
 
+    ``kv_bits=8``: symmetric per-(token, head) int8 —
     x (..., H, D) -> (codes int8 (..., H, D), scale f32 (..., H)).
-    ``kv_bits=4`` uses the [-8, 7] sub-range of the int8 container (the
-    storage win beyond int8 would need nibble packing of the cache — not
-    worth the unpack on the attention read path at current batch sizes).
+
+    ``kv_bits=4``: block-32 microscaling sub-byte layout
+    (:func:`repro.kernels.quantize_pack.kv4_quantize`) —
+    x (..., H, D) -> (packed nibbles int8 (..., H, D//2), scales bf16
+    (..., H, D//32)).  The cache write helpers are generic over trailing
+    dims, so both layouts ride the same destination formulas; the kernels
+    tell them apart by the scale's rank (kv4 scales are code-rank).
     """
+    if kv_bits == 4:
+        return kv4_quantize(x)
     xf = x.astype(jnp.float32)
     qmax = 2.0 ** (kv_bits - 1) - 1.0
     bound = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
@@ -155,9 +167,16 @@ class QuantizedModel:
         # int-lane widths only: 9..15 would wrap on the int8 cast
         if self.qcfg.a_bits < 16 and not 2 <= self.qcfg.a_bits <= 8:
             raise ValueError(f"a_bits={self.qcfg.a_bits}: use 2..8 or >= 16")
-        if self.qcfg.kv_bits < 16 and not 2 <= self.qcfg.kv_bits <= 8:
-            raise ValueError(f"kv_bits={self.qcfg.kv_bits}: use 2..8 or "
-                             ">= 16")
+        # the cache has exactly three layouts: fp (>= 16), int8 codes +
+        # per-(token, head) f32 scales (8), packed nibbles + block-32 bf16
+        # scales (4) — anything else would silently serve a layout no
+        # kernel reads
+        if self.qcfg.kv_bits < 16 and self.qcfg.kv_bits not in (4, 8):
+            raise ValueError(f"kv_bits={self.qcfg.kv_bits}: use 4 (packed "
+                             "int4 + block-32 bf16 scales), 8 (int8 + "
+                             "per-(token, head) f32 scales), or >= 16 (fp)")
+        if self.qcfg.kv_bits == 4:
+            kv4_check_head_dim(self.cfg.resolved_head_dim)
         if self.cfg.window:
             # the packed decode uses a linear drop-at-capacity cache and the
             # flash kernel masks a contiguous valid prefix — ring-buffer
@@ -191,16 +210,25 @@ class QuantizedModel:
         chunked and whole-prompt admission are token-identical."""
         return True
 
-    # cache API identical to Model (int8 codes + per-(token, head) scales
-    # when kv_bits < 16)
+    # cache API identical to Model (quantized serving narrows/splits the
+    # trailing dims when kv_bits < 16 — see models.transformer.init_cache)
     def init_cache(self, batch: int, max_len: int) -> dict:
         model = build_model(self.cfg)
         if not self._kv_quantized:
             return model.init_cache(batch, max_len)
         # shape-only query — materializing the fp cache here would cost the
-        # very allocation the int8 cache exists to avoid
+        # very allocation the quantized cache exists to avoid
         base = jax.eval_shape(lambda: model.init_cache(batch, max_len))
         kshape = base["k"].shape
+        if self.qcfg.kv_bits == 4:
+            d = kshape[-1]
+            return {"k": jnp.zeros(kshape[:-1] + (d // 2,), jnp.int8),
+                    "v": jnp.zeros(kshape[:-1] + (d // 2,), jnp.int8),
+                    "k_scale": jnp.zeros(kshape[:-1] + (d // KV_BLOCK,),
+                                         jnp.bfloat16),
+                    "v_scale": jnp.zeros(kshape[:-1] + (d // KV_BLOCK,),
+                                         jnp.bfloat16),
+                    "len": jnp.zeros((batch,), jnp.int32)}
         return {"k": jnp.zeros(kshape, jnp.int8),
                 "v": jnp.zeros(kshape, jnp.int8),
                 "k_scale": jnp.zeros(kshape[:-1], jnp.float32),
@@ -209,10 +237,11 @@ class QuantizedModel:
 
     def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
                          max_pages_per_seq: int):
-        """Paged pool cache (``repro.serve.kv_cache.PagedKVCache``): int8
-        code pages + f32 scale pages when ``kv_bits < 16``, fp pages
-        otherwise.  Same per-token layout as the linear cache, page-blocked
-        so pool memory tracks live tokens instead of ``batch * max_len``."""
+        """Paged pool cache (``repro.serve.kv_cache.PagedKVCache``): code
+        pages + scale pages when ``kv_bits < 16`` (int8 + f32 at kv8,
+        packed nibbles + block-32 bf16 at kv4), fp pages otherwise.  Same
+        per-token layout as the linear cache, page-blocked so pool memory
+        tracks live tokens instead of ``batch * max_len``."""
         from repro.serve.kv_cache import make_paged_cache
         cfg = self.cfg
         return make_paged_cache(
@@ -220,7 +249,7 @@ class QuantizedModel:
             head_dim=cfg.resolved_head_dim, batch=batch,
             num_pages=num_pages, page_size=page_size,
             max_pages_per_seq=max_pages_per_seq, dtype=cfg.dtype,
-            quantized=self._kv_quantized)
+            quantized=self._kv_quantized, kv_bits=self.qcfg.kv_bits)
 
     def cache_specs(self, batch: int, max_len: int) -> dict:
         cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
@@ -672,7 +701,11 @@ class QuantizedModel:
             return paged_cache_logical_axes(cache_specs)
         axes = build_model(self.cfg).cache_logical_axes(cache_specs)
         if "k_scale" in cache_specs:
-            # int8 KV cache: scales shadow the code tensors minus head_dim
-            axes["k_scale"] = ("layers", "batch", "kv_seq", None)
-            axes["v_scale"] = ("layers", "batch", "kv_seq", None)
+            # quantized KV cache: scales shadow the code tensors — kv8
+            # drops the head_dim axis, kv4 keeps a (narrower) block axis
+            sc = ("layers", "batch", "kv_seq", None)
+            if cache_specs["k_scale"].ndim == 5:
+                sc = ("layers", "batch", "kv_seq", None, None)
+            axes["k_scale"] = sc
+            axes["v_scale"] = sc
         return axes

@@ -17,10 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# the canonical sweep axes: quantized + fp cache, MQA + GQA, multi-tile +
-# single-tile blocks (tests parametrize over these so every kernel family
-# covers the same grid)
-KV_BITS = (8, 16)
+from repro.kernels.quantize_pack import kv4_dequant, kv4_quantize
+
+# the canonical sweep axes: packed kv4 + int8 kv8 + fp cache, MQA + GQA,
+# multi-tile + single-tile blocks (tests parametrize over these so every
+# kernel family covers the same grid)
+KV_BITS = (4, 8, 16)
 GQA_GROUPS = (1, 4)
 KV_BLOCKS = (16, 64)
 
@@ -46,8 +48,9 @@ def quantize_kv(x, kv_bits):
 def make_cache_inputs(key, b, s, hkv, g, d, kv_bits, chunk=1):
     """Random q + linear cache in the serving layout.
 
-    Returns (q (B, chunk, Hq, D), kv tuple as the model carries it — int8
-    codes + per-(token, head) f32 scales for kv_bits < 16, fp otherwise —
+    Returns (q (B, chunk, Hq, D), kv tuple as the model carries it —
+    packed-nibble int8 codes + bf16 block-32 scales for kv_bits == 4, int8
+    codes + per-(token, head) f32 scales for kv_bits == 8, fp otherwise —
     and the dequantized (k, v) for oracle checks).
     """
     hq = hkv * g
@@ -56,6 +59,11 @@ def make_cache_inputs(key, b, s, hkv, g, d, kv_bits, chunk=1):
     vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
     if kv_bits >= 16:
         return q, (kf, vf), (kf, vf)
+    if kv_bits == 4:
+        kq, ks = kv4_quantize(kf)
+        vq, vs = kv4_quantize(vf)
+        deq = (kv4_dequant(kq, ks), kv4_dequant(vq, vs))
+        return q, (kq, vq, ks, vs), deq
     kq, ks = quantize_kv(kf, kv_bits)
     vq, vs = quantize_kv(vf, kv_bits)
     deq = (kq.astype(jnp.float32) * ks[..., None],
@@ -89,6 +97,11 @@ def make_paged_inputs(key, b, hkv, g, d, page_size, lens, kv_bits,
                            (num_pages, page_size, hkv, d))
     if kv_bits >= 16:
         return q, (kf, vf), jnp.asarray(pt), (kf, vf)
+    if kv_bits == 4:
+        kq, ks = kv4_quantize(kf)
+        vq, vs = kv4_quantize(vf)
+        deq = (kv4_dequant(kq, ks), kv4_dequant(vq, vs))
+        return q, (kq, vq, ks, vs), jnp.asarray(pt), deq
     kq, ks = quantize_kv(kf, kv_bits)
     vq, vs = quantize_kv(vf, kv_bits)
     deq = (kq.astype(jnp.float32) * ks[..., None],

@@ -6,7 +6,8 @@ conserves the page pool.
 Invariants per trace (the scheduler's contracts, DESIGN.md §9-§10):
   * **token identity**: chunked admission == whole-prompt-bucketed
     admission == solo runs of each prompt, across linear and paged caches
-    and kv_bits 8/16 (ref kernels, tile == page) — including traces that
+    and kv_bits 4/8/16 (ref kernels, tile == page) — packed int4 pages
+    round-trip through evictions byte-exactly — including traces that
     force preemption (evict + resume round-trips, mid-prefill included);
   * **FIFO**: first tokens are emitted in submission order, and (uniform
     max_new, no preemption) requests complete in submission order;
@@ -50,7 +51,7 @@ _SERVED: dict = {}
 
 
 def _served(kv_bits):
-    """llama-micro on the w8 packed stack (kv8 or fp cache), ref kernels,
+    """llama-micro on the w8 packed stack (kv4/kv8/fp cache), ref kernels,
     tile == page — built once per bit-width, shared across traces."""
     if kv_bits not in _SERVED:
         cfg = get_config("llama-micro")
@@ -181,6 +182,22 @@ def test_trace_equivalence_seeded_kv8():
                       prefill_chunk=8, kv_bits=8, pool_slack=4, seed=1))
 
 
+def test_trace_equivalence_seeded_kv4():
+    """Same mixed-length trace on the packed int4 cache: chunked == whole
+    == solo token identity with nibble-packed KV pages, including chunk
+    boundaries landing on odd positions (13 -> mid-byte-pair writes)."""
+    check_trace(Trace(prompt_lens=(13, 3, 26), max_new=5, max_batch=2,
+                      prefill_chunk=8, kv_bits=4, pool_slack=4, seed=1))
+
+
+def test_trace_equivalence_seeded_pressure_kv4():
+    """Pool pressure at kv_bits=4: eviction + resume must round-trip the
+    packed codes AND the bf16 block scales exactly."""
+    check_trace(Trace(prompt_lens=(15, 14, 13), max_new=16, max_batch=3,
+                      prefill_chunk=4, kv_bits=4, pool_slack=2, seed=2),
+                solo=False, expect_preempt=True)
+
+
 def test_trace_equivalence_seeded_pressure_kv16():
     """Three growing sequences against a pool sized to force eviction
     (mid-flight preemption + resume), kv16, no solo re-runs."""
@@ -201,7 +218,7 @@ if HAVE_HYPOTHESIS:
         max_new=st.integers(1, 6),
         max_batch=st.integers(1, 3),
         prefill_chunk=st.sampled_from([4, 8, 16]),
-        kv_bits=st.sampled_from([8, 16]),
+        kv_bits=st.sampled_from([4, 8, 16]),
         pool_slack=st.integers(0, 4),
         seed=st.integers(0, 2 ** 16),
     )

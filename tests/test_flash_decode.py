@@ -44,7 +44,7 @@ def test_flash_decode_interpret_bit_identical_to_ref(kv_bits, g, block_kv):
 def test_flash_decode_matches_fallback_and_oracle(kv_bits, g):
     """Kernel vs decode_attention (the portable fallback, via mode='auto'
     off-TPU) vs a from-scratch numpy softmax — three independent paths."""
-    b, s, hkv, d = 3, 48, 2, 16
+    b, s, hkv, d = 3, 48, 2, 32
     key = jax.random.PRNGKey(kv_bits + g)
     q, kv, (k_fp, v_fp) = kc.make_cache_inputs(key, b, s, hkv, g, d, kv_bits)
     cur = jnp.array([1, 23, s - 1], jnp.int32)
@@ -60,6 +60,16 @@ def test_flash_decode_interpret_smoke():
     y = ops.flash_decode(q, kv, jnp.array([3, 16], jnp.int32),
                          mode="interpret")
     assert y.shape == (2, 1, 4, 8) and bool(jnp.isfinite(y).all())
+
+
+def test_flash_decode_kv4_interpret_smoke():
+    """Tiny packed-nibble interpret run (the CI kv4 canary): ragged
+    cur_len lands mid-block so the scale-broadcast masking is exercised."""
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(0), 2, 16, 2, 2, 32, 4)
+    assert kv[0].shape[-1] == 16 and kv[2].dtype == jnp.bfloat16
+    y = ops.flash_decode(q, kv, jnp.array([5, 16], jnp.int32),
+                         mode="interpret")
+    assert y.shape == (2, 1, 4, 32) and bool(jnp.isfinite(y).all())
 
 
 def test_flash_decode_zero_length_rows_return_zeros():
@@ -98,15 +108,18 @@ def test_flash_decode_rejects_bad_inputs():
 # serving integration: no full-cache dequant, capacity semantics
 # ---------------------------------------------------------------------------
 
-def test_decode_step_kv8_has_no_full_cache_dequantize():
-    """Acceptance: kv_bits=8 decode on the fused path carries NO fp
-    (B, S, Hkv, D) intermediate — the int8 cache is dequantized per tile in
-    registers only. The `auto` (off-TPU decode_attention fallback) jaxpr is
-    the positive control: it DOES materialize the fp cache, proving the
-    traversal would catch one."""
+@pytest.mark.parametrize("kv_bits", [4, 8])
+def test_decode_step_quantized_has_no_full_cache_dequantize(kv_bits):
+    """Acceptance: kv_bits=8 AND kv_bits=4 decode on the fused path carry
+    NO fp (B, S, Hkv, D) intermediate — the int8 / packed-nibble cache is
+    dequantized per tile in registers only (kv4's bf16 block scales are
+    (B, S, Hkv, D//32), far from the matcher's (S, Hkv, D) tail). The
+    `auto` (off-TPU decode_attention fallback) jaxpr is the positive
+    control: it DOES materialize the fp cache, proving the traversal would
+    catch one."""
     cfg = get_config("llama-micro")
     qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
-                       kv_bits=8)
+                       kv_bits=kv_bits)
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     packed = quantize_lm_packed(params, cfg, qcfg)
     b, s = 2, 24

@@ -13,9 +13,9 @@ Contract under test (DESIGN.md §10), via ``tests/kernel_conformance``:
     resume exact;
   * ``prefill_chunk`` == whole-prompt ``prefill`` at the model level
     (logits, cache contents, subsequent decode), both cache layouts;
-  * the kv8 prefill path carries NO fp (B, S, Hkv, D) cache intermediate
-    (jaxpr traversal, XLA fallback as positive control) — the regression
-    guard for fused quantize-on-write;
+  * the kv8 and kv4 prefill paths carry NO fp (B, S, Hkv, D) cache
+    intermediate (jaxpr traversal, XLA fallback as positive control) — the
+    regression guard for fused quantize-on-write;
   * pad rows (chunk_len masking) neither write the cache nor attend.
 """
 
@@ -79,7 +79,7 @@ def test_prefill_paged_interpret_bit_identical_to_ref(kv_bits, g, page_size):
 def test_prefill_matches_fallback_and_oracle(kv_bits):
     """Fused kernel vs the XLA chunk_prefill_attention fallback (mode
     'auto' off-TPU) vs a from-scratch numpy softmax per (row, position)."""
-    b, s, hkv, g, d = 3, 48, 2, 2, 16
+    b, s, hkv, g, d = 3, 48, 2, 2, 32
     q, kv, (k_fp, v_fp) = kc.make_cache_inputs(
         jax.random.PRNGKey(kv_bits), b, s, hkv, g, d, kv_bits, chunk=CHUNK)
     off = jnp.asarray([0, 11, s - CHUNK], jnp.int32)
@@ -113,6 +113,15 @@ def test_prefill_interpret_smoke():
     y = ops.flash_prefill(q, kv, jnp.zeros((2,), jnp.int32),
                           jnp.asarray([4, 2], jnp.int32), mode="interpret")
     assert y.shape == (2, 4, 4, 8) and bool(jnp.isfinite(y).all())
+
+
+def test_prefill_kv4_interpret_smoke():
+    """Tiny packed-nibble prefill interpret run (the CI kv4 canary)."""
+    q, kv, _ = kc.make_cache_inputs(jax.random.PRNGKey(0), 2, 16, 2, 2, 32,
+                                    4, chunk=4)
+    y = ops.flash_prefill(q, kv, jnp.zeros((2,), jnp.int32),
+                          jnp.asarray([4, 2], jnp.int32), mode="interpret")
+    assert y.shape == (2, 4, 4, 32) and bool(jnp.isfinite(y).all())
 
 
 def test_prefill_pad_rows_return_zeros():
@@ -305,15 +314,17 @@ def test_unsupported_families_reject_chunked_prefill():
 # no fp cache materialization on the fused quantize-on-write path
 # ---------------------------------------------------------------------------
 
-def test_prefill_chunk_kv8_has_no_fp_cache_intermediate(micro):
-    """Acceptance: the kv8 chunked-prefill path carries NO fp
+@pytest.mark.parametrize("kv_bits", [4, 8])
+def test_prefill_chunk_quantized_has_no_fp_cache_intermediate(micro,
+                                                              kv_bits):
+    """Acceptance: the kv8 AND kv4 chunked-prefill paths carry NO fp
     (B, S, Hkv, D) cache intermediate — the chunk is quantized on write
     ((B, C, Hkv, D) fp only, C < S) and attention dequantizes per tile in
     registers.  The XLA-fallback jaxpr is the positive control (it
     dequantizes the full cache)."""
     cfg, _, params = micro
     qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
-                       kv_bits=8)
+                       kv_bits=kv_bits)
     packed = quantize_lm_packed(params, cfg, qcfg)
     b, s, c = 2, 24, 6
     d = cfg.resolved_head_dim
@@ -333,12 +344,15 @@ def test_prefill_chunk_kv8_has_no_fp_cache_intermediate(micro):
     assert control, "positive control lost: fallback no longer materializes"
 
 
-def test_prefill_chunk_paged_kv8_has_no_logical_cache_gather(micro):
+@pytest.mark.parametrize("kv_bits", [4, 8])
+def test_prefill_chunk_paged_quantized_has_no_logical_cache_gather(micro,
+                                                                   kv_bits):
     """Paged mirror: the fused chunked-prefill path never gathers the page
-    table into a logical (B, S_log, Hkv, D) fp cache."""
+    table into a logical (B, S_log, Hkv, D) fp cache — at kv4 the pool
+    stays packed nibbles end to end."""
     cfg, _, params = micro
     qcfg = QuantConfig(w_bits=4, a_bits=8, group_size=32, lwc=False,
-                       kv_bits=8)
+                       kv_bits=kv_bits)
     packed = quantize_lm_packed(params, cfg, qcfg)
     b, ps, mpps, c = 2, 8, 3, 6
     d = cfg.resolved_head_dim

@@ -1,28 +1,56 @@
-"""Property tests for sub-byte packing."""
+"""Property + layout tests for sub-byte packing.
+
+The hypothesis-based property sweeps skip when hypothesis is absent; the
+deterministic kv4 nibble-layout tests below always run (they guard the
+serving cache format, not a statistical property).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - property sweeps need hypothesis
+    HAVE_HYPOTHESIS = False
 
-from repro.core.packing import pack, unpack, packed_rows
+from repro.core.packing import (pack, pack_nibbles, packed_rows, unpack,
+                                unpack_nibbles)
+from repro.kernels.quantize_pack import (KV_BLOCK, kv4_dequant,
+                                         kv4_quantize)
 
 
-@given(bits=st.integers(1, 8),
-       rows=st.sampled_from([8, 24, 64]),
-       cols=st.sampled_from([1, 7, 32]),
-       seed=st.integers(0, 2 ** 16))
-@settings(max_examples=40, deadline=None)
-def test_pack_roundtrip(bits, rows, cols, seed):
+if HAVE_HYPOTHESIS:
+    @given(bits=st.integers(1, 8),
+           rows=st.sampled_from([8, 24, 64]),
+           cols=st.sampled_from([1, 7, 32]),
+           seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=40, deadline=None)
+    def test_pack_roundtrip(bits, rows, cols, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 2 ** bits, (rows, cols)).astype(np.uint8)
+        p = pack(jnp.asarray(codes), bits)
+        assert p.shape == (packed_rows(rows, bits), cols)
+        u = unpack(p, bits, rows)
+        assert (np.asarray(u) == codes).all()
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_pack_roundtrip():
+        pass
+
+
+@pytest.mark.parametrize("bits,rows,cols,seed",
+                         [(1, 64, 7, 0), (3, 24, 32, 1), (4, 8, 1, 2),
+                          (7, 24, 7, 3), (8, 64, 32, 4)])
+def test_pack_roundtrip_seeded(bits, rows, cols, seed):
+    """Deterministic slice of the round-trip sweep (runs w/o hypothesis)."""
     rng = np.random.default_rng(seed)
     codes = rng.integers(0, 2 ** bits, (rows, cols)).astype(np.uint8)
     p = pack(jnp.asarray(codes), bits)
     assert p.shape == (packed_rows(rows, bits), cols)
-    u = unpack(p, bits, rows)
-    assert (np.asarray(u) == codes).all()
+    assert (np.asarray(unpack(p, bits, rows)) == codes).all()
 
 
 def test_pack_density():
@@ -37,3 +65,69 @@ def test_pack_jit_compatible():
     p = jax.jit(lambda c: pack(c, 4))(codes)
     u = jax.jit(lambda p: unpack(p, 4, 32))(p)
     assert (np.asarray(u) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# kv4 nibble layout (last-axis lane pairs + block-32 microscaling scales)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64,), (3, 32), (2, 5, 2, 64),
+                                   (1, 1, 128)])
+@pytest.mark.parametrize("seed", [0, 7, 2 ** 16 - 1])
+def test_nibble_roundtrip_signed(shape, seed):
+    """pack_nibbles/unpack_nibbles round-trips every signed int4 code —
+    including -8, whose high-bit sign extension is the usual bug."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, shape).astype(np.int8)
+    p = pack_nibbles(jnp.asarray(codes))
+    assert p.shape == shape[:-1] + (shape[-1] // 2,) and p.dtype == jnp.int8
+    u = unpack_nibbles(p)
+    assert (np.asarray(u) == codes).all()
+
+
+def test_nibble_roundtrip_exhaustive_codes():
+    """All 256 (low, high) nibble pairs, in one vector."""
+    lo, hi = np.meshgrid(np.arange(-8, 8), np.arange(-8, 8))
+    codes = np.stack([lo.ravel(), hi.ravel()], -1).reshape(-1).astype(np.int8)
+    u = np.asarray(unpack_nibbles(pack_nibbles(jnp.asarray(codes))))
+    np.testing.assert_array_equal(u, codes)
+
+
+def test_nibble_pack_rejects_odd_last_axis():
+    with pytest.raises(ValueError, match="even"):
+        pack_nibbles(jnp.zeros((4, 7), jnp.int8))
+
+
+def test_nibble_lane_order():
+    """Byte j holds codes[2j] in the low nibble, codes[2j+1] in the high
+    nibble — the layout the in-kernel unpack and DESIGN.md §11 assume."""
+    codes = jnp.asarray([1, 2, -3, -8], jnp.int8)
+    p = np.asarray(pack_nibbles(codes)).astype(np.uint8)
+    assert p[0] == (1 | (2 << 4)) & 0xFF
+    assert p[1] == ((-3 & 0xF) | ((-8 & 0xF) << 4)) & 0xFF
+
+
+@pytest.mark.parametrize("d", [32, 64, 128])
+@pytest.mark.parametrize("seed", [0, 11])
+def test_kv4_quantize_roundtrip_fixed_point(d, seed):
+    """Quantizing the dequantized output reproduces the SAME codes and
+    scales (bit-identical) — dequant lands exactly on the int4 grid of the
+    bf16-rounded scale, so quantize-on-write is idempotent."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 3, 2, d)), jnp.float32)
+    q, s = kv4_quantize(x)
+    assert q.shape == (2, 3, 2, d // 2) and q.dtype == jnp.int8
+    assert s.shape == (2, 3, 2, d // KV_BLOCK) and s.dtype == jnp.bfloat16
+    deq = kv4_dequant(q, s)
+    q2, s2 = kv4_quantize(deq)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s, np.float32),
+                                  np.asarray(s2, np.float32))
+    # and the dequantized error is bounded by half a step per block
+    step = np.asarray(s, np.float32).repeat(KV_BLOCK, axis=-1)
+    assert (np.abs(np.asarray(deq) - np.asarray(x)) <= 0.5 * step + 1e-7).all()
+
+
+def test_kv4_quantize_rejects_head_dim_not_multiple_of_32():
+    with pytest.raises(ValueError, match="head_dim % 32"):
+        kv4_quantize(jnp.zeros((2, 4, 2, 48), jnp.float32))

@@ -57,7 +57,7 @@ def test_paged_interpret_bit_identical_to_ref(kv_bits, g, page_size):
 def test_paged_matches_gather_fallback_and_oracle(kv_bits):
     """Fused paged kernel vs the XLA page-gather fallback (mode='auto'
     off-TPU) vs a from-scratch numpy softmax over the gathered cache."""
-    b, hkv, g, d, ps = 3, 2, 2, 16, 16
+    b, hkv, g, d, ps = 3, 2, 2, 32, 16
     lens = [1, 19, 41]
     q, kv, pt, deq = kc.make_paged_inputs(jax.random.PRNGKey(kv_bits), b,
                                           hkv, g, d, ps, lens, kv_bits)

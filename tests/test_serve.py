@@ -157,8 +157,64 @@ def test_quantized_model_rejects_unrepresentable_lane_widths(
     cfg, _, _ = model_and_params
     with pytest.raises(ValueError, match="a_bits"):
         QuantizedModel(cfg, QuantConfig(w_bits=4, a_bits=12))
-    with pytest.raises(ValueError, match="kv_bits"):
-        QuantizedModel(cfg, QuantConfig(w_bits=4, kv_bits=10))
+    # sub-byte cache widths other than the packed kv4 format have no
+    # storage layout: 10, 6, 5... all rejected up front
+    for bad in (10, 6, 5, 2):
+        with pytest.raises(ValueError, match="kv_bits"):
+            QuantizedModel(cfg, QuantConfig(w_bits=4, kv_bits=bad))
+    # kv4 and kv8 construct fine on a 32-lane head
+    QuantizedModel(cfg, QuantConfig(w_bits=4, kv_bits=4))
+    QuantizedModel(cfg, QuantConfig(w_bits=4, kv_bits=8))
+
+
+def test_kv4_requires_block_divisible_head_dim(model_and_params):
+    """kv_bits=4 needs head_dim % 32 == 0 (one bf16 scale per 32-value
+    block); a 16-lane head is rejected at construction, not at trace."""
+    import dataclasses as dc
+    cfg, _, _ = model_and_params
+    cfg16 = dc.replace(cfg, head_dim=16)
+    with pytest.raises(ValueError, match="head_dim % 32"):
+        QuantizedModel(cfg16, QuantConfig(w_bits=4, kv_bits=4))
+    QuantizedModel(cfg16, QuantConfig(w_bits=4, kv_bits=8))  # kv8 fine
+
+
+def test_kv4_cache_quantize_on_write(model_and_params):
+    """kv_bits=4: prefill and decode write packed-nibble codes
+    ((B, S, Hkv, D//2) int8) + bf16 block-32 scales ((..., D//32)); the
+    cache shrinks ~2x vs kv8 and logits stay within quantization error of
+    the fp-cache path."""
+    cfg, _, params = model_and_params
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=4)
+    qcfg8 = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                        kv_bits=8)
+    qcfg_fp = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 10), 0,
+                              cfg.vocab_size)
+    qm = QuantizedModel(cfg, qcfg, "ref")
+    qm8 = QuantizedModel(cfg, qcfg8, "ref")
+    qm_fp = QuantizedModel(cfg, qcfg_fp, "ref")
+    lg, cache = qm.prefill(packed, {"tokens": toks}, max_len=32)
+    lg_fp, cache_fp = qm_fp.prefill(packed, {"tokens": toks}, max_len=32)
+    _, cache8 = qm8.prefill(packed, {"tokens": toks}, max_len=32)
+    d = cfg.resolved_head_dim
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k"].shape[-1] == d // 2
+    assert cache["k_scale"].dtype == jnp.bfloat16
+    assert cache["k_scale"].shape == cache["k"].shape[:-1] + (d // 32,)
+    assert tree_bytes(cache_fp) / tree_bytes(cache) > 6.0
+    assert tree_bytes(cache8) / tree_bytes(cache) > 1.6
+    assert not np.allclose(np.asarray(lg), np.asarray(lg_fp), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_fp),
+                               rtol=0.25, atol=0.25)
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    dlg, cache2 = jax.jit(qm.decode_step)(packed, tok, cache)
+    d_fp, _ = jax.jit(qm_fp.decode_step)(packed, tok, cache_fp)
+    assert cache2["k"].dtype == jnp.int8
+    assert cache2["k"].shape[-1] == d // 2
+    np.testing.assert_allclose(np.asarray(dlg), np.asarray(d_fp),
+                               rtol=0.25, atol=0.25)
 
 
 def test_a8_decode_routes_through_int_kernel(model_and_params):
