@@ -23,12 +23,18 @@ from benchmarks import common
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--faults", action="store_true",
+                    help="serve suite only: run the fault-injected "
+                         "degraded-mode row (half pool + allocator "
+                         "brown-out) instead of the full serving matrix")
     args = ap.parse_args()
 
     from benchmarks import (fig3_loss_curves, kernel_bench, kv_cache_ppl,
                             roofline_report, serve_bench, table1_weight_only,
                             table3_w4a4, table4_precision, table5_stability,
                             table6_gradual_mask)
+    if args.faults:
+        serve_bench.FAULTS_ONLY = True
     suites = {
         "table1": table1_weight_only.run,
         "table3": table3_w4a4.run,

@@ -28,6 +28,15 @@ The paged pool is sized to the trace's working set (max_batch concurrent
 sequences at the P95 trace length), NOT to ``max_batch * max_len`` — that
 sizing is the memory win: the linear cache must reserve worst-case
 ``max_len`` per slot while pages track live tokens.
+
+The **degraded-mode row** (DESIGN.md §12) replays the trace with the pool
+halved and a seeded 50%-probability allocator brown-out injected for 40
+allocations: the failure model's promise is graceful degradation, so the
+row reports tokens/s and completion rate against the clean paged run,
+asserts the run terminates (storm guard + watchdog bound every livelock),
+and audits page conservation afterwards.  ``benchmarks.run --faults``
+runs ONLY this row plus its clean baseline (the CI smoke), merging the
+``degraded`` section into an existing ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -42,11 +51,17 @@ from benchmarks import common
 from repro.configs import get_config
 from repro.core.quantizer import QuantConfig
 from repro.models import build_model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import faults as flt
+from repro.serve.engine import Engine, RequestStatus, ServeConfig
 from repro.serve.kv_cache import pages_for
 from repro.serve.quantized import QuantizedModel, quantize_lm_packed
 
 BENCH_SERVE_JSON = common.ART / "BENCH_serve.json"
+
+# --faults (benchmarks.run): skip the full matrix and run only the clean
+# paged baseline + the fault-injected degraded-mode row — the CI smoke
+# that serving stays live under injected pool pressure (DESIGN.md §12)
+FAULTS_ONLY = False
 
 ARCH = "llama-micro"
 PAGE_SIZE = 16
@@ -134,6 +149,52 @@ def _itl_engine(qm, packed, prompts_short, prompt_long, chunked: bool):
             "max_ms": float(np.max(deltas)), "n_gaps": len(deltas)}
 
 
+def _run_degraded(qm, packed, prompts):
+    """Paged engine under injected pool pressure: half the clean pool plus
+    a seeded 50%-probability allocator brown-out bounded at 40 failures.
+    The guarantee under test is graceful degradation (DESIGN.md §12): the
+    run terminates (storm guard + watchdog), the non-failed majority still
+    completes, and the pool conserves every page."""
+    lens = [len(p) + MAX_NEW for p in prompts]
+    clean_pages = MAX_BATCH * pages_for(int(np.percentile(lens, 95)),
+                                        PAGE_SIZE)
+    num_pages = max(pages_for(max(lens) + 1, PAGE_SIZE), clean_pages // 2)
+    plan = flt.FaultPlan(
+        flt.Fault(flt.ALLOC_FAIL, after_step=3, count=40, prob=0.5), seed=7)
+    scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN, max_new=MAX_NEW,
+                       prefill_bucket=32, paged=True, page_size=PAGE_SIZE,
+                       num_pages=num_pages)
+    eng = Engine(qm, packed, scfg, faults=plan)
+    for p in prompts:
+        eng.submit(p)
+    t0 = time.monotonic()
+    done = eng.run(max_steps=4000)   # hang backstop; watchdog bounds this
+    dt = time.monotonic() - t0
+    eng._kv.verify()                 # no page leaked or double-owned
+    assert eng._kv.allocator.num_free == num_pages, "page leak under faults"
+    toks = sum(len(r.out_tokens) for r in done)
+    n_ok = sum(r.status is RequestStatus.COMPLETED for r in done)
+    return {
+        "tokens_per_s": toks / dt, "wall_s": dt, "new_tokens": toks,
+        "pool_pages": num_pages, "clean_pool_pages": clean_pages,
+        "faults_fired": len(plan.log),
+        "completion_rate": n_ok / len(done),
+        "statuses": dict(sorted(eng.status_counts().items())),
+    }
+
+
+def _degraded_doc_and_rows(qm, packed, prompts, clean_paged):
+    deg = _run_degraded(qm, packed, prompts)
+    deg["clean_tokens_per_s"] = clean_paged["tokens_per_s"]
+    rows = [("serve/engine_paged_degraded_w4a8kv8",
+             1e6 * deg["wall_s"] / max(deg["new_tokens"], 1),
+             f"tok_s={deg['tokens_per_s']:.1f};completion_rate="
+             f"{deg['completion_rate']:.2f};pool={deg['pool_pages']}/"
+             f"{deg['clean_pool_pages']};faults={deg['faults_fired']};"
+             f"clean_tok_s={deg['clean_tokens_per_s']:.1f}")]
+    return deg, rows
+
+
 def run():
     cfg = get_config(ARCH)
     model = build_model(cfg)
@@ -145,6 +206,19 @@ def run():
                         flash_block_kv=PAGE_SIZE)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, n) for n in TRACE[:N_REQ]]
+
+    if FAULTS_ONLY:
+        # CI smoke: clean paged baseline + the degraded row only, merged
+        # into an existing BENCH_serve.json when the full suite ran first
+        pgd = _run_engine(qm, packed, prompts, paged=True)
+        deg, rows = _degraded_doc_and_rows(qm, packed, prompts, pgd)
+        common.ART.mkdir(parents=True, exist_ok=True)
+        doc = (json.loads(BENCH_SERVE_JSON.read_text())
+               if BENCH_SERVE_JSON.exists() else
+               {"arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref"})
+        doc["degraded"] = deg
+        BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
+        return rows
 
     lin = _run_engine(qm, packed, prompts, paged=False)
     pgd = _run_engine(qm, packed, prompts, paged=True)
@@ -167,6 +241,9 @@ def run():
     long_p = rng.integers(0, cfg.vocab_size, ITL_LONG)
     itl_whole = _itl_engine(qm, packed, shorts, long_p, chunked=False)
     itl_chunk = _itl_engine(qm, packed, shorts, long_p, chunked=True)
+
+    # degraded mode: same trace under injected pool pressure
+    deg, deg_rows = _degraded_doc_and_rows(qm, packed, prompts, pgd)
 
     doc = {
         "arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref",
@@ -192,6 +269,7 @@ def run():
             "chunked": itl_chunk,
             "p99_ratio": itl_whole["p99_ms"] / itl_chunk["p99_ms"],
         },
+        "degraded": deg,
     }
     common.ART.mkdir(parents=True, exist_ok=True)
     BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
@@ -223,4 +301,5 @@ def run():
                      f"{itl['p99_ms']:.2f};max_ms={itl['max_ms']:.2f}"))
     rows.append(("serve/itl_chunked_vs_whole_p99", 0.0,
                  f"ratio={doc['itl']['p99_ratio']:.2f}x"))
+    rows.extend(deg_rows)
     return rows

@@ -37,6 +37,13 @@ decodes for more than one chunk of work — token-identical to whole-prompt
 admission because every prefill path reads the cache as stored through the
 same tiled kernel.
 
+``--ttl-s`` / ``--max-queue`` exercise the failure model (DESIGN.md §12):
+per-request wall-clock deadlines (expired requests finish
+``FAILED_DEADLINE`` with their partial stream) and bounded-queue
+backpressure (rejected submits are logged, not raised as tracebacks).
+Whenever any request ends non-``COMPLETED`` the launcher prints a
+per-status histogram next to the throughput line.
+
 ``--paged`` serves through the page-table KV cache (DESIGN.md §9): the
 engine allocates fixed-size pages (``--page-size``) from a global pool on
 admission, grows sequences page-by-page, preempts the longest sequence when
@@ -59,7 +66,7 @@ from repro.core.calibration import CalibConfig, quantize_dense_model
 from repro.core.quantizer import QuantConfig
 from repro.data import MarkovCorpus
 from repro.models import build_model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, QueueFull, RequestStatus, ServeConfig
 from repro.train import checkpoints
 from repro.utils import logger
 
@@ -105,6 +112,15 @@ def main(argv=None) -> int:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page-pool size for --paged (0 = live-trace "
                          "sizing: max_batch * pages(prompt_len + max_new))")
+    ap.add_argument("--ttl-s", type=float, default=0.0,
+                    help="per-request wall-clock deadline in seconds "
+                         "(0 = none); expired requests finish "
+                         "FAILED_DEADLINE with their partial stream "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (0 = unbounded): submits "
+                         "past this many pending requests are rejected "
+                         "with backpressure instead of queued")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -133,7 +149,9 @@ def main(argv=None) -> int:
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_new + 8,
                        max_new=args.max_new,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       default_ttl_s=args.ttl_s,
+                       max_queue=args.max_queue)
     if args.prefill_chunk:
         logger.info("chunked admission: prompts prefill in %d-token chunks "
                     "interleaved with decode steps (token-identical to "
@@ -143,18 +161,36 @@ def main(argv=None) -> int:
     def run(p, tag, serving_model=None, cfg_serve=None):
         eng = Engine(serving_model or model, p, cfg_serve or scfg)
         for pr in prompts:
-            eng.submit(pr)
+            try:
+                eng.submit(pr)
+            except QueueFull as e:
+                # backpressure, not an error: the request is terminal
+                # REJECTED_QUEUE_FULL and shows up in the status summary
+                logger.warning("[%s] %s", tag, e)
+            except ValueError as e:
+                # config error (prompt can NEVER be served by this pool /
+                # max_len) — actionable message, no traceback
+                ap.error(f"unservable request: {e}")
         t0 = time.monotonic()
         done = eng.run()
         dt = time.monotonic() - t0
+        ok = [r for r in done if r.status is RequestStatus.COMPLETED]
         total_new = sum(len(r.out_tokens) for r in done)
         logger.info("[%s] %d requests, %d tokens in %.2fs (%.1f tok/s)",
                     tag, len(done), total_new, dt, total_new / dt)
+        if len(ok) != len(done):
+            counts = ", ".join(f"{k}={v}" for k, v in
+                               sorted(eng.status_counts().items()))
+            logger.warning("[%s] %d/%d requests completed (%s)", tag,
+                           len(ok), len(done), counts)
         return [r.out_tokens for r in done], eng
 
     def agreement(a_outs, b_outs):
+        pairs = [(a, b) for a, b in zip(a_outs, b_outs) if a and b]
+        if not pairs:                 # everything rejected / expired
+            return float("nan")
         return np.mean([np.mean(np.array(a[:len(b)]) == np.array(b[:len(a)]))
-                        for a, b in zip(a_outs, b_outs)])
+                        for a, b in pairs])
 
     fp_out, fp_eng = run(params, "fp")
 

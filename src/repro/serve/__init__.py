@@ -1,6 +1,10 @@
-from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.engine import (Engine, QueueFull, Request, RequestStatus,
+                                ServeConfig)
+from repro.serve.faults import Fault, FaultPlan, InjectedFault
 from repro.serve.kv_cache import (LinearCache, PagedCache, PagedKVCache,
-                                  PageAllocator)
+                                  PageAllocator, PageIntegrityError)
 
-__all__ = ["ServeConfig", "Engine", "Request", "PagedKVCache",
-           "PageAllocator", "LinearCache", "PagedCache"]
+__all__ = ["ServeConfig", "Engine", "Request", "RequestStatus", "QueueFull",
+           "Fault", "FaultPlan", "InjectedFault", "PagedKVCache",
+           "PageAllocator", "LinearCache", "PagedCache",
+           "PageIntegrityError"]

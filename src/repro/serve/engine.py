@@ -42,7 +42,29 @@ requirement) and a FIFO queue of pending requests. Per iteration it
 
 All scheduling state (queue, slot lengths, page free list) is host-side —
 the loop never blocks on a device sync to schedule; the only readback per
-step is the sampled token batch itself.
+step is the sampled token batch itself (plus its per-row finiteness flag,
+which rides the same transfer).
+
+Failure model (DESIGN.md §12): every request ends in exactly one terminal
+:class:`RequestStatus`, surfaced through ``on_done``.  The jitted decode
+and the chunk-prefill completion fold a per-row ``isfinite`` reduction
+over the final logits into the existing sample readback, so a non-finite
+value escaping a quantized matmul quarantines ONLY its own slot
+(``FAILED_NAN``: pages scrubbed then freed — survivors stay
+token-identical to solo runs).  Pool pressure degrades instead of
+livelocking: requests whose resume can never fit the idle pool fail fast
+with ``FAILED_POOL``; a request evicted ``max_preemptions`` times (or
+``stall_preemptions`` times without growing) is failed rather than
+re-queued; and a no-progress watchdog (``watchdog_steps``) fails the
+largest page-owner when the whole engine stops moving.  Backpressure is
+explicit: ``max_queue`` bounds the pending deque and ``submit`` raises
+:class:`QueueFull`.  Deadlines (``ttl_s``) are wall-clock, checked
+host-side at step boundaries.  ``cancel(rid)`` reclaims pages whether the
+request is queued, mid-prefill or decoding.  Callbacks that raise are
+isolated per-request (``FAILED_CALLBACK`` for ``on_token``;
+logged-and-detached for ``on_done``) and never unwind the step loop.  A
+``repro.serve.faults.FaultPlan`` passed to the constructor drives every
+one of these paths deterministically from tests.
 
 Cache layouts are behind ``repro.serve.kv_cache`` stores: ``LinearCache``
 (contiguous ``max_batch × max_len`` slab) and ``PagedCache``
@@ -64,6 +86,8 @@ are exact, MoE prefill is the documented approximation in both modes.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -72,6 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve import faults as flt
 from repro.serve import kv_cache
 from repro.utils import logger, next_multiple
 
@@ -95,6 +120,46 @@ class ServeConfig:
     page_size: int = 64
     num_pages: int = 0           # 0 = auto (max_batch * pages(max_len))
     max_pages_per_seq: int = 0   # 0 = auto (ceil(max_len / page_size))
+    # failure model (DESIGN.md §12) --------------------------------------
+    max_queue: int = 0           # > 0: bound the pending deque; submit
+    #                              raises QueueFull past it (backpressure)
+    default_ttl_s: float = 0.0   # > 0: wall-clock TTL applied to every
+    #                              submit without an explicit ttl_s
+    max_preemptions: int = 64    # evictions per request before FAILED_POOL
+    stall_preemptions: int = 16  # consecutive no-growth evictions per
+    #                              request before FAILED_POOL (mid-prefill
+    #                              victims never grow — this is their cap)
+    watchdog_steps: int = 16     # consecutive no-progress engine steps
+    #                              before degrading (fail largest owner)
+    integrity_checks: bool = False   # debug: device/host page-table
+    #                                  cross-check on every free
+
+
+class RequestStatus(enum.Enum):
+    """Lifecycle of a request; exactly one terminal state per request."""
+    QUEUED = "queued"
+    RUNNING = "running"
+    COMPLETED = "completed"                      # EOS / max_new / capacity
+    FAILED_NAN = "failed_nan"                    # non-finite logits
+    FAILED_DEADLINE = "failed_deadline"          # wall-clock TTL expired
+    FAILED_POOL = "failed_pool"                  # pool can/will never serve
+    FAILED_CALLBACK = "failed_callback"          # on_token raised
+    REJECTED_QUEUE_FULL = "rejected_queue_full"  # backpressure at submit
+    CANCELLED = "cancelled"                      # cancel(rid)
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (RequestStatus.QUEUED, RequestStatus.RUNNING)
+
+
+class QueueFull(RuntimeError):
+    """submit() backpressure: the bounded admission queue is at
+    ``ServeConfig.max_queue``.  ``.request`` carries the rejected request
+    (terminal status ``REJECTED_QUEUE_FULL``)."""
+
+    def __init__(self, msg: str, request: "Request" = None):
+        super().__init__(msg)
+        self.request = request
 
 
 @dataclasses.dataclass(eq=False)
@@ -102,10 +167,19 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None  # human-readable cause for FAILED_* states
+    deadline: Optional[float] = None   # absolute time.monotonic() TTL
     preemptions: int = 0
+    stalls: int = 0              # consecutive evictions without growth
+    last_evict_len: int = -1     # resume_len at the previous eviction
     on_token: Optional[Callable[["Request", int], None]] = None
     on_done: Optional[Callable[["Request"], None]] = None
+
+    @property
+    def done(self) -> bool:
+        """True once the request reached a terminal status."""
+        return self.status.terminal
 
     @property
     def resume_len(self) -> int:
@@ -123,15 +197,24 @@ class Request:
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: ServeConfig):
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 faults: Optional[flt.FaultPlan] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        if cfg.max_new < 1:
+            raise ValueError(f"max_new={cfg.max_new} unsupported: a request "
+                             f"must be allowed at least one generated token")
+        if cfg.max_queue < 0:
+            raise ValueError(f"max_queue={cfg.max_queue} unsupported: use 0 "
+                             f"(unbounded) or a positive queue bound")
+        self._faults = faults
         if cfg.paged:
             self._kv = kv_cache.PagedCache(
                 model, cfg.max_batch, cfg.max_len, cfg.page_size,
                 num_pages=cfg.num_pages,
-                max_pages_per_seq=cfg.max_pages_per_seq)
+                max_pages_per_seq=cfg.max_pages_per_seq,
+                faults=faults, integrity_checks=cfg.integrity_checks)
         else:
             self._kv = kv_cache.LinearCache(model, cfg.max_batch,
                                             cfg.max_len)
@@ -149,12 +232,16 @@ class Engine:
         self._idle_keys = jnp.zeros((cfg.max_batch,)
                                     + self._base_key.shape,
                                     self._base_key.dtype)
+        self._zero_poison = jnp.zeros((cfg.max_batch,), jnp.float32)
         self._supports_padded = bool(
             getattr(model, "supports_padded_prefill", False))
         # chunked admission: per-slot (request, resume tokens) for prompts
         # mid-prefill (None = slot idle or decoding); tokens written so
         # far is _seq_len[slot], same as for decoding slots
         self._prefill_prog: list[Optional[tuple]] = [None] * cfg.max_batch
+        self._step_idx = 0
+        self._watchdog = 0       # consecutive steps without progress
+        self._progress = 0       # tokens streamed + chunks + retirements
         if cfg.prefill_chunk:
             if not getattr(model, "supports_chunked_prefill", False):
                 raise ValueError(
@@ -184,24 +271,167 @@ class Engine:
         return self.model.prefill(params, batch, max_len=bucket)
 
     # ------------------------------------------------------------------
-    # submission
+    # submission / cancellation
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, on_token=None,
-               on_done=None) -> Request:
+    def submit(self, prompt: np.ndarray, on_token=None, on_done=None,
+               ttl_s: Optional[float] = None) -> Request:
+        """Queue a request.  Raises :class:`ValueError` on prompts the
+        engine can NEVER serve (empty, or exceeding what the idle pool can
+        hold) and :class:`QueueFull` past ``max_queue`` — both before any
+        engine state changes, so a rejected submit is side-effect free.
+        ``ttl_s`` overrides ``cfg.default_ttl_s`` (0 = no deadline)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError(f"prompt must be a non-empty 1-D token array; "
                              f"got shape {prompt.shape}")
-        if prompt.size >= self._kv.capacity:
-            raise ValueError(f"prompt length {prompt.size} needs "
-                             f"{prompt.size + 1} cache slots; capacity is "
-                             f"{self._kv.capacity}")
+        if not self._kv.fits_idle(int(prompt.size) + 1):
+            raise ValueError(
+                f"prompt length {prompt.size} unservable: "
+                + self._kv.unservable_reason(int(prompt.size) + 1))
         req = Request(rid=self._next_rid, prompt=prompt, on_token=on_token,
                       on_done=on_done)
         self._next_rid += 1
+        ttl = self.cfg.default_ttl_s if ttl_s is None else ttl_s
+        if ttl and ttl > 0:
+            req.deadline = time.monotonic() + ttl
+        if self.cfg.max_queue and len(self._pending) >= self.cfg.max_queue:
+            self._all.append(req)
+            self._finish_request(
+                req, RequestStatus.REJECTED_QUEUE_FULL,
+                error=f"admission queue full ({self.cfg.max_queue} "
+                      f"pending): backpressure — retry later")
+            raise QueueFull(req.error, request=req)
         self._pending.append(req)
         self._all.append(req)
         return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is — queued, mid-prefill, or
+        decoding — reclaiming its pages.  Returns False if ``rid`` is
+        unknown or already terminal."""
+        for req in self._pending:
+            if req.rid == rid:
+                self._pending.remove(req)
+                self._finish_request(req, RequestStatus.CANCELLED)
+                return True
+        for slot, req in enumerate(self._slots):
+            if req is not None and req.rid == rid:
+                self._retire_slot(slot, RequestStatus.CANCELLED)
+                return True
+        return False
+
+    def status_counts(self) -> dict:
+        """Terminal-status histogram over every request this engine saw."""
+        counts: dict = {}
+        for r in self._all:
+            counts[r.status.name] = counts.get(r.status.name, 0) + 1
+        return counts
+
+    # ------------------------------------------------------------------
+    # termination plumbing (the ONLY places a request goes terminal)
+    # ------------------------------------------------------------------
+    def _finish_request(self, req: Request, status: RequestStatus,
+                        error: Optional[str] = None) -> None:
+        req.status = status
+        req.error = error
+        if error is not None:
+            logger.debug("rid=%d -> %s: %s", req.rid, status.name, error)
+        self._progress += 1
+        self._dispatch_done(req)
+
+    def _retire_slot(self, slot: int, status: RequestStatus,
+                     error: Optional[str] = None) -> None:
+        """Terminal path for an occupied slot: scrub poisoned pages, free,
+        clear scheduling state, then fire on_done."""
+        req = self._slots[slot]
+        if status is RequestStatus.FAILED_NAN:
+            # quarantine: the slot's pages may hold non-finite K/V; zero
+            # them before the free list recycles them (kv_cache.scrub —
+            # masked attention rows still enter p @ v with weight 0.0 and
+            # 0.0 * NaN = NaN, so stale poison would spread)
+            self._kv.scrub(slot)
+        self._slots[slot] = None
+        self._seq_len[slot] = 0
+        self._prefill_prog[slot] = None
+        self._kv.free(slot)
+        self._finish_request(req, status, error)
+
+    def _dispatch_token(self, req: Request, tok: int) -> bool:
+        """Record + stream one token; False when the user callback raised
+        (the request fails as FAILED_CALLBACK, the step loop survives)."""
+        req.out_tokens.append(tok)
+        self._progress += 1
+        if self._faults is not None and self._faults.fires(
+                flt.CALLBACK_RAISE, rid=req.rid):
+            return False
+        if req.on_token is None:
+            return True
+        try:
+            req.on_token(req, tok)
+            return True
+        except Exception:
+            logger.exception("on_token callback for rid=%d raised — "
+                             "failing the request", req.rid)
+            return False
+
+    def _dispatch_done(self, req: Request) -> None:
+        """Fire on_done exactly once; a raising callback is detached and
+        logged (the request is already terminal — nothing to fail)."""
+        cb, req.on_done = req.on_done, None
+        if cb is None:
+            return
+        try:
+            cb(req)
+        except Exception:
+            logger.exception("on_done callback for rid=%d raised — "
+                             "detached (request already terminal)", req.rid)
+
+    # ------------------------------------------------------------------
+    # deadlines + fail-fast admission
+    # ------------------------------------------------------------------
+    def _expired(self, req: Request, now: float) -> bool:
+        if req.deadline is not None and now > req.deadline:
+            return True
+        return (self._faults is not None
+                and self._faults.fires(flt.DEADLINE, rid=req.rid))
+
+    def _check_deadlines(self) -> None:
+        """Retire TTL-expired requests (queued or slotted) at the step
+        boundary — host-side wall clock, no device work."""
+        now = time.monotonic()
+        for slot, req in enumerate(self._slots):
+            if req is not None and self._expired(req, now):
+                self._retire_slot(slot, RequestStatus.FAILED_DEADLINE,
+                                  error=f"deadline exceeded after "
+                                        f"{len(req.out_tokens)} tokens")
+        if not self._pending:
+            return
+        kept: deque[Request] = deque()
+        while self._pending:
+            req = self._pending.popleft()
+            if self._expired(req, now):
+                self._finish_request(req, RequestStatus.FAILED_DEADLINE,
+                                     error="deadline exceeded while queued")
+            else:
+                kept.append(req)
+        self._pending = kept
+
+    def _shed_unservable(self) -> None:
+        """Fail-fast requests whose resume can NEVER fit the idle pool
+        (e.g. grown past it through evict/resume cycles) — waiting cannot
+        help, and re-queueing them forever is the livelock the old
+        engine-wide RuntimeError papered over."""
+        kept: deque[Request] = deque()
+        while self._pending:
+            req = self._pending.popleft()
+            if self._kv.fits_idle(req.resume_len + 1):
+                kept.append(req)
+            else:
+                self._finish_request(
+                    req, RequestStatus.FAILED_POOL,
+                    error=f"resume length {req.resume_len} unservable: "
+                          + self._kv.unservable_reason(req.resume_len + 1))
+        self._pending = kept
 
     # ------------------------------------------------------------------
     # sampling
@@ -231,9 +461,29 @@ class Engine:
             lg = jnp.where(lg < kth, -jnp.inf, lg)
         return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
 
-    def _decode_and_sample(self, params, tok, cache, keys):
+    def _decode_and_sample(self, params, tok, cache, keys, poison):
+        """One jitted decode + sample + per-row finiteness flag.  ``poison``
+        is the NAN_LOGITS injection vector (0.0 when inactive — adding it
+        is numerically neutral); ``ok`` rides the sampled-token transfer,
+        so NaN detection costs no extra device sync."""
         logits, cache = self.model.decode_step(params, tok, cache)
-        return self._sample(logits[:, -1, :], keys), cache
+        lg = logits[:, -1, :] + poison[:, None]
+        ok = jnp.all(jnp.isfinite(lg), axis=-1)
+        return self._sample(lg, keys), ok, cache
+
+    def _poison(self, active: list[int]) -> jax.Array:
+        """NAN_LOGITS injection vector for this decode step (one entry per
+        slot; NaN poisons that row's logits inside the jitted step)."""
+        if self._faults is None:
+            return self._zero_poison
+        vec = None
+        for i in active:
+            if self._faults.fires(flt.NAN_LOGITS, rid=self._slots[i].rid,
+                                  slot=i):
+                if vec is None:
+                    vec = np.zeros((self.cfg.max_batch,), np.float32)
+                vec[i] = np.nan
+        return self._zero_poison if vec is None else jnp.asarray(vec)
 
     # ------------------------------------------------------------------
     # admission: bucketed batch prefill
@@ -250,6 +500,7 @@ class Engine:
         return [i for i, s in enumerate(self._slots) if s is None]
 
     def _admit(self) -> None:
+        self._shed_unservable()
         free = self._free_slots()
         while free and self._pending:
             # FIFO prefix run sharing one bucket -> one batched prefill
@@ -269,14 +520,9 @@ class Engine:
             overflow = group[len(fitted):]
             self._pending.extendleft(reversed(overflow))
             if not fitted:
-                if not any(s is not None for s in self._slots):
-                    # nothing to wait for: the request exceeds the pool
-                    req = self._pending[0]
-                    raise RuntimeError(
-                        f"request rid={req.rid} needs "
-                        f"{req.resume_len} cache tokens but the "
-                        f"idle pool cannot hold them — size num_pages up")
-                return           # pool dry: wait for completions to free pages
+                # pool (transiently) dry: wait for completions to free
+                # pages; a queue that can never drain trips the watchdog
+                return
             free = free[len(fitted):]
 
             tokens = np.zeros((len(fitted), bucket), np.int32)
@@ -287,25 +533,42 @@ class Engine:
                 self.params, jnp.asarray(tokens),
                 jnp.asarray(lengths) if self._supports_padded else None,
                 bucket)
-            toks = np.asarray(self._sample(
-                logits[:, -1, :], self._req_keys([r for _, r, _ in fitted])))
-            slot_ids, slot_toks = [], []
+            lg = logits[:, -1, :]
+            if self._faults is not None:
+                pv = np.zeros((len(fitted),), np.float32)
+                for row, (_, req, _) in enumerate(fitted):
+                    if self._faults.fires(flt.NAN_LOGITS, rid=req.rid):
+                        pv[row] = np.nan
+                if np.isnan(pv).any():
+                    lg = lg + jnp.asarray(pv)[:, None]
+            ok_dev = jnp.all(jnp.isfinite(lg), axis=-1)
+            toks, ok = jax.device_get((self._sample(
+                lg, self._req_keys([r for _, r, _ in fitted])), ok_dev))
+            slot_ids, slot_toks, assigned = [], [], []
             for row, (slot, req, ln) in enumerate(fitted):
                 self._kv.splice(slot, cache1, row, int(ln))
-                tok = int(toks[row])
-                req.out_tokens.append(tok)
-                if req.on_token:
-                    req.on_token(req, tok)
                 self._slots[slot] = req
                 self._seq_len[slot] = int(ln)
+                req.status = RequestStatus.RUNNING
+                assigned.append(slot)
+                if not bool(ok[row]):
+                    self._retire_slot(slot, RequestStatus.FAILED_NAN,
+                                      error="non-finite logits at prefill")
+                    continue
+                tok = int(toks[row])
+                if not self._dispatch_token(req, tok):
+                    self._retire_slot(slot, RequestStatus.FAILED_CALLBACK,
+                                      error="on_token callback raised")
+                    continue
                 slot_ids.append(slot)
                 slot_toks.append(tok)
                 self._maybe_finish(slot, tok)
-            self._last_tok = self._last_tok.at[
-                jnp.asarray(slot_ids), 0].set(jnp.asarray(slot_toks))
-            # a request can retire straight from prefill (EOS / max_new=1):
-            # hand its slot back so this admission pass can refill it
-            free.extend(s for s in slot_ids if self._slots[s] is None)
+            if slot_ids:
+                self._last_tok = self._last_tok.at[
+                    jnp.asarray(slot_ids), 0].set(jnp.asarray(slot_toks))
+            # a request can retire straight from prefill (EOS / max_new=1 /
+            # quarantine): hand its slot back so this pass can refill it
+            free.extend(s for s in assigned if self._slots[s] is None)
 
     # ------------------------------------------------------------------
     # chunked admission (ServeConfig.prefill_chunk > 0)
@@ -317,21 +580,19 @@ class Engine:
         prompt never monopolizes the step loop.  Paged mode reserves the
         prompt's pages up front exactly like whole-prompt admission (same
         free-list accounting, same preemption sizes)."""
+        self._shed_unservable()
         for slot in self._free_slots():
             if not self._pending:
                 return
             req = self._pending[0]
             if not self._kv.reserve(slot, req.resume_len):
-                if not any(s is not None for s in self._slots):
-                    # nothing to wait for: the request exceeds the pool
-                    raise RuntimeError(
-                        f"request rid={req.rid} needs {req.resume_len} "
-                        f"cache tokens but the idle pool cannot hold them "
-                        f"— size num_pages up")
-                return   # pool dry: wait for completions to free pages
+                # pool (transiently) dry: wait for completions to free
+                # pages; a queue that can never drain trips the watchdog
+                return
             self._pending.popleft()
             self._slots[slot] = req
             self._seq_len[slot] = 0
+            req.status = RequestStatus.RUNNING
             self._prefill_prog[slot] = (req, req.resume_tokens())
 
     def _advance_prefill(self) -> bool:
@@ -365,17 +626,29 @@ class Engine:
                                     jnp.asarray(offsets))
         self._kv.cache = cache
         self._seq_len[slot] = done + n
+        self._progress += 1
         if done + n < len(toks):
             return True
         # prompt fully prefilled: sample the first token from the last
         # valid chunk row (the chunk call already gathered it) and start
-        # decoding
+        # decoding.  The finiteness flag rides the same readback as the
+        # sampled token — only this final chunk ever syncs.
         self._prefill_prog[slot] = None
-        tok = int(np.asarray(self._sample(logits[slot],
-                                          self._req_keys([req])))[0])
-        req.out_tokens.append(tok)
-        if req.on_token:
-            req.on_token(req, tok)
+        lg = logits[slot]
+        if self._faults is not None and self._faults.fires(
+                flt.NAN_LOGITS, rid=req.rid, slot=slot):
+            lg = lg + jnp.float32(np.nan)
+        tok_arr = self._sample(lg, self._req_keys([req]))
+        tok_host, ok = jax.device_get((tok_arr, jnp.all(jnp.isfinite(lg))))
+        if not bool(ok):
+            self._retire_slot(slot, RequestStatus.FAILED_NAN,
+                              error="non-finite logits at prefill")
+            return True
+        tok = int(tok_host[0])
+        if not self._dispatch_token(req, tok):
+            self._retire_slot(slot, RequestStatus.FAILED_CALLBACK,
+                              error="on_token callback raised")
+            return True
         self._last_tok = self._last_tok.at[slot, 0].set(tok)
         self._maybe_finish(slot, tok)
         return True
@@ -384,14 +657,32 @@ class Engine:
     # preemption (paged admission control)
     # ------------------------------------------------------------------
     def _preempt(self, slot: int) -> None:
+        """Evict a slot, requeueing at the head — unless this request is
+        storming (``max_preemptions`` lifetime evictions, or
+        ``stall_preemptions`` consecutive evictions without growing —
+        the no-progress signature of a pool too small for the working
+        set), in which case it fails with FAILED_POOL instead of cycling
+        forever."""
         req = self._slots[slot]
         logger.debug("preempt rid=%d (len=%d): pool dry", req.rid,
                      self._seq_len[slot])
+        grew = req.resume_len > req.last_evict_len
+        req.stalls = 0 if grew else req.stalls + 1
+        req.last_evict_len = req.resume_len
         req.preemptions += 1
         self._slots[slot] = None
         self._seq_len[slot] = 0
         self._prefill_prog[slot] = None   # mid-prefill victims restart
         self._kv.free(slot)
+        if (req.preemptions > self.cfg.max_preemptions
+                or req.stalls >= self.cfg.stall_preemptions):
+            self._finish_request(
+                req, RequestStatus.FAILED_POOL,
+                error=f"preemption storm: evicted {req.preemptions}x "
+                      f"({req.stalls} consecutive without progress) — the "
+                      f"pool is too small for the working set")
+            return
+        req.status = RequestStatus.QUEUED
         self._pending.appendleft(req)   # resumes first when pages free up
 
     def _ensure_capacity(self, active: list[int]) -> list[int]:
@@ -422,19 +713,43 @@ class Engine:
         cache_full = self._seq_len[slot] >= self._kv.capacity - 1
         if (tok == self.cfg.eos_token
                 or len(req.out_tokens) >= self.cfg.max_new or cache_full):
-            req.done = True
-            if req.on_done:
-                req.on_done(req)
-            self._slots[slot] = None
-            self._seq_len[slot] = 0
-            self._kv.free(slot)
+            self._retire_slot(slot, RequestStatus.COMPLETED)
+
+    def _degrade(self) -> None:
+        """Watchdog action after ``watchdog_steps`` no-progress steps:
+        something (a starved queue, an injected allocator fault) has
+        wedged the engine — fail ONE request (the largest page owner, or
+        the queue head when no slot is live) with FAILED_POOL so the rest
+        of the trace can move, rather than spinning forever."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if live:
+            victim = max(live, key=lambda i: (self._kv.owned_pages(i),
+                                              self._seq_len[i], -i))
+            self._retire_slot(
+                victim, RequestStatus.FAILED_POOL,
+                error=f"watchdog: no engine progress for "
+                      f"{self.cfg.watchdog_steps} steps — failing the "
+                      f"largest page owner to unwedge the pool")
+        elif self._pending:
+            req = self._pending.popleft()
+            self._finish_request(
+                req, RequestStatus.FAILED_POOL,
+                error=f"watchdog: admission starved for "
+                      f"{self.cfg.watchdog_steps} steps — the pool never "
+                      f"freed enough pages to admit this request")
+        self._watchdog = 0
 
     def step(self) -> int:
-        """One engine iteration: admit + (chunked mode) one prefill chunk
-        + ensure pages + one batched decode step.  Chunked admission
-        interleaves a bounded ``prefill_chunk`` tokens of prompt work with
-        every decode step, so in-flight decodes keep streaming while a
-        long prompt drips in.  Returns the number of sequences advanced."""
+        """One engine iteration: deadlines + admit + (chunked mode) one
+        prefill chunk + ensure pages + one batched decode step.  Chunked
+        admission interleaves a bounded ``prefill_chunk`` tokens of prompt
+        work with every decode step, so in-flight decodes keep streaming
+        while a long prompt drips in.  Returns the number of sequences
+        advanced."""
+        progress0 = self._progress
+        if self._faults is not None:
+            self._faults.begin_step(self._step_idx)
+        self._check_deadlines()
         if self.cfg.prefill_chunk:
             self._admit_chunked()
             did_chunk = self._advance_prefill()
@@ -445,31 +760,57 @@ class Engine:
                   if s is not None and self._prefill_prog[i] is None]
         if self.cfg.paged:
             active = self._ensure_capacity(active)
-        if not active:
-            return int(did_chunk)
-        reqs = [self._slots[i] if (self._slots[i] is not None
-                                   and self._prefill_prog[i] is None)
-                else _IDLE_REQ for i in range(self.cfg.max_batch)]
-        nxt, cache = self._decode(self.params, self._last_tok,
-                                  self._kv.cache, self._req_keys(reqs))
-        self._kv.cache = cache
-        self._last_tok = nxt[:, None]
-        nxt_host = np.asarray(nxt)
-        for i in active:
-            req = self._slots[i]
-            tok = int(nxt_host[i])
-            req.out_tokens.append(tok)
-            if req.on_token:
-                req.on_token(req, tok)
-            self._seq_len[i] += 1
-            self._maybe_finish(i, tok)
-        return len(active) + int(did_chunk)
+        advanced = 0
+        if active:
+            reqs = [self._slots[i] if (self._slots[i] is not None
+                                       and self._prefill_prog[i] is None)
+                    else _IDLE_REQ for i in range(self.cfg.max_batch)]
+            nxt, ok_dev, cache = self._decode(
+                self.params, self._last_tok, self._kv.cache,
+                self._req_keys(reqs), self._poison(active))
+            self._kv.cache = cache
+            self._last_tok = nxt[:, None]
+            nxt_host, ok = jax.device_get((nxt, ok_dev))
+            for i in active:
+                req = self._slots[i]
+                if not bool(ok[i]):
+                    # quarantine ONLY this slot: scrub + free its pages,
+                    # fail it, keep the rest of the batch streaming
+                    self._retire_slot(i, RequestStatus.FAILED_NAN,
+                                      error=f"non-finite logits at decode "
+                                            f"step {len(req.out_tokens)}")
+                    continue
+                tok = int(nxt_host[i])
+                if not self._dispatch_token(req, tok):
+                    self._retire_slot(i, RequestStatus.FAILED_CALLBACK,
+                                      error="on_token callback raised")
+                    continue
+                self._seq_len[i] += 1
+                self._maybe_finish(i, tok)
+            advanced = len(active)
+        self._step_idx += 1
+        if self._progress == progress0 and (
+                self._pending or any(s is not None for s in self._slots)):
+            self._watchdog += 1
+            if self._watchdog > self.cfg.watchdog_steps:
+                self._degrade()
+        else:
+            self._watchdog = 0
+        return advanced + int(did_chunk)
 
-    def run(self) -> list[Request]:
+    def run(self, max_steps: int = 0) -> list[Request]:
         """Drain the queue; returns every submitted request, in
-        submission order."""
+        submission order.  ``max_steps > 0`` bounds the loop (tests /
+        hang detection): exceeding it raises RuntimeError."""
+        steps = 0
         while any(not r.done for r in self._all):
             n = self.step()
+            steps += 1
+            if max_steps and steps >= max_steps:
+                live = [r.rid for r in self._all if not r.done]
+                raise RuntimeError(
+                    f"run() exceeded max_steps={max_steps} with requests "
+                    f"{live} still live — engine wedged?")
             if n == 0 and not self._pending:
                 break
         return self._all

@@ -39,8 +39,18 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.serve import faults as flt
 from repro.utils import ceil_div, tree_bytes
+
+
+class PageIntegrityError(RuntimeError):
+    """Page-pool bookkeeping corruption: a page double-freed, freed while
+    another live page table still references it, or a device page-table
+    row that diverged from the host allocator.  Raising loudly here is the
+    point — a silently corrupted page table serves one sequence's KV to
+    another (DESIGN.md §12)."""
 
 
 @jax.tree_util.register_dataclass
@@ -245,12 +255,13 @@ class PageAllocator:
     """
 
     def __init__(self, num_pages: int, max_pages_per_seq: int,
-                 max_batch: int):
+                 max_batch: int, faults: Optional[flt.FaultPlan] = None):
         self.num_pages = num_pages
         self.max_pages_per_seq = max_pages_per_seq
         self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
         self.owned: list[list[int]] = [[] for _ in range(max_batch)]
         self.peak_in_use = 0
+        self.faults = faults
 
     @property
     def num_free(self) -> int:
@@ -266,6 +277,9 @@ class PageAllocator:
     def allocate(self, slot: int, n: int) -> Optional[list[int]]:
         """Grow ``slot`` by ``n`` pages; None (state unchanged) if the pool
         or the slot's page table cannot hold them."""
+        if self.faults is not None and self.faults.fires(
+                flt.ALLOC_FAIL, slot=slot, n=n):
+            return None   # injected "pool dry" — state untouched
         if n > len(self.free_list):
             return None
         if len(self.owned[slot]) + n > self.max_pages_per_seq:
@@ -276,8 +290,26 @@ class PageAllocator:
         return pages
 
     def free(self, slot: int) -> int:
-        """Return every page of ``slot`` to the free list."""
+        """Return every page of ``slot`` to the free list.
+
+        Integrity guards (always on — they are O(pages) host work): a page
+        both owned and on the free list is a double-free; a page owned by
+        two slots means a corrupted handoff.  Either way the free list
+        would hand the same page to two sequences, so raise instead."""
         pages = self.owned[slot]
+        dup = set(pages) & set(self.free_list)
+        if dup:
+            raise PageIntegrityError(
+                f"double-free: slot {slot} owns page(s) {sorted(dup)} that "
+                f"are already on the free list")
+        for other, op in enumerate(self.owned):
+            if other == slot:
+                continue
+            shared = set(pages) & set(op)
+            if shared:
+                raise PageIntegrityError(
+                    f"freeing slot {slot}: page(s) {sorted(shared)} are "
+                    f"also owned by live slot {other}")
         n = len(pages)
         self.free_list.extend(reversed(pages))
         self.owned[slot] = []
@@ -311,6 +343,16 @@ class LinearCache:
     def reserve(self, slot: int, length: int) -> bool:
         """Linear slots are preallocated; only the capacity check applies."""
         return length <= self.max_len
+
+    def fits_idle(self, length: int) -> bool:
+        """Could an otherwise-idle engine ever hold ``length`` tokens for
+        one sequence?  False means the request can NEVER be served — the
+        submit/admission fail-fast check (DESIGN.md §12)."""
+        return length <= self.max_len
+
+    def unservable_reason(self, length: int) -> str:
+        return (f"needs {length} cache tokens but max_len is "
+                f"{self.max_len} — raise --max-len")
 
     def ensure_append(self, slot: int, length: int) -> bool:
         """Capacity for writing token ``length`` (0-based) exists up front;
@@ -347,6 +389,24 @@ class LinearCache:
         """Retire a slot: stale K/V stay (len-masked); only len resets."""
         self.cache["len"] = self.cache["len"].at[slot].set(0)
 
+    def scrub(self, slot: int) -> None:
+        """Zero the slot's sequence-axis entries before reuse.
+
+        Needed on NaN quarantine: the flash kernels mask *scores* past
+        ``len`` (``where(pos < len, sc, -1e30)``) but the masked rows still
+        enter ``p @ v`` with weight 0.0 — and ``0.0 * NaN = NaN`` — so a
+        non-finite value left behind in a retired slot would poison the
+        next tenant.  Zeroing the slot restores the all-zeros state every
+        equivalence test was built on (DESIGN.md §12)."""
+        for key in _SEQ_KEYS:
+            if key in self.cache:
+                arr = self.cache[key]
+                self.cache[key] = arr.at[:, slot].set(
+                    jnp.zeros((), arr.dtype))
+
+    def verify(self) -> None:
+        """Linear slots have no shared bookkeeping to corrupt."""
+
     def cache_bytes(self) -> int:
         return tree_bytes(self.cache)
 
@@ -362,19 +422,43 @@ class PagedCache:
     """
 
     def __init__(self, model, max_batch: int, max_len: int, page_size: int,
-                 num_pages: int = 0, max_pages_per_seq: int = 0):
+                 num_pages: int = 0, max_pages_per_seq: int = 0,
+                 faults: Optional[flt.FaultPlan] = None,
+                 integrity_checks: bool = False):
         mpps = max_pages_per_seq or pages_for(max_len, page_size)
         pool = num_pages or max_batch * mpps   # default: linear-equivalent
         self.cache: PagedKVCache = model.init_paged_cache(
             max_batch, pool, page_size, mpps)
         self.page_size = page_size
         self.max_len = min(max_len, mpps * page_size)
-        self.allocator = PageAllocator(pool, mpps, max_batch)
+        self.allocator = PageAllocator(pool, mpps, max_batch, faults=faults)
+        self.faults = faults
+        # debug mode: cross-check the device page table against the host
+        # allocator on every free (costs a device readback — tests only)
+        self.integrity_checks = integrity_checks
 
     # uniform store API ----------------------------------------------------
     @property
     def capacity(self) -> int:
         return self.max_len
+
+    def fits_idle(self, length: int) -> bool:
+        """Could an otherwise-idle engine ever hold ``length`` tokens for
+        one sequence?  False means the request can NEVER be served — no
+        amount of waiting or preemption frees enough pages — so the engine
+        fail-fasts it instead of livelocking (DESIGN.md §12)."""
+        al = self.allocator
+        return (length <= self.max_len
+                and pages_for(length, self.page_size)
+                <= min(al.num_pages, al.max_pages_per_seq))
+
+    def unservable_reason(self, length: int) -> str:
+        al = self.allocator
+        return (f"needs {pages_for(length, self.page_size)} pages of "
+                f"{self.page_size} for {length} cache tokens but the idle "
+                f"pool holds {al.num_pages} (max {al.max_pages_per_seq} "
+                f"per sequence, max_len {self.max_len}) — size num_pages "
+                f"up")
 
     def reserve(self, slot: int, length: int) -> bool:
         """Allocate the prompt's ``ceil(length / page_size)`` pages and
@@ -441,16 +525,88 @@ class PagedCache:
             new[key] = pool.at[:, pidx].set(blocked.astype(pool.dtype))
         lens = cache.lens.at[slot].set(length)
         self.cache = dataclasses.replace(cache, lens=lens, **new)
+        if self.faults is not None and self.faults.fires(
+                flt.SPLICE_CORRUPT, slot=slot):
+            # misdirect logical page 0 at the next pool page — exactly the
+            # bug class the free()-time integrity guard exists to catch
+            bad = (pages[0] + 1) % self.allocator.num_pages
+            self.cache = dataclasses.replace(
+                self.cache,
+                page_table=self.cache.page_table.at[slot, 0].set(bad))
 
     def free(self, slot: int) -> int:
         """Reclaim the slot's pages (stale pool contents stay — every read
         is gated by the page table and lens)."""
+        if self.integrity_checks:
+            self._check_free(slot)
         n = self.allocator.free(slot)
         pt = self.cache.page_table.at[slot].set(-1)
         lens = self.cache.lens.at[slot].set(0)
         self.cache = dataclasses.replace(self.cache, page_table=pt,
                                          lens=lens)
         return n
+
+    def _check_free(self, slot: int) -> None:
+        """Debug-mode free: the device page-table row must mirror the host
+        allocator, and no other row may reference the pages being freed
+        (else the free list would hand live KV to a new tenant)."""
+        owned = self.allocator.owned[slot]
+        pt = np.asarray(self.cache.page_table)
+        row, n = pt[slot], len(owned)
+        if list(row[:n]) != owned or not (row[n:] == -1).all():
+            raise PageIntegrityError(
+                f"free(slot={slot}): device page-table row "
+                f"{row.tolist()} diverged from allocator bookkeeping "
+                f"{owned} — corrupted splice/append")
+        if n:
+            others = np.delete(pt, slot, axis=0)
+            shared = np.intersect1d(others[others >= 0], owned)
+            if shared.size:
+                raise PageIntegrityError(
+                    f"free(slot={slot}): page(s) {shared.tolist()} still "
+                    f"referenced by another live page-table row")
+
+    def scrub(self, slot: int) -> None:
+        """Zero the slot's pool pages before they return to the free list.
+
+        Needed on NaN quarantine: the flash kernels mask *scores* past
+        ``lens`` (``where(pos < len, sc, -1e30)``) but masked rows still
+        enter ``p @ v`` with weight 0.0 — and ``0.0 * NaN = NaN`` — so a
+        non-finite value in a recycled page would poison its next owner
+        through that page's garbage tail.  Zeroing restores the pool's
+        initial state for exactly these pages (DESIGN.md §12)."""
+        pages = self.allocator.owned[slot]
+        if not pages:
+            return
+        pidx = jnp.asarray(pages, jnp.int32)
+        new = {}
+        for key in _SEQ_KEYS:
+            pool = getattr(self.cache, key)
+            if pool is None:
+                continue
+            new[key] = pool.at[:, pidx].set(jnp.zeros((), pool.dtype))
+        self.cache = dataclasses.replace(self.cache, **new)
+
+    def verify(self) -> None:
+        """Full pool audit (tests / post-trace): every page is either free
+        or owned exactly once, and the device page tables mirror the host
+        allocator.  Raises :class:`PageIntegrityError` on any violation."""
+        al = self.allocator
+        seen = list(al.free_list)
+        for op in al.owned:
+            seen.extend(op)
+        if sorted(seen) != list(range(al.num_pages)):
+            raise PageIntegrityError(
+                f"page conservation violated: free list + owned = "
+                f"{sorted(seen)}, expected every page of "
+                f"{al.num_pages} exactly once")
+        pt = np.asarray(self.cache.page_table)
+        for slot, op in enumerate(al.owned):
+            row, n = pt[slot], len(op)
+            if list(row[:n]) != op or not (row[n:] == -1).all():
+                raise PageIntegrityError(
+                    f"slot {slot}: device page-table row {row.tolist()} "
+                    f"!= allocator owned {op}")
 
     def cache_bytes(self) -> int:
         return tree_bytes(self.cache)

@@ -42,6 +42,17 @@ the overflowing K/V write is dropped (slot ``max_len - 1`` keeps its token)
 and ``cache["len"]`` saturates at ``max_len``, so exhaustion is observable
 as ``len == max_len``; the Engine retires sequences before that point.
 
+Failure-model contract (DESIGN.md §12): quantization conserves poison, it
+never launders it.  Int8/int4 *codes* cannot encode NaN, but the fp scale
+factor can — ``_kv_quantize`` of a non-finite K/V row yields a NaN scale
+(``max(|NaN|) = NaN``), so dequantizing that row is NaN again and the
+corruption surfaces in that row's attention output and final logits.
+Because every batch row flows through per-row attention/norms/matmuls, a
+non-finite value in one sequence cannot reach a co-batched sequence's
+logits — which is what lets the Engine's per-row ``isfinite`` check
+quarantine exactly the poisoned slot (pinned by
+tests/test_engine_faults.py::test_kv_quantize_conserves_nan).
+
 ``QuantizedModel`` exposes the same ``decode_step`` / ``prefill`` /
 ``init_cache`` interface as ``repro.models.Model`` so the continuous-
 batching ``Engine`` and the dry-run lower it unchanged.

@@ -1,0 +1,393 @@
+"""Engine failure model: one deterministic test per terminal status, the
+NaN-quarantine acceptance criterion, the preemption-storm / watchdog
+livelock guards, and the fault-injection plumbing itself (DESIGN.md §12).
+
+Every test is hypothesis-free and seeded (runs everywhere); the fuzzing
+counterpart that interleaves faults with random traces lives in
+tests/test_engine_fuzz.py.  Shared configuration mirrors the scheduler
+suite: llama-micro on the w8a16kv8 packed stack, ref kernels, tile ==
+page — the regime where linear and paged engines are bit-identical, so
+"survivors token-identical to solo runs" is an exact assertion.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.models import build_model
+from repro.serve import faults as flt
+from repro.serve.engine import (Engine, QueueFull, RequestStatus,
+                                ServeConfig)
+from repro.serve.faults import Fault, FaultPlan
+from repro.serve.kv_cache import LinearCache, PagedCache, PageIntegrityError
+from repro.serve.quantized import QuantizedModel, _kv_quantize, \
+    quantize_lm_packed
+
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                       kv_bits=8)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=PS)
+    return cfg, qm, packed
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+
+def _scfg(**kw):
+    base = dict(max_batch=2, max_len=64, max_new=6, prefill_bucket=16,
+                page_size=PS)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _pool_conserved(eng):
+    eng._kv.verify()
+    al = eng._kv.allocator
+    return al.num_free == al.num_pages and all(not o for o in al.owned)
+
+
+# ---------------------------------------------------------------------------
+# the quantization layer's poison contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [4, 8])
+def test_kv_quantize_conserves_nan(kv_bits):
+    """Codes cannot encode NaN but the fp scale carries it: quantizing a
+    non-finite K/V row must yield a non-finite scale, so dequantization
+    reproduces the poison instead of laundering it into plausible values
+    — the property the Engine's logit-level isfinite check relies on."""
+    x = jnp.ones((2, 4, 64), jnp.float32)
+    x = x.at[1, 2, 7].set(jnp.nan)
+    codes, scale = _kv_quantize(x, kv_bits)
+    assert not jnp.isnan(codes.astype(jnp.float32)).any()   # ints can't
+    assert jnp.isnan(scale.astype(jnp.float32)).any()
+    # the clean row's scales stay finite: poison is row-local
+    assert jnp.isfinite(scale[0].astype(jnp.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# submit-boundary validation (actionable errors, not tracebacks)
+# ---------------------------------------------------------------------------
+
+def test_submit_validation_errors(served):
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg())
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.zeros((2, 3), np.int32))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(_prompts(cfg, [64])[0])   # linear: needs 65 > max_len
+    paged = Engine(qm, packed, _scfg(paged=True, num_pages=2))
+    with pytest.raises(ValueError, match="pool"):
+        paged.submit(_prompts(cfg, [40])[0])
+    with pytest.raises(ValueError, match="max_new"):
+        Engine(qm, packed, _scfg(max_new=0))
+    # every rejection above was side-effect free
+    assert eng._all == [] and paged._all == []
+
+
+def test_queue_full_backpressure(served):
+    """REJECTED_QUEUE_FULL: a bounded queue raises QueueFull at submit;
+    the rejected request is terminal (on_done fired) and the engine keeps
+    serving the admitted ones."""
+    cfg, qm, packed = served
+    done = []
+    eng = Engine(qm, packed, _scfg(max_batch=1, max_new=2, max_queue=2))
+    for p in _prompts(cfg, [5, 7]):
+        eng.submit(p, on_done=lambda r: done.append(r.rid))
+    with pytest.raises(QueueFull) as exc:
+        eng.submit(_prompts(cfg, [6])[0],
+                   on_done=lambda r: done.append(r.rid))
+    rej = exc.value.request
+    assert rej.status is RequestStatus.REJECTED_QUEUE_FULL
+    assert rej.done and rej.rid in done     # on_done fired at rejection
+    reqs = eng.run()
+    assert eng.status_counts() == {"COMPLETED": 2,
+                                   "REJECTED_QUEUE_FULL": 1}
+    assert sorted(done) == [r.rid for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# FAILED_NAN: quarantine isolates exactly the poisoned slot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_nan_quarantine_isolates_slot(served, chunked):
+    """Acceptance: inject a NaN burst into one co-batched request's decode
+    logits — (a) it retires FAILED_NAN, (b) every survivor's stream is
+    token-identical to its solo no-fault run, (c) the page pool is
+    conserved after the quarantine."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [13, 9, 11])
+    solo = []
+    for p in prompts:
+        eng = Engine(qm, packed, _scfg(max_batch=1))
+        eng.submit(p)
+        solo.append(eng.run()[0].out_tokens)
+
+    plan = FaultPlan(Fault(point=flt.NAN_LOGITS, rid=1, after_step=2))
+    eng = Engine(qm, packed,
+                 _scfg(max_batch=3, paged=True,
+                       prefill_chunk=8 if chunked else 0), faults=plan)
+    for p in prompts:
+        eng.submit(p)
+    reqs = eng.run(max_steps=100)
+    assert reqs[1].status is RequestStatus.FAILED_NAN
+    assert "non-finite" in reqs[1].error
+    assert plan.fired(flt.NAN_LOGITS) == 1
+    for i in (0, 2):
+        assert reqs[i].status is RequestStatus.COMPLETED
+        assert reqs[i].out_tokens == solo[i], f"survivor {i} diverged"
+    assert _pool_conserved(eng)
+
+
+def test_nan_quarantine_scrubs_slot(served):
+    """Quarantine zeroes the victim's pages/slot range before the free
+    list recycles them: masked attention rows still enter p @ v with
+    weight 0.0, and 0.0 * NaN = NaN, so stale poison in a reused page
+    would corrupt its next tenant."""
+    cfg, qm, packed = served
+    store = PagedCache(qm, max_batch=2, max_len=32, page_size=PS)
+    assert store.reserve(0, 10) and store.reserve(1, 5)
+    poisoned = dataclasses.replace(
+        store.cache, k_scale=store.cache.k_scale + jnp.float32(jnp.nan))
+    store.cache = poisoned
+    store.scrub(0)
+    ks = np.asarray(store.cache.k_scale, np.float32)
+    for page in store.allocator.owned[0]:
+        assert np.isfinite(ks[:, page]).all()    # victim pages zeroed
+    for page in store.allocator.owned[1]:
+        assert np.isnan(ks[:, page]).all()       # others untouched
+
+    lin = LinearCache(qm, max_batch=2, max_len=32)
+    lin.cache["k_scale"] = lin.cache["k_scale"] + jnp.float32(jnp.nan)
+    lin.scrub(0)
+    ks = np.asarray(lin.cache["k_scale"], np.float32)
+    assert np.isfinite(ks[:, 0]).all() and np.isnan(ks[:, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# FAILED_DEADLINE / CANCELLED
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_running_request(served):
+    """The DEADLINE fault makes TTL expiry instant and clock-independent:
+    the victim retires FAILED_DEADLINE mid-decode with a partial stream,
+    co-batched requests finish normally."""
+    cfg, qm, packed = served
+    plan = FaultPlan(Fault(point=flt.DEADLINE, rid=0, after_step=2))
+    eng = Engine(qm, packed, _scfg(max_new=8, paged=True), faults=plan)
+    r0 = eng.submit(_prompts(cfg, [9])[0])
+    r1 = eng.submit(_prompts(cfg, [7])[0])
+    eng.run(max_steps=100)
+    assert r0.status is RequestStatus.FAILED_DEADLINE
+    assert 0 < len(r0.out_tokens) < 8      # partial stream, then expired
+    assert r1.status is RequestStatus.COMPLETED
+    assert len(r1.out_tokens) == 8
+    assert _pool_conserved(eng)
+
+
+def test_deadline_expires_queued_request(served):
+    """A real (wall-clock) TTL that is already past when the engine first
+    steps: the queued request never runs, FAILED_DEADLINE, and the later
+    submission is unaffected."""
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg(max_batch=1, max_new=2))
+    doomed = eng.submit(_prompts(cfg, [5])[0], ttl_s=1e-9)
+    ok = eng.submit(_prompts(cfg, [7])[0])
+    eng.run(max_steps=100)
+    assert doomed.status is RequestStatus.FAILED_DEADLINE
+    assert doomed.out_tokens == [] and "queued" in doomed.error
+    assert ok.status is RequestStatus.COMPLETED
+
+
+def test_cancel_reclaims_pages_in_every_phase(served):
+    """cancel(rid) works on queued, mid-prefill and decoding requests,
+    reclaiming pages each time; unknown/terminal rids return False."""
+    cfg, qm, packed = served
+    eng = Engine(qm, packed, _scfg(max_batch=1, max_new=8, paged=True,
+                                   prefill_chunk=4))
+    mid = eng.submit(_prompts(cfg, [12])[0])
+    queued = eng.submit(_prompts(cfg, [5])[0])
+    eng.step()                    # `mid` is now mid-prefill, `queued` waits
+    assert eng._prefill_prog[0] is not None
+    assert eng.cancel(queued.rid) and queued.status is RequestStatus.CANCELLED
+    assert eng.cancel(mid.rid) and mid.status is RequestStatus.CANCELLED
+    assert _pool_conserved(eng)
+    decoding = eng.submit(_prompts(cfg, [5])[0])
+    for _ in range(4):
+        eng.step()                # past prefill, into decode
+    assert decoding.out_tokens    # streaming
+    assert eng.cancel(decoding.rid)
+    assert decoding.status is RequestStatus.CANCELLED
+    assert _pool_conserved(eng)
+    assert not eng.cancel(decoding.rid)   # already terminal
+    assert not eng.cancel(999)            # unknown
+
+
+# ---------------------------------------------------------------------------
+# FAILED_CALLBACK: exceptions are isolated per-request
+# ---------------------------------------------------------------------------
+
+def test_on_token_exception_fails_only_its_request(served):
+    """A raising on_token (real exception, no fault plan) fails its own
+    request as FAILED_CALLBACK mid-step; co-batched requests keep
+    streaming and the pool is conserved — previously this unwound step()
+    mid-bookkeeping."""
+    cfg, qm, packed = served
+
+    def bomb(r, t):
+        if len(r.out_tokens) == 3:
+            raise RuntimeError("consumer exploded")
+
+    eng = Engine(qm, packed, _scfg(max_batch=2, max_new=6, paged=True))
+    victim = eng.submit(_prompts(cfg, [9])[0], on_token=bomb)
+    other = eng.submit(_prompts(cfg, [7])[0])
+    eng.run(max_steps=100)
+    assert victim.status is RequestStatus.FAILED_CALLBACK
+    assert len(victim.out_tokens) == 3
+    assert other.status is RequestStatus.COMPLETED
+    assert len(other.out_tokens) == 6
+    assert _pool_conserved(eng)
+
+
+def test_on_done_exception_is_detached(served):
+    """on_done fires after the request is terminal, so a raising on_done
+    is logged and detached — the status stands and the engine survives."""
+    cfg, qm, packed = served
+
+    def bomb(_r):
+        raise RuntimeError("done-handler exploded")
+
+    eng = Engine(qm, packed, _scfg(max_batch=1, max_new=2))
+    req = eng.submit(_prompts(cfg, [5])[0], on_done=bomb)
+    reqs = eng.run(max_steps=50)
+    assert req.status is RequestStatus.COMPLETED
+    assert req.on_done is None          # fired exactly once, then detached
+    assert reqs == [req]
+
+
+# ---------------------------------------------------------------------------
+# FAILED_POOL: storm guard + watchdog (the livelock acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_preemption_storm_guard_fails_stalled_request(served):
+    """Seeded preemption-storm trace: the long prompt is evicted
+    mid-prefill by the first short decoder's page growth, re-admitted
+    into a pool drained to exactly zero free pages, then evicted
+    mid-prefill AGAIN by the second decoder — zero growth between
+    evictions (the no-progress signature).  The stall guard fails it
+    explicitly as FAILED_POOL within a bounded step count — the trace
+    that previously evict/restarted indefinitely — while both shorts
+    complete token-identically to an unpressured run."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg, [8, 14, 30])
+    eng0 = Engine(qm, packed, _scfg(max_batch=3, max_new=16,
+                                    prefill_chunk=2))
+    for p in prompts:
+        eng0.submit(p)
+    roomy = eng0.run(max_steps=300)
+    eng = Engine(qm, packed, _scfg(max_batch=3, max_new=16, prefill_chunk=2,
+                                   paged=True, num_pages=7,
+                                   stall_preemptions=1))
+    s1, s2, long_req = (eng.submit(p) for p in prompts)
+    eng.run(max_steps=300)             # bounded: raises if it livelocks
+    assert long_req.status is RequestStatus.FAILED_POOL
+    assert "storm" in long_req.error
+    assert long_req.stalls >= 1 and long_req.preemptions >= 2
+    for got, want in ((s1, roomy[0]), (s2, roomy[1])):
+        assert got.status is RequestStatus.COMPLETED
+        assert got.out_tokens == want.out_tokens
+    assert _pool_conserved(eng)
+
+
+def test_watchdog_degrades_starved_admission(served):
+    """A persistent allocator fault (pool permanently 'dry') starves
+    admission with no active slot to wait on: the watchdog fails the
+    queue head with FAILED_POOL after watchdog_steps instead of spinning
+    forever, and the trace terminates within the step budget."""
+    cfg, qm, packed = served
+    plan = FaultPlan(Fault(point=flt.ALLOC_FAIL, count=0))   # never drains
+    eng = Engine(qm, packed, _scfg(paged=True, watchdog_steps=4),
+                 faults=plan)
+    for p in _prompts(cfg, [9, 7]):
+        eng.submit(p)
+    reqs = eng.run(max_steps=60)
+    assert all(r.status is RequestStatus.FAILED_POOL for r in reqs)
+    assert all("watchdog" in r.error for r in reqs)
+    assert _pool_conserved(eng)
+
+
+def test_engine_recovers_after_fault_drains(served):
+    """Serviceability: a bounded allocator-fault burst delays admission
+    but once the plan drains every request completes, the pool is
+    conserved, and a fresh submission on the same engine still serves."""
+    cfg, qm, packed = served
+    plan = FaultPlan(Fault(point=flt.ALLOC_FAIL, count=3))
+    eng = Engine(qm, packed, _scfg(paged=True, max_new=4,
+                                   watchdog_steps=8), faults=plan)
+    for p in _prompts(cfg, [9, 7]):
+        eng.submit(p)
+    eng.run(max_steps=200)
+    assert plan.drained
+    assert eng.status_counts() == {"COMPLETED": 2}
+    late = eng.submit(_prompts(cfg, [11])[0])
+    eng.run(max_steps=200)
+    assert late.status is RequestStatus.COMPLETED
+    assert len(late.out_tokens) == 4
+    assert _pool_conserved(eng)
+
+
+# ---------------------------------------------------------------------------
+# fault plumbing: splice corruption detection + plan determinism
+# ---------------------------------------------------------------------------
+
+def test_splice_corruption_caught_by_integrity_checks(served):
+    """SPLICE_CORRUPT misdirects one device page-table entry; the
+    debug-mode free() cross-check (ServeConfig.integrity_checks) must
+    refuse to recycle the slot instead of serving crossed KV."""
+    cfg, qm, packed = served
+    plan = FaultPlan(Fault(point=flt.SPLICE_CORRUPT))
+    eng = Engine(qm, packed, _scfg(max_batch=1, max_new=2, paged=True,
+                                   integrity_checks=True), faults=plan)
+    eng.submit(_prompts(cfg, [9])[0])
+    with pytest.raises(PageIntegrityError, match="diverged"):
+        eng.run(max_steps=50)
+
+
+def test_fault_plan_is_deterministic(served):
+    """Same plan spec + same trace => identical firing log and identical
+    request outcomes (the replayability the fuzz harness shrinks with)."""
+    cfg, qm, packed = served
+
+    def go():
+        plan = FaultPlan(Fault(point=flt.NAN_LOGITS, prob=0.3, count=2,
+                               after_step=1), seed=42)
+        eng = Engine(qm, packed, _scfg(max_batch=2, max_new=6, paged=True),
+                     faults=plan)
+        for p in _prompts(cfg, [9, 7, 11]):
+            eng.submit(p)
+        eng.run(max_steps=200)
+        return plan.log, [(r.status.name, r.out_tokens) for r in eng._all]
+
+    assert go() == go()
+
+
+def test_fault_plan_rejects_unknown_point():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        Fault(point="definitely_not_a_point")

@@ -15,6 +15,13 @@ Invariants per trace (the scheduler's contracts, DESIGN.md §9-§10):
     pages than its reservation/length bound, and after the drain every
     page is back on the free list with peak usage within the pool.
 
+Fault traces (``Trace.fault`` + :func:`check_fault_trace`) interleave a
+seeded injection — NaN burst, allocator no-pages, deadline expiry,
+raising callback — with the same random traces and assert the failure
+model's invariants instead (DESIGN.md §12): bounded termination, page
+conservation through quarantine, victim containment, survivor identity
+against solo no-fault runs, and post-fault serviceability.
+
 The hypothesis tests shrink failing traces to minimal repros (replacing
 the fixed mixed-length trace of the earlier suite); the seeded variants
 run the same checker without hypothesis installed.  Profiles: a bounded
@@ -30,7 +37,9 @@ import pytest
 from repro.configs import get_config
 from repro.core.quantizer import QuantConfig
 from repro.models import build_model
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import faults as flt
+from repro.serve.engine import Engine, RequestStatus, ServeConfig
+from repro.serve.faults import Fault, FaultPlan
 from repro.serve.kv_cache import pages_for
 from repro.serve.quantized import QuantizedModel, quantize_lm_packed
 
@@ -64,6 +73,9 @@ def _served(kv_bits):
     return _SERVED[kv_bits]
 
 
+FAULT_KINDS = ("nan", "alloc", "deadline", "callback")
+
+
 @dataclasses.dataclass
 class Trace:
     prompt_lens: tuple       # submission order == arrival order
@@ -73,13 +85,14 @@ class Trace:
     kv_bits: int
     pool_slack: int          # pages beyond the single-request minimum
     seed: int = 0
+    fault: str = ""          # "" = clean trace; else a FAULT_KINDS entry
 
     def __repr__(self):      # the shrunk repro hypothesis prints
         return (f"Trace(prompt_lens={self.prompt_lens}, "
                 f"max_new={self.max_new}, max_batch={self.max_batch}, "
                 f"prefill_chunk={self.prefill_chunk}, "
                 f"kv_bits={self.kv_bits}, pool_slack={self.pool_slack}, "
-                f"seed={self.seed})")
+                f"seed={self.seed}, fault={self.fault!r})")
 
 
 def _check_page_invariants(eng):
@@ -171,6 +184,93 @@ def check_trace(tr: Trace, solo: bool = True, expect_preempt: bool = False):
     return base
 
 
+def _fault_plan(tr: Trace, victim: int) -> FaultPlan:
+    if tr.fault == "nan":
+        return FaultPlan(Fault(point=flt.NAN_LOGITS, rid=victim,
+                               after_step=1))
+    if tr.fault == "alloc":
+        return FaultPlan(Fault(point=flt.ALLOC_FAIL, count=3, after_step=1))
+    if tr.fault == "deadline":
+        return FaultPlan(Fault(point=flt.DEADLINE, rid=victim,
+                               after_step=1))
+    if tr.fault == "callback":
+        return FaultPlan(Fault(point=flt.CALLBACK_RAISE, rid=victim,
+                               after_step=1))
+    raise AssertionError(tr.fault)
+
+
+_FAULT_STATUS = {"nan": RequestStatus.FAILED_NAN,
+                 "deadline": RequestStatus.FAILED_DEADLINE,
+                 "callback": RequestStatus.FAILED_CALLBACK}
+
+
+def check_fault_trace(tr: Trace):
+    """Interleave an injected fault with a random trace (DESIGN.md §12)
+    and assert the failure-model invariants:
+
+      * **no hang**: the trace drains within an explicit step budget;
+      * **page conservation**: full pool audit (``verify``) + free-list
+        identity after the drain, even mid-fault;
+      * **victim containment**: the targeted request ends in the fault's
+        terminal status (or COMPLETED if it outran the trigger) and its
+        stream is a prefix of its solo no-fault run;
+      * **survivor identity**: every untargeted request completes
+        token-identical to its solo no-fault run;
+      * **serviceability**: after the fault drains, a fresh submission on
+        the same engine completes normally.
+
+    Transient allocator faults (``alloc``) must not fail anyone: eviction
+    + resume already round-trips token-identically, so every request
+    completes with its solo stream.
+    """
+    assert tr.fault in FAULT_KINDS
+    cfg, qm, packed = _served(tr.kv_bits)
+    rng = np.random.default_rng(tr.seed)
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n in tr.prompt_lens]
+    max_len = -(-(max(tr.prompt_lens) + tr.max_new + 1) // PS) * PS
+    pool_min = pages_for(max(tr.prompt_lens) + tr.max_new, PS)
+    scfg = ServeConfig(
+        max_batch=tr.max_batch, max_len=max_len, max_new=tr.max_new,
+        prefill_bucket=16, page_size=PS, paged=True,
+        num_pages=pool_min + tr.pool_slack,
+        prefill_chunk=tr.prefill_chunk, watchdog_steps=8)
+    solo = [
+        _run_engine(qm, packed,
+                    dataclasses.replace(scfg, max_batch=1, num_pages=0),
+                    [p])[0][0]
+        for p in prompts]
+
+    victim = len(prompts) // 2
+    plan = _fault_plan(tr, victim)
+    eng = Engine(qm, packed, scfg, faults=plan)
+    for p in prompts:
+        eng.submit(p, on_token=lambda r, t: _check_page_invariants(eng))
+    budget = 200 + 80 * len(prompts)
+    reqs = eng.run(max_steps=budget)           # raises if the trace hangs
+
+    assert all(r.done for r in reqs)
+    for i, r in enumerate(reqs):
+        if tr.fault != "alloc" and i == victim:
+            assert r.status in (_FAULT_STATUS[tr.fault],
+                                RequestStatus.COMPLETED), (tr, r.status)
+            assert r.out_tokens == solo[i][:len(r.out_tokens)], \
+                f"victim stream not a solo prefix on {tr}"
+            if r.status is RequestStatus.COMPLETED:
+                assert plan.fired() == 0       # it outran the trigger
+        else:
+            assert r.status is RequestStatus.COMPLETED, (tr, i, r.status)
+            assert r.out_tokens == solo[i], f"survivor {i} diverged on {tr}"
+    eng._kv.verify()
+    al = eng._kv.allocator
+    assert al.num_free == al.num_pages and all(not o for o in al.owned)
+    # serviceability after the fault: same engine, fresh request (its rid
+    # can never match the victim filter; leftover alloc faults only delay)
+    late = eng.submit(prompts[0])
+    eng.run(max_steps=budget)
+    assert late.status is RequestStatus.COMPLETED
+    assert late.out_tokens == solo[0], f"post-fault submission diverged {tr}"
+
+
 # ---------------------------------------------------------------------------
 # seeded variants (run without hypothesis — and in this repo's fast lane)
 # ---------------------------------------------------------------------------
@@ -204,6 +304,23 @@ def test_trace_equivalence_seeded_pressure_kv16():
     check_trace(Trace(prompt_lens=(15, 14, 13), max_new=16, max_batch=3,
                       prefill_chunk=4, kv_bits=16, pool_slack=2, seed=2),
                 solo=False, expect_preempt=True)
+
+
+@pytest.mark.parametrize("fault", FAULT_KINDS)
+def test_fault_trace_seeded(fault):
+    """One seeded fault trace per injection kind: victim contained,
+    survivors solo-identical, pool conserved, engine serviceable after."""
+    check_fault_trace(Trace(prompt_lens=(13, 9, 21), max_new=5,
+                            max_batch=2, prefill_chunk=8, kv_bits=8,
+                            pool_slack=3, seed=3, fault=fault))
+
+
+def test_fault_trace_seeded_kv4_pressure():
+    """NaN quarantine under pool pressure on the packed int4 cache: the
+    scrub + free path must round-trip nibble pools and block scales."""
+    check_fault_trace(Trace(prompt_lens=(15, 14, 13), max_new=6,
+                            max_batch=3, prefill_chunk=4, kv_bits=4,
+                            pool_slack=2, seed=2, fault="nan"))
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +358,37 @@ if HAVE_HYPOTHESIS:
         """Deep profile (@slow): more examples, solo-run identity
         included — the full satellite contract."""
         check_trace(tr, solo=True)
+
+    fault_trace_strategy = st.builds(
+        Trace,
+        prompt_lens=st.lists(st.integers(1, 30), min_size=1, max_size=3)
+        .map(tuple),
+        max_new=st.integers(1, 6),
+        max_batch=st.integers(1, 3),
+        prefill_chunk=st.sampled_from([4, 8, 16]),
+        kv_bits=st.sampled_from([4, 8, 16]),
+        pool_slack=st.integers(0, 4),
+        seed=st.integers(0, 2 ** 16),
+        fault=st.sampled_from(FAULT_KINDS),
+    )
+
+    @needs_hypothesis
+    @settings(max_examples=2, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=fault_trace_strategy)
+    def test_engine_fault_fuzz_fast(tr):
+        """Shrinkable fault traces (the `faults=` strategy dimension):
+        random trace x random injection kind, checked against the full
+        failure-model invariant set."""
+        check_fault_trace(tr)
+
+    @needs_hypothesis
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=fault_trace_strategy)
+    def test_engine_fault_fuzz_deep(tr):
+        check_fault_trace(tr)
 else:
     @needs_hypothesis
     def test_engine_fuzz_fast():
@@ -248,4 +396,12 @@ else:
 
     @needs_hypothesis
     def test_engine_fuzz_deep():
+        pass
+
+    @needs_hypothesis
+    def test_engine_fault_fuzz_fast():
+        pass
+
+    @needs_hypothesis
+    def test_engine_fault_fuzz_deep():
         pass

@@ -198,11 +198,17 @@ def test_preempt_resume_round_trip_equivalence(served):
 
 
 def test_oversized_request_raises_instead_of_deadlock(served):
+    """A prompt the idle pool can never hold is rejected AT SUBMIT with an
+    actionable message (DESIGN.md §12) — no engine state changes, so the
+    engine keeps serving."""
     cfg, qm, packed = served
     eng = Engine(qm, packed, _scfg(paged=True, num_pages=2))
-    eng.submit(_prompts(cfg, [40])[0])   # needs 5 pages; pool holds 2
-    with pytest.raises(RuntimeError, match="pool"):
-        eng.run()
+    with pytest.raises(ValueError, match="pool"):
+        eng.submit(_prompts(cfg, [40])[0])   # needs 6 pages; pool holds 2
+    # the rejection was side-effect free: a servable request still runs
+    eng.submit(_prompts(cfg, [9])[0])
+    reqs = eng.run()
+    assert reqs[0].done and len(reqs[0].out_tokens) == 6
 
 
 # ---------------------------------------------------------------------------
@@ -227,9 +233,8 @@ def test_chunked_oversized_request_raises(served):
     cfg, qm, packed = served
     eng = Engine(qm, packed, _scfg(paged=True, num_pages=2,
                                    prefill_chunk=8))
-    eng.submit(_prompts(cfg, [40])[0])
-    with pytest.raises(RuntimeError, match="pool"):
-        eng.run()
+    with pytest.raises(ValueError, match="pool"):
+        eng.submit(_prompts(cfg, [40])[0])
 
 
 def test_chunked_rejects_unsupported_model():

@@ -117,6 +117,62 @@ def test_page_allocator_accounting():
     assert al.owned[0] == [] and al.owned[1] == []
 
 
+def test_page_allocator_double_free_raises():
+    """Integrity guard: a page both owned and on the free list means the
+    free list would hand one page to two sequences — free() must raise,
+    not silently extend the corruption (DESIGN.md §12)."""
+    al = kvc.PageAllocator(num_pages=4, max_pages_per_seq=4, max_batch=2)
+    pages = al.allocate(0, 2)
+    al.free_list.append(pages[0])             # simulate the double-free
+    with pytest.raises(kvc.PageIntegrityError, match="double-free"):
+        al.free(0)
+
+
+def test_page_allocator_shared_page_raises():
+    """Integrity guard: freeing a page another live slot still owns would
+    recycle KV that slot is actively reading."""
+    al = kvc.PageAllocator(num_pages=4, max_pages_per_seq=4, max_batch=2)
+    pages = al.allocate(0, 2)
+    al.allocate(1, 1)
+    al.owned[1].append(pages[1])              # simulate a corrupted handoff
+    with pytest.raises(kvc.PageIntegrityError, match="also owned by"):
+        al.free(0)
+    with pytest.raises(kvc.PageIntegrityError, match="also owned by"):
+        al.free(1)
+
+
+def test_paged_cache_verify_audits_device_table():
+    """PagedCache.verify(): full conservation + device/host mirror audit —
+    the post-trace invariant every fault test leans on."""
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    store = kvc.PagedCache(model, max_batch=2, max_len=32, page_size=8)
+    assert store.reserve(0, 11) and store.reserve(1, 5)
+    store.verify()                            # healthy state passes
+    broken = dataclasses.replace(
+        store.cache, page_table=store.cache.page_table.at[0, 0].set(
+            int(store.cache.page_table[1, 0])))
+    store.cache = broken
+    with pytest.raises(kvc.PageIntegrityError, match="page-table row"):
+        store.verify()
+
+
+def test_paged_cache_integrity_checked_free_catches_misdirection():
+    """Debug-mode free (integrity_checks): a device page-table row that
+    diverged from the host allocator must refuse the free."""
+    cfg = get_config("llama-micro")
+    model = build_model(cfg)
+    store = kvc.PagedCache(model, max_batch=2, max_len=32, page_size=8,
+                           integrity_checks=True)
+    assert store.reserve(0, 11)
+    store.free(0)                             # healthy free passes
+    assert store.reserve(0, 11)
+    store.cache = dataclasses.replace(
+        store.cache, page_table=store.cache.page_table.at[0, 1].set(-1))
+    with pytest.raises(kvc.PageIntegrityError, match="diverged"):
+        store.free(0)
+
+
 def test_pages_track_sequence_length():
     """Free-list accounting: a sequence of length n owns exactly
     ceil(n / page_size) pages through reserve + ensure_append growth."""
