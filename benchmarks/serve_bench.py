@@ -37,6 +37,13 @@ asserts the run terminates (storm guard + watchdog bound every livelock),
 and audits page conservation afterwards.  ``benchmarks.run --faults``
 runs ONLY this row plus its clean baseline (the CI smoke), merging the
 ``degraded`` section into an existing ``BENCH_serve.json``.
+
+The **scaling rows** (DESIGN.md §13) replay the trace through the
+mesh-native sharded engine on 1/2/4/8 virtual CPU devices — per-device
+weight + KV bytes, collective bytes per decode step, token identity vs
+the 1-device mesh.  They run in a subprocess (``serve_scaling.py``; the
+device-count flag must precede jax init) and land as the ``scaling``
+section of ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -245,6 +252,11 @@ def run():
     # degraded mode: same trace under injected pool pressure
     deg, deg_rows = _degraded_doc_and_rows(qm, packed, prompts, pgd)
 
+    # mesh scaling: the sharded engine on 1/2/4/8 virtual devices
+    # (subprocess — XLA's device-count flag must precede jax init)
+    from benchmarks import serve_scaling
+    scaling = serve_scaling.run_scaling()
+
     doc = {
         "arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref",
         "trace_prompt_lens": [int(len(p)) for p in prompts],
@@ -270,6 +282,7 @@ def run():
             "p99_ratio": itl_whole["p99_ms"] / itl_chunk["p99_ms"],
         },
         "degraded": deg,
+        "scaling": scaling,
     }
     common.ART.mkdir(parents=True, exist_ok=True)
     BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
@@ -302,4 +315,5 @@ def run():
     rows.append(("serve/itl_chunked_vs_whole_p99", 0.0,
                  f"ratio={doc['itl']['p99_ratio']:.2f}x"))
     rows.extend(deg_rows)
+    rows.extend(serve_scaling.scaling_rows(scaling))
     return rows

@@ -15,6 +15,9 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as _sharding
 from repro.core.qtensor import QTensor
 from repro.kernels import dequant_matmul as dq
 from repro.kernels import flash_decode as fd
@@ -25,6 +28,58 @@ from repro.kernels import ref
 from repro.utils import next_multiple
 
 Mode = Literal["auto", "pallas", "interpret", "ref"]
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel (shard_map) dispatch for the flash kernels
+# ---------------------------------------------------------------------------
+# With a mesh bound via ``repro.sharding.use_mesh``, the attention kernels
+# run under ``shard_map`` with the KV-head dim split across the "model"
+# axis: GQA folding already gives every KV head its own q block, so each
+# shard runs the UNCHANGED kernel body on its head slice (per-shard Hkv,
+# head-sliced cache pools) and the per-shard outputs concatenate along the
+# head dim — the only collective of the attention block is the all-gather
+# GSPMD inserts afterwards for the (replicated-K) wo matmul.  Page tables,
+# lengths and offsets are replicated: pages stay device-local, so the
+# page-table gather in the kernel's BlockSpec index map never crosses
+# devices (DESIGN.md §13).  The batch dim additionally splits over "data"
+# when it divides.
+
+def _tp_mesh(hq: int, hkv: int, b: int):
+    """(mesh, dp_axis) when the bound mesh head-splits these shapes over
+    "model"; None when unsharded dispatch should run (no mesh, size-1
+    model axis, or head counts that do not divide)."""
+    mesh = _sharding.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    m = mesh.shape["model"]
+    if m <= 1 or hq % m or hkv % m:
+        return None
+    dp = ("data" if "data" in mesh.axis_names and mesh.shape["data"] > 1
+          and b % mesh.shape["data"] == 0 else None)
+    return mesh, dp
+
+
+def _kv_entry_specs(k_scale, dp, paged: bool):
+    """PartitionSpecs for cache entries: head dim (index 2) over "model";
+    linear entries batch-split over ``dp``, pool entries replicated over
+    "data" (the page pool has no batch dim)."""
+    lead = (None, None) if paged else (dp, None)
+    kv = P(*lead, "model", None)
+    sc = (None if k_scale is None else
+          P(*lead, "model", *([None] * (k_scale.ndim - 3))))
+    return kv, sc
+
+
+def _tp_call(mesh, fn, args: dict, specs: dict, out_spec: P):
+    """Run ``fn`` over dict-packed args under shard_map (dropping entries
+    that are None so the arg/spec pytrees stay congruent)."""
+    from jax.experimental.shard_map import shard_map
+    live = {n: a for n, a in args.items() if a is not None}
+    live_specs = {n: specs[n] for n in live}
+    wrapped = shard_map(fn, mesh=mesh, in_specs=(live_specs,),
+                        out_specs=out_spec, check_rep=False)
+    return wrapped(live)
 
 
 def _backend() -> str:
@@ -226,6 +281,31 @@ def flash_decode(q, kv, cur_len, *, scale=None, block_kv: Optional[int] = None,
     # the oracle is the test contract, the fallback is the fast portable path
     impl = ("pallas" if _backend() == "tpu" else "xla") if mode == "auto" \
         else mode
+    tp = _tp_mesh(hq, k.shape[2], b)
+    if tp is not None:
+        mesh, dp = tp
+        paged = page_table is not None
+        kv_sp, sc_sp = _kv_entry_specs(k_scale, dp, paged)
+        args = {"q": q, "k": k, "v": v, "k_scale": k_scale,
+                "v_scale": v_scale, "cur_len": jnp.asarray(cur_len),
+                "page_table": None if page_table is None
+                else jnp.asarray(page_table)}
+        specs = {"q": P(dp, None, "model", None), "k": kv_sp, "v": kv_sp,
+                 "k_scale": sc_sp, "v_scale": sc_sp, "cur_len": P(dp),
+                 "page_table": P(dp, None)}
+        fn = lambda a: _flash_decode_dispatch(
+            a["q"], a["k"], a["v"], a.get("k_scale"), a.get("v_scale"),
+            a["cur_len"], a.get("page_table"), scale, impl, block_kv)
+        return _tp_call(mesh, fn, args, specs, P(dp, None, "model", None))
+    return _flash_decode_dispatch(q, k, v, k_scale, v_scale, cur_len,
+                                  page_table, scale, impl, block_kv)
+
+
+def _flash_decode_dispatch(q, k, v, k_scale, v_scale, cur_len, page_table,
+                           scale, impl, block_kv):
+    """Impl-dispatch half of :func:`flash_decode`; shapes are read locally
+    so the same body runs unsharded or as the per-shard shard_map region."""
+    b, _, hq, d = q.shape
     if page_table is not None:
         return _flash_decode_paged(q, k, v, k_scale, v_scale, page_table,
                                    cur_len, scale, impl)
@@ -362,6 +442,34 @@ def flash_prefill(q, kv, offset, chunk_len, *, scale=None,
     chunk_len = jnp.asarray(chunk_len, jnp.int32)
     impl = ("pallas" if _backend() == "tpu" else "xla") if mode == "auto" \
         else mode
+    tp = _tp_mesh(hq, k.shape[2], b)
+    if tp is not None:
+        mesh, dp = tp
+        paged = page_table is not None
+        kv_sp, sc_sp = _kv_entry_specs(k_scale, dp, paged)
+        args = {"q": q, "k": k, "v": v, "k_scale": k_scale,
+                "v_scale": v_scale, "offset": offset,
+                "chunk_len": chunk_len,
+                "page_table": None if page_table is None
+                else jnp.asarray(page_table)}
+        specs = {"q": P(dp, None, "model", None), "k": kv_sp, "v": kv_sp,
+                 "k_scale": sc_sp, "v_scale": sc_sp, "offset": P(dp),
+                 "chunk_len": P(dp), "page_table": P(dp, None)}
+        fn = lambda a: _flash_prefill_dispatch(
+            a["q"], a["k"], a["v"], a.get("k_scale"), a.get("v_scale"),
+            a["offset"], a["chunk_len"], a.get("page_table"), scale, impl,
+            block_kv)
+        return _tp_call(mesh, fn, args, specs, P(dp, None, "model", None))
+    return _flash_prefill_dispatch(q, k, v, k_scale, v_scale, offset,
+                                   chunk_len, page_table, scale, impl,
+                                   block_kv)
+
+
+def _flash_prefill_dispatch(q, k, v, k_scale, v_scale, offset, chunk_len,
+                            page_table, scale, impl, block_kv):
+    """Impl-dispatch half of :func:`flash_prefill`; shapes are read locally
+    so the same body runs unsharded or as the per-shard shard_map region."""
+    b, c, hq, d = q.shape
     if page_table is not None:
         return _flash_prefill_paged(q, k, v, k_scale, v_scale, page_table,
                                     offset, chunk_len, scale, impl)

@@ -49,45 +49,10 @@ from repro.utils import human_bytes, logger
 # sharding-tree helpers
 # ---------------------------------------------------------------------------
 
-def _is_axes_leaf(x) -> bool:
-    return x is None or (isinstance(x, tuple)
-                         and all(a is None or isinstance(a, str) for a in x))
-
-
-def shardings_for(axes_tree, shapes_tree, mesh, rules):
-    """Zip a logical-axes tree with a ShapeDtypeStruct tree -> NamedShardings."""
-    import dataclasses as _dc
-
-    from repro.core.qtensor import QTensor
-    from repro.serve.kv_cache import PagedKVCache
-
-    def walk(axes, shapes):
-        if isinstance(shapes, QTensor):
-            # axes for a packed weight stay a {"packed","scale","zp"} dict;
-            # rebuild a QTensor node (same static meta) so the sharding tree
-            # matches the params pytree structure for jit in_shardings.
-            return QTensor(packed=walk(axes["packed"], shapes.packed),
-                           scale=walk(axes["scale"], shapes.scale),
-                           zp=walk(axes["zp"], shapes.zp),
-                           bits=shapes.bits, group_size=shapes.group_size)
-        if isinstance(shapes, PagedKVCache):
-            # paged cache: axes come as a field-name dict (see
-            # serve.kv_cache.paged_cache_logical_axes); rebuild the node so
-            # in_shardings matches the decode step's cache pytree.
-            fields = {f.name: walk(axes[f.name], getattr(shapes, f.name))
-                      if getattr(shapes, f.name) is not None else None
-                      for f in _dc.fields(shapes) if f.name != "page_size"}
-            return PagedKVCache(page_size=shapes.page_size, **fields)
-        if _is_axes_leaf(axes):
-            spec = (P() if axes is None else
-                    sharding.resolve_spec(axes, shapes.shape, mesh, rules))
-            return NamedSharding(mesh, spec)
-        if isinstance(axes, dict):
-            return {k: walk(axes[k], shapes[k]) for k in shapes}
-        if isinstance(axes, (list,)):
-            return [walk(a, s) for a, s in zip(axes, shapes)]
-        raise TypeError(f"unexpected axes node {type(axes)}")
-    return walk(axes_tree, shapes_tree)
+# moved to repro.sharding so the serving Engine can build the same trees
+# without importing this module (whose XLA_FLAGS line must never run inside
+# a live engine process); kept as an alias for existing callers/tests.
+shardings_for = sharding.tree_shardings
 
 
 def replicated(tree, mesh):

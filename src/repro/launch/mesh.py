@@ -36,3 +36,31 @@ def make_host_mesh() -> Mesh:
     """Whatever devices exist, as a 1x1 (or 1xN) mesh — CPU tests."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_serving_mesh(data: int, model: int) -> Mesh:
+    """A validated (data, model) mesh for the serving Engine.
+
+    Unlike :func:`make_mesh` (which lets ``jax.make_mesh`` raise an opaque
+    XLA device-assignment error when ``data * model != device_count``),
+    this checks the axis sizes against the visible devices and raises an
+    actionable message.  ``data * model`` smaller than the device count is
+    fine — the mesh takes the first ``data * model`` devices, so one
+    process can host several mesh sizes (the scaling bench runs 1/2/4/8
+    against the same 8 virtual CPU devices).
+    """
+    import numpy as np
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be positive; got data={data}, "
+                         f"model={model}")
+    devices = jax.devices()
+    need = data * model
+    if need > len(devices):
+        raise ValueError(
+            f"mesh (data={data}, model={model}) needs {need} devices but "
+            f"only {len(devices)} are visible ({devices[0].platform}). "
+            f"Shrink --mesh-data/--mesh-model, or expose more devices "
+            f"(CPU testing: XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={need} before the first jax import).")
+    return Mesh(np.array(devices[:need]).reshape(data, model),
+                ("data", "model"))

@@ -121,6 +121,14 @@ def main(argv=None) -> int:
                     help="bounded admission queue (0 = unbounded): submits "
                          "past this many pending requests are rejected "
                          "with backpressure instead of queued")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data-parallel mesh axis for mesh-native serving "
+                         "(batch splits across it); 1x1 = single device")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel mesh axis: QTensor weights go "
+                         "column-parallel and KV pools split their head "
+                         "dim across it — token-identical to single-device "
+                         "(DESIGN.md §13)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -130,6 +138,17 @@ def main(argv=None) -> int:
         ap.error(f"--kvbits {args.kvbits} unsupported: use 4 (packed int4 "
                  "+ bf16 block-32 scales), 8 (int8 + f32 per-(token, head) "
                  "scales), or >= 16 (fp cache)")
+
+    mesh = None
+    if args.mesh_data > 1 or args.mesh_model > 1:
+        from repro.launch.mesh import make_serving_mesh
+        try:
+            mesh = make_serving_mesh(args.mesh_data, args.mesh_model)
+        except ValueError as e:
+            ap.error(str(e))
+        logger.info("serving mesh: (data=%d, model=%d) over %d %s devices",
+                    args.mesh_data, args.mesh_model, mesh.devices.size,
+                    mesh.devices.flat[0].platform)
 
     cfg = get_config(args.arch)
     model = build_model(cfg)
@@ -159,7 +178,15 @@ def main(argv=None) -> int:
                     args.prefill_chunk)
 
     def run(p, tag, serving_model=None, cfg_serve=None):
-        eng = Engine(serving_model or model, p, cfg_serve or scfg)
+        eng = Engine(serving_model or model, p, cfg_serve or scfg,
+                     mesh=mesh)
+        if mesh is not None:
+            rep = eng.memory_report()
+            logger.info("[%s] per-device resident memory: weights %.2f "
+                        "MiB, kv cache %.2f MiB (x%d devices)", tag,
+                        rep["weight_bytes_per_device"] / 2**20,
+                        rep["kv_bytes_per_device"] / 2**20,
+                        rep["device_count"])
         for pr in prompts:
             try:
                 eng.submit(pr)

@@ -545,7 +545,9 @@ class Model:
         return axes
 
     def cache_logical_axes(self, cache_specs) -> dict:
-        """Logical axes for the decode cache (KV sequence sharded over TP)."""
+        """Logical axes for the decode cache (KV *heads* sharded over TP —
+        the flash kernels' shard_map layout, DESIGN.md §13; sequence
+        positions stay device-local)."""
         from repro.serve.kv_cache import (PagedKVCache,
                                           paged_cache_logical_axes)
         if isinstance(cache_specs, PagedKVCache):
@@ -553,8 +555,8 @@ class Model:
         cfg = self.cfg
         axes: dict[str, Any] = {"len": ("batch",)}
         if "k" in cache_specs:
-            axes["k"] = ("layers", "batch", "kv_seq", None, None)
-            axes["v"] = ("layers", "batch", "kv_seq", None, None)
+            axes["k"] = ("layers", "batch", None, "cache_heads", None)
+            axes["v"] = ("layers", "batch", None, "cache_heads", None)
         if "ssm" in cache_specs:
             axes["ssm"] = ("layers", "batch", "ssm_heads", None, None)
             axes["conv"] = ("layers", "batch", None, "act_inner")

@@ -85,6 +85,7 @@ are exact, MoE prefill is the documented approximation in both modes.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import enum
 import time
@@ -94,7 +95,9 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import sharding
 from repro.models.model import Model
 from repro.serve import faults as flt
 from repro.serve import kv_cache
@@ -197,8 +200,24 @@ class Request:
 
 
 class Engine:
+    """Continuous-batching engine; optionally mesh-native (DESIGN.md §13).
+
+    With ``mesh`` (a ``(data, model)`` mesh from
+    ``repro.launch.mesh.make_serving_mesh``), weights and KV pools are
+    sharded once at construction — QTensor leaves column-parallel over
+    "model" via the packing-aware joint resolution, cache pools over their
+    KV-head dim — and every jitted step runs with the mesh bound so the
+    flash kernels take their shard_map path.  The scheduler is untouched:
+    page tables and lengths are replicated host-authored state, so
+    admission/eviction/preemption stay zero-device-sync, and sharded
+    serving is token-identical to single-device.  ``rules`` defaults to
+    :func:`repro.sharding.make_serving_rules`.
+    """
+
     def __init__(self, model: Model, params, cfg: ServeConfig,
-                 faults: Optional[flt.FaultPlan] = None):
+                 faults: Optional[flt.FaultPlan] = None, *,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[dict] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -218,6 +237,22 @@ class Engine:
         else:
             self._kv = kv_cache.LinearCache(model, cfg.max_batch,
                                             cfg.max_len)
+        self._mesh = mesh
+        self._rules = (dict(rules) if rules is not None
+                       else sharding.make_serving_rules()
+                       if mesh is not None else None)
+        self._cache_shardings = None
+        if mesh is not None:
+            # shard once, at rest: committed params + cache pools pin the
+            # layout for every subsequent jitted step (the in-jit
+            # constraints below keep the outputs on the same fixpoint)
+            self.params = jax.device_put(
+                params, sharding.tree_shardings(
+                    model.param_logical_axes(), params, mesh, self._rules))
+            cache = self._kv.cache
+            self._cache_shardings = sharding.tree_shardings(
+                model.cache_logical_axes(cache), cache, mesh, self._rules)
+            self._kv.cache = jax.device_put(cache, self._cache_shardings)
         self._decode = jax.jit(self._decode_and_sample)
         # per-instance jit (like _decode): a class-level jit with static
         # `self` would retain every engine's cache buffers process-wide
@@ -233,6 +268,14 @@ class Engine:
                                     + self._base_key.shape,
                                     self._base_key.dtype)
         self._zero_poison = jnp.zeros((cfg.max_batch,), jnp.float32)
+        if mesh is not None:
+            # replicate the host-authored step inputs so the decode jit
+            # sees one stable input signature from the first call on
+            rep = NamedSharding(mesh, P())
+            self._last_tok = jax.device_put(self._last_tok, rep)
+            self._base_key = jax.device_put(self._base_key, rep)
+            self._idle_keys = jax.device_put(self._idle_keys, rep)
+            self._zero_poison = jax.device_put(self._zero_poison, rep)
         self._supports_padded = bool(
             getattr(model, "supports_padded_prefill", False))
         # chunked admission: per-slot (request, resume tokens) for prompts
@@ -250,6 +293,28 @@ class Engine:
                     f"{type(model).__name__} does not support it")
             self._chunk = jax.jit(self._chunk_prefill_call)
 
+    def _bound(self):
+        """Mesh-binding context for jitted calls (no-op single-device)."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return sharding.use_mesh(self._mesh, self._rules)
+
+    def _pin_cache(self, cache):
+        """Constrain a jitted step's cache output to the canonical
+        shardings, so the step loop's cache carry is a sharding fixpoint
+        (host-side splice/free scatters preserve it between steps)."""
+        if self._cache_shardings is None:
+            return cache
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, cache, self._cache_shardings)
+
+    def _pin_replicated(self, *xs):
+        """Constrain per-step host readbacks (tokens, flags) replicated."""
+        if self._mesh is None:
+            return xs
+        rep = NamedSharding(self._mesh, P())
+        return tuple(jax.lax.with_sharding_constraint(x, rep) for x in xs)
+
     def _chunk_prefill_call(self, params, tokens, chunk_len, cache, offset):
         """The one jitted chunk step (shape-stable: (max_batch,
         prefill_chunk) tokens — ONE compile for all of chunked admission,
@@ -257,9 +322,10 @@ class Engine:
         ``last_only``: only the final chunk's last valid row is ever
         sampled, so chunk steps skip the (B, C, vocab) head matmul and
         return (B, 1, vocab)."""
-        return self.model.prefill_chunk(
+        logits, cache = self.model.prefill_chunk(
             params, {"tokens": tokens, "chunk_len": chunk_len}, cache,
             offset, last_only=True)
+        return logits, self._pin_cache(cache)
 
     def _prefill_call(self, params, tokens, lengths, bucket: int):
         """Whole-prompt batched prefill, jitted per (bucket, group size) —
@@ -326,6 +392,25 @@ class Engine:
         for r in self._all:
             counts[r.status.name] = counts.get(r.status.name, 0) + 1
         return counts
+
+    def memory_report(self) -> dict:
+        """Per-device resident bytes: weights and KV cache, measured from
+        the arrays' addressable shards (max over devices — even sharding
+        makes them uniform).  The scaling bench's per-device-footprint
+        rows and ``launch/serve.py``'s startup report both read this."""
+        def per_device(tree) -> int:
+            per: dict = {}
+            for leaf in jax.tree_util.tree_leaves(tree):
+                if not isinstance(leaf, jax.Array):
+                    continue
+                for s in leaf.addressable_shards:
+                    per[s.device.id] = per.get(s.device.id, 0) \
+                        + s.data.nbytes
+            return max(per.values()) if per else 0
+        n = self._mesh.devices.size if self._mesh is not None else 1
+        return {"device_count": int(n),
+                "weight_bytes_per_device": per_device(self.params),
+                "kv_bytes_per_device": per_device(self._kv.cache)}
 
     # ------------------------------------------------------------------
     # termination plumbing (the ONLY places a request goes terminal)
@@ -469,7 +554,8 @@ class Engine:
         logits, cache = self.model.decode_step(params, tok, cache)
         lg = logits[:, -1, :] + poison[:, None]
         ok = jnp.all(jnp.isfinite(lg), axis=-1)
-        return self._sample(lg, keys), ok, cache
+        nxt, ok = self._pin_replicated(self._sample(lg, keys), ok)
+        return nxt, ok, self._pin_cache(cache)
 
     def _poison(self, active: list[int]) -> jax.Array:
         """NAN_LOGITS injection vector for this decode step (one entry per
@@ -529,10 +615,11 @@ class Engine:
             lengths = np.asarray([ln for _, _, ln in fitted], np.int32)
             for row, (_, req, ln) in enumerate(fitted):
                 tokens[row, :ln] = req.resume_tokens()
-            logits, cache1 = self._prefill(
-                self.params, jnp.asarray(tokens),
-                jnp.asarray(lengths) if self._supports_padded else None,
-                bucket)
+            with self._bound():
+                logits, cache1 = self._prefill(
+                    self.params, jnp.asarray(tokens),
+                    jnp.asarray(lengths) if self._supports_padded else None,
+                    bucket)
             lg = logits[:, -1, :]
             if self._faults is not None:
                 pv = np.zeros((len(fitted),), np.float32)
@@ -621,9 +708,10 @@ class Engine:
         # garbage token ahead of mid-prefill slots — the next chunk
         # overwrites it before it is ever attended)
         offsets = np.asarray(self._seq_len, np.int32)
-        logits, cache = self._chunk(self.params, jnp.asarray(tokens),
-                                    jnp.asarray(chunk_len), self._kv.cache,
-                                    jnp.asarray(offsets))
+        with self._bound():
+            logits, cache = self._chunk(
+                self.params, jnp.asarray(tokens), jnp.asarray(chunk_len),
+                self._kv.cache, jnp.asarray(offsets))
         self._kv.cache = cache
         self._seq_len[slot] = done + n
         self._progress += 1
@@ -765,9 +853,10 @@ class Engine:
             reqs = [self._slots[i] if (self._slots[i] is not None
                                        and self._prefill_prog[i] is None)
                     else _IDLE_REQ for i in range(self.cfg.max_batch)]
-            nxt, ok_dev, cache = self._decode(
-                self.params, self._last_tok, self._kv.cache,
-                self._req_keys(reqs), self._poison(active))
+            with self._bound():
+                nxt, ok_dev, cache = self._decode(
+                    self.params, self._last_tok, self._kv.cache,
+                    self._req_keys(reqs), self._poison(active))
             self._kv.cache = cache
             self._last_tok = nxt[:, None]
             nxt_host, ok = jax.device_get((nxt, ok_dev))

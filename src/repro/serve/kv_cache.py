@@ -180,22 +180,27 @@ def paged_chunk_write(pool: jax.Array, val: jax.Array,
 def paged_cache_logical_axes(cache: PagedKVCache) -> dict:
     """Logical sharding axes for the paged cache, keyed by field name.
 
-    Pages shard over the same mesh axis the linear cache's ``kv_seq`` uses
-    (``kv_pages`` -> "model" in the default rules): the pool's page dim is
-    the distributed-decode analog of the linear sequence dim.  Page tables
-    and lens stay batch-sharded like the linear ``len``.
+    The pool shards its KV-*head* dim over the TP axis ("cache_heads" ->
+    "model"), matching the flash kernels' shard_map layout: every page is
+    whole on every model shard, so the page-table gather in the kernel's
+    BlockSpec index map never crosses devices, and each shard attends its
+    own head slice of every page (DESIGN.md §13).  Page tables and lens
+    are REPLICATED — they are host-authored scheduler state (admission/
+    eviction mutate them without any device sync) and both the data- and
+    model-axis shards of a decode step read every row.  The pool tensors
+    are the only sharded cache state.
     """
-    axes = {"k": ("layers", "kv_pages", None, None, None),
-            "v": ("layers", "kv_pages", None, None, None),
-            "page_table": ("batch", None),
-            "lens": ("batch",),
+    axes = {"k": ("layers", None, None, "cache_heads", None),
+            "v": ("layers", None, None, "cache_heads", None),
+            "page_table": None,
+            "lens": None,
             "k_scale": None, "v_scale": None}
     if cache.k_scale is not None:
-        # kv8 scale pools are 4D; kv4 block-scale pools keep a 5th
-        # (block) axis and shard like the code pools
-        sc = ("layers", "kv_pages", None, None)
+        # kv8 scale pools are 4D (heads innermost); kv4 block-scale pools
+        # keep a 5th (block) axis after the head dim
+        sc = ("layers", None, None, "cache_heads")
         if cache.k_scale.ndim == 5:
-            sc = ("layers", "kv_pages", None, None, None)
+            sc = ("layers", None, None, "cache_heads", None)
         axes["k_scale"] = sc
         axes["v_scale"] = sc
     return axes

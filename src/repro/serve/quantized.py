@@ -712,11 +712,12 @@ class QuantizedModel:
             return paged_cache_logical_axes(cache_specs)
         axes = build_model(self.cfg).cache_logical_axes(cache_specs)
         if "k_scale" in cache_specs:
-            # quantized KV cache: scales shadow the code tensors — kv8
-            # drops the head_dim axis, kv4 keeps a (narrower) block axis
-            sc = ("layers", "batch", "kv_seq", None)
+            # quantized KV cache: scales shadow the code tensors (head dim
+            # over TP, like the codes) — kv8 drops the head_dim axis, kv4
+            # keeps a (narrower) block axis after the heads
+            sc = ("layers", "batch", None, "cache_heads")
             if cache_specs["k_scale"].ndim == 5:
-                sc = ("layers", "batch", "kv_seq", None, None)
+                sc = ("layers", "batch", None, "cache_heads", None)
             axes["k_scale"] = sc
             axes["v_scale"] = sc
         return axes

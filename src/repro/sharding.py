@@ -110,6 +110,152 @@ def resolve_spec(names: Sequence[Optional[str]],
     return P(*out)
 
 
+def resolve_joint_spec(names: Sequence[Optional[str]],
+                       shapes: Sequence[Sequence[int]],
+                       mesh: Optional[Mesh] = None,
+                       rules: Optional[dict[str, Axis]] = None) -> P:
+    """Resolve ONE PartitionSpec that is divisibility-safe for EVERY shape
+    in ``shapes`` simultaneously.
+
+    The per-tensor drop of :func:`resolve_spec` is wrong for tensors that
+    must stay co-sharded but disagree on dim sizes — a QTensor's packed
+    codes (``K * bits / 8`` wide) vs. its per-group scale/zp (``K /
+    group_size`` wide): a mesh axis that divides one but not the other
+    would shard the codes and silently leave the grid replicated (or vice
+    versa), and the dequantized weight shards would no longer line up.
+    Here an axis survives only if it divides the dim in *every* shape, so
+    all leaves resolve to the same spec by construction.
+    """
+    mesh = mesh or current_mesh()
+    rules = rules if rules is not None else current_rules()
+    ranks = {len(s) for s in shapes}
+    if len(ranks) != 1 or len(names) not in ranks:
+        raise ValueError(f"joint resolution needs same-rank shapes matching "
+                         f"the {len(names)} logical names; got {shapes}")
+    out: list[Axis] = []
+    used: set[str] = set()
+    for i, name in enumerate(names):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        axes = tuple(a for a in axes if a not in used)
+        if mesh is not None:
+            while axes and any(s[i] % _axis_size(mesh, axes) != 0
+                               for s in shapes):
+                logger.debug("sharding: drop axis %s from joint dim %d "
+                             "(%s: sizes %s)", axes[-1], i, name,
+                             [s[i] for s in shapes])
+                axes = axes[:-1]
+        if not axes:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def qtensor_spec(axes, qt, mesh: Optional[Mesh] = None,
+                 rules: Optional[dict[str, Axis]] = None) -> P:
+    """Packing-aware spec for a QTensor: ONE spec shared by codes/scale/zp.
+
+    ``axes`` is either a single logical-name tuple for the (..., K, N)
+    weight or the legacy ``{"packed", "scale", "zp"}`` per-leaf dict (whose
+    entries must agree — per-leaf divergence is exactly the silent
+    codes-vs-grid mismatch this function exists to rule out).  Resolution
+    is joint over the *logical* K (``d_in``), the packed byte width
+    (``K * bits / 8``) and the per-group grid width (``K / group_size``):
+    a mesh axis survives only if it partitions all three evenly.
+    """
+    from repro.core.qtensor import QTensor
+    if not isinstance(qt, QTensor):
+        raise TypeError(f"qtensor_spec needs a QTensor (or its "
+                        f"ShapeDtypeStruct tree); got {type(qt)}")
+    if isinstance(axes, dict):
+        name_sets = {tuple(axes[k]) for k in ("packed", "scale", "zp")}
+        if len(name_sets) != 1:
+            raise ValueError(
+                f"QTensor leaves must share one logical-axes tuple; got "
+                f"{axes} — per-leaf divergence would shard codes and grid "
+                f"differently")
+        names = next(iter(name_sets))
+    else:
+        names = tuple(axes)
+    logical = tuple(qt.packed.shape[:-2]) + (qt.d_in, qt.d_out)
+    spec = resolve_joint_spec(
+        names, [logical, qt.packed.shape, qt.scale.shape, qt.zp.shape],
+        mesh, rules)
+    # the invariant the joint drop guarantees — re-checked leaf-by-leaf so
+    # a future edit to the drop logic cannot silently reintroduce the
+    # codes/grid mismatch
+    mesh = mesh or current_mesh()
+    if mesh is not None:
+        entries = tuple(spec) + (None,) * (len(names) - len(tuple(spec)))
+        for leaf in (qt.packed, qt.scale, qt.zp):
+            for i, ax in enumerate(entries):
+                assert ax is None or \
+                    leaf.shape[i] % _axis_size(mesh, ax) == 0, (
+                        f"resolved spec {spec} does not partition QTensor "
+                        f"leaf shape {leaf.shape} at dim {i}")
+    return spec
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                   rules: dict[str, Axis]):
+    """Zip a logical-axes tree with a shape tree -> NamedSharding tree.
+
+    Handles the two composite nodes of the serving stack: ``QTensor``
+    (packing-aware joint resolution — codes, scale and zp get the SAME
+    spec, see :func:`qtensor_spec`) and ``PagedKVCache`` (axes keyed by
+    field name).  Leaves of ``shapes_tree`` only need ``.shape``
+    (ShapeDtypeStructs or concrete arrays both work); the returned tree
+    matches the value tree's pytree structure, so it drops straight into
+    ``jit`` in_shardings or ``jax.device_put``.
+    """
+    import dataclasses as _dc
+
+    from repro.core.qtensor import QTensor
+    from repro.serve.kv_cache import PagedKVCache
+
+    def is_leaf(x):
+        return x is None or (isinstance(x, tuple)
+                             and all(a is None or isinstance(a, str)
+                                     for a in x))
+
+    def walk(axes, shapes):
+        if axes is None:
+            # no declared axes for this subtree -> replicate it.  This is
+            # the catch-all for data-dependent leaves a static
+            # param_logical_axes() cannot enumerate: calibration
+            # by-products like affine-merged QKV biases (created even when
+            # cfg.qkv_bias is False) and activation-transform factors
+            # (attn_t/mlp_t).  Replication is always placement-correct;
+            # anything worth sharding gets an explicit axes entry.
+            rep = NamedSharding(mesh, P())
+            return jax.tree_util.tree_map(lambda _: rep, shapes)
+        if isinstance(shapes, QTensor):
+            ns = NamedSharding(mesh, qtensor_spec(axes, shapes, mesh, rules))
+            return QTensor(packed=ns, scale=ns, zp=ns, bits=shapes.bits,
+                           group_size=shapes.group_size)
+        if isinstance(shapes, PagedKVCache):
+            fields = {f.name: walk(axes[f.name], getattr(shapes, f.name))
+                      if getattr(shapes, f.name) is not None else None
+                      for f in _dc.fields(shapes) if f.name != "page_size"}
+            return PagedKVCache(page_size=shapes.page_size, **fields)
+        if is_leaf(axes):
+            spec = resolve_spec(axes, shapes.shape, mesh, rules)
+            return NamedSharding(mesh, spec)
+        if isinstance(axes, dict):
+            return {k: walk(axes.get(k), shapes[k]) for k in shapes}
+        if isinstance(axes, (list,)):
+            return [walk(a, s) for a, s in zip(axes, shapes)]
+        raise TypeError(f"unexpected axes node {type(axes)}")
+    return walk(axes_tree, shapes_tree)
+
+
 def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
     """Apply a logical sharding constraint if a mesh is bound; no-op otherwise."""
     mesh = current_mesh()
@@ -163,9 +309,15 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
         # params: FSDP axis (input-feature / stacked-layer dims)
         "fsdp_embed": "data" if fsdp else None,
         "layers": None,
-        # serving
-        "kv_seq": "model",                         # distributed decode attention
-        "kv_pages": "model",                       # paged pool: page dim over TP
+        # serving: decode caches shard their KV-*head* dim over TP
+        # ("cache_heads"), matching the flash kernels' shard_map layout —
+        # pages / sequence positions stay device-local so the page-table
+        # gather in the kernel's index map never crosses devices
+        # (DESIGN.md §13).  "kv_seq"/"kv_pages" are the superseded
+        # seq/page-dim placements, kept for configs that still name them.
+        "cache_heads": "model",
+        "kv_seq": "model",                         # legacy: seq dim over TP
+        "kv_pages": "model",                       # legacy: page dim over TP
         "ssm_heads": "model",
         # never sharded
         "head_dim": None,
@@ -176,3 +328,19 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
         "qgroups": None,
     }
     return rules
+
+
+def make_serving_rules() -> dict[str, Axis]:
+    """Logical->mesh mapping for mesh-native *serving* (DESIGN.md §13).
+
+    Tensor-parallel over "model" (column-parallel wq/wk/wv/w_gate/w_up and
+    the vocab dims; KV cache pools over their head dim), data-parallel
+    over "data" for the activation batch.  FSDP is OFF: serving weights
+    stay resident per device — no per-step weight gather; the quantized
+    footprint is what makes that affordable.  wo / w_down keep their K dim
+    unsharded ("fsdp_embed" -> None), so each device consumes the
+    all-gathered attention/MLP-inner activations with a full-K matmul —
+    the one collective per sublayer sits on those (tiny) activations, not
+    on the weights.
+    """
+    return make_rules(fsdp=False)

@@ -300,9 +300,10 @@ def test_paged_cache_is_jit_stable_pytree(micro):
 
 
 def test_paged_cache_shardings_resolve(micro):
-    """Sharding parity with the linear cache: pool pages shard over the TP
-    axis ('kv_pages' -> model, the analog of the linear 'kv_seq'), page
-    tables and lens over batch, and the dryrun's shardings_for rebuilds a
+    """Serving mesh layout (DESIGN.md §13): pool tensors shard their
+    KV-*head* dim over the TP axis ('cache_heads' -> model) so pages stay
+    device-local; page tables and lens are REPLICATED (host-authored
+    scheduler state), and the dryrun's shardings_for rebuilds a
     PagedKVCache-shaped sharding tree for jit in_shardings."""
     cfg, _, _ = micro
     from jax.sharding import Mesh, PartitionSpec as P
@@ -318,10 +319,10 @@ def test_paged_cache_shardings_resolve(micro):
     mesh = Mesh(devs, ("data", "model"))
     sh = shardings_for(axes, specs, mesh, sharding.make_rules())
     assert isinstance(sh, kvc.PagedKVCache)
-    assert sh.k.spec == P(None, "model")
-    assert sh.k_scale.spec == P(None, "model")
-    assert sh.page_table.spec == P("data")
-    assert sh.lens.spec == P("data")
+    assert sh.k.spec == P(None, None, None, "model")
+    assert sh.k_scale.spec == P(None, None, None, "model")
+    assert sh.page_table.spec == P()
+    assert sh.lens.spec == P()
 
 
 # ---------------------------------------------------------------------------

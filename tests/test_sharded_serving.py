@@ -1,0 +1,206 @@
+"""Mesh-native sharded serving: token identity with single-device runs.
+
+The tentpole contract (DESIGN.md §13): an Engine constructed over a
+``(data, model)`` mesh — QTensor weights column-parallel, KV pools split
+over their head dim, page tables/lens replicated — produces EXACTLY the
+token streams, statuses and preemption counts of the single-device
+engine, including under page-pool pressure (preemption round-trips) and
+an injected NaN fault (quarantine + survivor identity).
+
+Multi-device CPU execution needs ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` set BEFORE the first jax initialization, which pytest's
+process has long passed — so the multidevice lane runs in a subprocess
+(``@pytest.mark.multidevice``, its own CI step).  The in-process tests
+cover the mesh code path itself (device_put, sharding constraints,
+memory report) on a 1x1 mesh over the real device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("llama-micro")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False,
+                      kv_bits=4)
+    packed = quantize_lm_packed(params, cfg, qcfg)
+    qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=PS)
+    return cfg, qm, packed
+
+
+def _prompts(cfg, lens=(13, 3, 26), seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n) for n in lens]
+
+
+def _run(qm, packed, prompts, mesh):
+    scfg = ServeConfig(max_batch=2, max_len=48, max_new=5,
+                       prefill_bucket=16, page_size=PS, paged=True,
+                       prefill_chunk=PS)
+    eng = Engine(qm, packed, scfg, mesh=mesh)
+    reqs = [eng.submit(p) for p in prompts]
+    eng.run(max_steps=400)
+    eng._kv.verify()
+    return [tuple(r.out_tokens) for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# in-process: the mesh code path on a 1x1 mesh (fast lane)
+# ---------------------------------------------------------------------------
+
+def test_mesh_engine_identity_1x1(served):
+    """A 1x1 mesh engine (device_put sharded params/cache, in-jit
+    constraints, mesh-bound dispatch) is token-identical to mesh=None."""
+    cfg, qm, packed = served
+    prompts = _prompts(cfg)
+    base, _ = _run(qm, packed, prompts, None)
+    sharded, eng = _run(qm, packed, prompts, make_serving_mesh(1, 1))
+    assert sharded == base
+    rep = eng.memory_report()
+    assert rep["device_count"] == 1
+    assert rep["weight_bytes_per_device"] > 0
+    assert rep["kv_bytes_per_device"] > 0
+
+
+def test_serving_mesh_validation():
+    with pytest.raises(ValueError, match="needs"):
+        make_serving_mesh(len(jax.devices()) + 1, 2)
+    with pytest.raises(ValueError, match="positive"):
+        make_serving_mesh(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# multidevice lane: 8 virtual CPU devices in a subprocess
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import dataclasses
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.core.quantizer import QuantConfig
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serve import faults as flt
+from repro.serve.engine import Engine, RequestStatus, ServeConfig
+from repro.serve.faults import Fault, FaultPlan
+from repro.serve.kv_cache import pages_for
+from repro.serve.quantized import QuantizedModel, quantize_lm_packed
+
+assert len(jax.devices()) == 8, jax.devices()
+PS = 8
+cfg = get_config("llama-micro")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+qcfg = QuantConfig(w_bits=8, a_bits=16, group_size=32, lwc=False, kv_bits=4)
+packed = quantize_lm_packed(params, cfg, qcfg)
+qm = QuantizedModel(cfg, qcfg, kernel_mode="ref", flash_block_kv=PS)
+
+rng = np.random.default_rng(7)
+# concurrent page-boundary growth: 13+8 and 9+8 both cross into a third
+# page mid-decode, so the tight pool (pool_min + 1) must preempt
+lens = (13, 9, 26, 5)
+prompts = [rng.integers(0, cfg.vocab_size, n) for n in lens]
+max_new = 8
+max_len = -(-(max(lens) + max_new + 1) // PS) * PS
+pool_min = pages_for(max(lens) + max_new, PS)
+
+
+def make_cfg(tight):
+    return ServeConfig(max_batch=2, max_len=max_len, max_new=max_new,
+                       prefill_bucket=16, page_size=PS, paged=True,
+                       num_pages=(pool_min + 1) if tight else 0,
+                       prefill_chunk=PS, watchdog_steps=8)
+
+
+def run(mesh, tight=False, faults=None):
+    eng = Engine(qm, packed, make_cfg(tight), faults=faults, mesh=mesh)
+    reqs = [eng.submit(p) for p in prompts]
+    eng.run(max_steps=600)
+    eng._kv.verify()
+    al = eng._kv.allocator
+    assert al.num_free == al.num_pages
+    return ([tuple(r.out_tokens) for r in reqs],
+            [r.status for r in reqs],
+            sum(r.preemptions for r in reqs))
+
+
+# 1. pool pressure: a tight pool preempts, sharded stays token-identical
+base, base_st, base_pre = run(None, tight=True)
+assert base_pre > 0, "tight pool never preempted — trace too loose"
+for dm in ((2, 2), (2, 4)):
+    outs, st, pre = run(make_serving_mesh(*dm), tight=True)
+    assert outs == base, f"sharded {dm} diverged under preemption"
+    assert st == base_st and pre == base_pre, (dm, st, pre)
+
+# 2. clean trace, loose pool
+loose, loose_st, _ = run(None)
+outs, st, _ = run(make_serving_mesh(2, 2))
+assert outs == loose and st == loose_st, "sharded diverged on clean trace"
+
+# 3. injected NaN fault: victim quarantined, survivors identical
+victim = len(prompts) // 2
+
+
+def fault_run(mesh):
+    plan = FaultPlan(Fault(point=flt.NAN_LOGITS, rid=victim, after_step=1))
+    return run(mesh, faults=plan)
+
+
+f_base, f_base_st, _ = fault_run(None)
+f_sh, f_sh_st, _ = fault_run(make_serving_mesh(2, 2))
+assert f_sh == f_base and f_sh_st == f_base_st, "fault trace diverged"
+assert RequestStatus.FAILED_NAN in f_base_st, f_base_st
+assert all(s is RequestStatus.COMPLETED
+           for i, s in enumerate(f_base_st) if i != victim)
+assert [t for i, t in enumerate(f_base) if i != victim] \
+    == [t for i, t in enumerate(loose) if i != victim], \
+    "fault leaked into survivor streams"
+
+# 4. per-device footprint shrinks with the model axis
+reps = {}
+for dm in ((1, 1), (1, 2), (1, 4)):
+    eng = Engine(qm, packed, make_cfg(False), mesh=make_serving_mesh(*dm))
+    reps[dm] = eng.memory_report()
+assert reps[(1, 2)]["weight_bytes_per_device"] \
+    < reps[(1, 1)]["weight_bytes_per_device"]
+assert reps[(1, 4)]["weight_bytes_per_device"] \
+    < reps[(1, 2)]["weight_bytes_per_device"]
+assert reps[(1, 2)]["kv_bytes_per_device"] \
+    < reps[(1, 1)]["kv_bytes_per_device"]
+assert reps[(1, 4)]["kv_bytes_per_device"] \
+    < reps[(1, 2)]["kv_bytes_per_device"]
+print("SHARDED-SERVING-OK")
+"""
+
+
+@pytest.mark.multidevice
+def test_sharded_engine_multidevice_subprocess():
+    """The full acceptance matrix on 8 virtual CPU devices: preemption,
+    clean trace, injected fault, per-device footprint — sharded (data>=2,
+    model>=2) token-identical to single-device throughout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"sharded-serving child failed\n--- stdout ---\n{proc.stdout}\n"
+        f"--- stderr ---\n{proc.stderr}")
+    assert "SHARDED-SERVING-OK" in proc.stdout

@@ -68,3 +68,125 @@ def test_use_mesh_context(mesh):
         assert sharding.current_mesh() is mesh
         assert sharding.current_rules()["mlp"] == "model"
     assert sharding.current_mesh() is None
+
+
+# ---------------------------------------------------------------------------
+# packing-aware QTensor resolution (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    """Divisibility-only mesh stand-in: resolution reads nothing but
+    ``mesh.shape``, so axis sizes larger than the visible device count can
+    be exercised without virtual devices (the multidevice lane covers the
+    real thing)."""
+
+    def __init__(self, **shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def _w4_qtensor(k=64, n=48, group=32):
+    import numpy as np
+
+    from repro.core.qtensor import QTensor
+    return QTensor(packed=np.zeros((k * 4 // 8, n), np.uint8),
+                   scale=np.zeros((k // group, n), np.float32),
+                   zp=np.zeros((k // group, n), np.float32),
+                   bits=4, group_size=group)
+
+
+def test_resolve_joint_spec_axis_must_divide_every_shape():
+    rules = {"ksplit": "model"}
+    vm = _FakeMesh(data=1, model=8)
+    # 64 and 32 divide 8 but the 2-wide grid does not -> dropped for ALL
+    assert sharding.resolve_joint_spec(
+        ["ksplit", None], [(64, 5), (32, 5), (2, 5)], vm, rules) == P()
+    # every shape divides -> kept
+    assert sharding.resolve_joint_spec(
+        ["ksplit", None], [(64, 5), (32, 5), (8, 5)], vm, rules) \
+        == P("model")
+
+
+def test_qtensor_spec_w4_codes_at_half_width():
+    """w4: codes are K/2 bytes wide, the grid K/group — a K-axis rule that
+    divides the codes but not the grid must drop for all three leaves
+    (per-leaf resolution would shard codes and leave the grid replicated:
+    the silent mismatch joint resolution exists to rule out)."""
+    qt = _w4_qtensor(k=64, n=48, group=32)
+    vm = _FakeMesh(data=1, model=8)
+    rules = {"ksplit": "model", "out": "model"}
+    spec = sharding.qtensor_spec(("ksplit", "out"), qt, vm, rules)
+    assert spec == P(None, "model")   # N=48 divides 8; K grid (2) does not
+    # the per-leaf resolution of the packed codes alone WOULD have kept the
+    # K split (32 % 8 == 0) — the divergence this API closes
+    per_leaf = sharding.resolve_spec(("ksplit", "out"), qt.packed.shape,
+                                     vm, rules)
+    assert per_leaf == P("model")   # K kept (32 % 8 == 0) — codes sharded
+
+
+def test_qtensor_spec_column_parallel_survives():
+    qt = _w4_qtensor(k=64, n=48, group=32)
+    vm = _FakeMesh(data=2, model=4)
+    spec = sharding.qtensor_spec((None, "mlp"), qt, vm,
+                                 sharding.make_serving_rules())
+    assert spec == P(None, "model")
+
+
+def test_qtensor_spec_legacy_dict_must_agree():
+    qt = _w4_qtensor()
+    axes = {"packed": (None, "mlp"), "scale": (None, "mlp"),
+            "zp": (None, None)}
+    with pytest.raises(ValueError, match="share one logical-axes tuple"):
+        sharding.qtensor_spec(axes, qt, _FakeMesh(data=1, model=2),
+                              sharding.make_serving_rules())
+
+
+def test_kv4_scale_pool_resolution():
+    """kv4 paged pools: codes (P, ps, Hkv, D/2) and block scales
+    (P, ps, Hkv, D/32) shard the head dim only — every narrower trailing
+    dim stays local, so codes and scales stay head-aligned per shard."""
+    rules = sharding.make_rules()
+    vm = _FakeMesh(data=2, model=4)
+    names = ("layers", None, None, "cache_heads", None)
+    assert sharding.resolve_spec(names, (2, 16, 8, 4, 16), vm, rules) \
+        == P(None, None, None, "model")
+    assert sharding.resolve_spec(names, (2, 16, 8, 4, 1), vm, rules) \
+        == P(None, None, None, "model")
+    # Hkv not divisible by the model axis -> dropped, replicated pool
+    assert sharding.resolve_spec(names, (2, 16, 8, 6, 16), vm, rules) == P()
+
+
+def test_tree_shardings_undeclared_subtree_replicates(mesh):
+    """Calibration by-products (affine-merged QKV biases, attn_t/mlp_t
+    transform factors) appear in the packed tree but not in any static
+    param_logical_axes() — they must resolve to replicated, not KeyError
+    (regression: calibrated CLI serving on a mesh)."""
+    import jax.numpy as jnp
+    axes = {"wq": (None, "heads")}
+    tree = {"wq": jnp.zeros((8, 8)),
+            "bk": jnp.zeros((8,)),
+            "attn_t": {"shift": jnp.zeros((8,)),
+                       "a_inv": jnp.zeros((8, 8))}}
+    sh = sharding.tree_shardings(axes, tree, mesh,
+                                 sharding.make_serving_rules())
+    assert sh["bk"].spec == P()
+    assert sh["attn_t"]["shift"].spec == P()
+    assert sh["attn_t"]["a_inv"].spec == P()
+
+
+def test_tree_shardings_qtensor_node(mesh):
+    """tree_shardings rebuilds QTensor nodes with ONE NamedSharding shared
+    by codes/scale/zp (mesh axes of size 1 resolve structurally)."""
+    import jax.numpy as jnp
+
+    from repro.core.qtensor import QTensor
+    qt = QTensor(packed=jnp.zeros((32, 48), jnp.uint8),
+                 scale=jnp.zeros((2, 48), jnp.float32),
+                 zp=jnp.zeros((2, 48), jnp.float32), bits=4, group_size=32)
+    axes = {"w": {"packed": (None, "mlp"), "scale": (None, "mlp"),
+                  "zp": (None, "mlp")}}
+    sh = sharding.tree_shardings(axes, {"w": qt}, mesh,
+                                 sharding.make_serving_rules())
+    assert isinstance(sh["w"], QTensor)
+    assert sh["w"].packed.spec == sh["w"].scale.spec == sh["w"].zp.spec
+    assert sh["w"].bits == 4 and sh["w"].group_size == 32
