@@ -27,6 +27,10 @@ def main() -> int:
                     help="serve suite only: run the fault-injected "
                          "degraded-mode row (half pool + allocator "
                          "brown-out) instead of the full serving matrix")
+    ap.add_argument("--prefix", action="store_true",
+                    help="serve suite only: run the shared-system-prompt "
+                         "prefix-cache trace instead of the full serving "
+                         "matrix")
     args = ap.parse_args()
 
     from benchmarks import (fig3_loss_curves, kernel_bench, kv_cache_ppl,
@@ -35,6 +39,8 @@ def main() -> int:
                             table6_gradual_mask)
     if args.faults:
         serve_bench.FAULTS_ONLY = True
+    if args.prefix:
+        serve_bench.PREFIX_ONLY = True
     suites = {
         "table1": table1_weight_only.run,
         "table3": table3_w4a4.run,

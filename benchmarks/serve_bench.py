@@ -44,6 +44,16 @@ weight + KV bytes, collective bytes per decode step, token identity vs
 the 1-device mesh.  They run in a subprocess (``serve_scaling.py``; the
 device-count flag must precede jax init) and land as the ``scaling``
 section of ``BENCH_serve.json``.
+
+The **prefix rows** (DESIGN.md §14) replay a shared-system-prompt trace
+— every request repeats the same ``SYS_LEN``-token system prompt before
+its own suffix — through the refcounted prefix-cache engine and the
+no-sharing chunked engine: hit rate, prefill tokens skipped (which must
+track ``matched_tokens`` exactly when nothing preempts), tokens/s vs
+no-sharing, and a token_identical flag.  The run asserts zero page
+leaks (``verify()`` + free-list identity) before reporting.
+``benchmarks.run --prefix`` runs ONLY this trace (the CI smoke),
+merging the ``prefix`` section into an existing ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -70,6 +80,11 @@ BENCH_SERVE_JSON = common.ART / "BENCH_serve.json"
 # that serving stays live under injected pool pressure (DESIGN.md §12)
 FAULTS_ONLY = False
 
+# --prefix (benchmarks.run): run only the shared-system-prompt trace —
+# the CI smoke that prefix caching skips prefill work and stays
+# token-identical to the no-sharing engine (DESIGN.md §14)
+PREFIX_ONLY = False
+
 ARCH = "llama-micro"
 PAGE_SIZE = 16
 MAX_LEN = 192
@@ -88,6 +103,10 @@ ITL_LONG = 320 if common.FAST else 512
 ITL_CHUNK = 8
 ITL_MAX_NEW = 24 if common.FAST else 40
 ITL_MAX_LEN = ITL_LONG + ITL_MAX_NEW + 8
+
+# shared-system-prompt trace (DESIGN.md §14): SYS_LEN tokens (full pages
+# + a tail, so the tail-page rule is exercised) repeated by every request
+SYS_LEN = 42
 
 
 def _run_engine(qm, packed, prompts, paged: bool):
@@ -190,6 +209,76 @@ def _run_degraded(qm, packed, prompts):
     }
 
 
+def _run_prefix(qm, packed, prompts, prefix: bool):
+    """Paged + chunked engine over a shared-system-prompt trace, with or
+    without the refcounted prefix cache.  Audits the pool before
+    reporting: ``verify()`` + free-list identity == zero page leaks."""
+    lens = [len(p) + MAX_NEW for p in prompts]
+    num_pages = MAX_BATCH * pages_for(int(np.percentile(lens, 95)),
+                                      PAGE_SIZE)
+    scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                       max_new=MAX_NEW, prefill_bucket=32, paged=True,
+                       page_size=PAGE_SIZE, num_pages=num_pages,
+                       prefill_chunk=PAGE_SIZE, prefix_cache=prefix)
+    eng = Engine(qm, packed, scfg)
+    for p in prompts:
+        eng.submit(p)
+    t0 = time.monotonic()
+    done = eng.run()
+    dt = time.monotonic() - t0
+    eng._kv.verify()
+    assert eng._kv.allocator.num_free == eng._kv.allocator.num_pages, \
+        "page leak in prefix trace"
+    toks = sum(len(r.out_tokens) for r in done)
+    return {"tokens_per_s": toks / dt, "wall_s": dt, "new_tokens": toks,
+            "preemptions": sum(r.preemptions for r in done),
+            "outputs": [r.out_tokens for r in done],
+            **eng.prefix_stats}
+
+
+def _prefix_doc_and_rows(qm, packed, vocab):
+    """The shared-system-prompt trace -> the ``prefix`` section of
+    BENCH_serve.json + its CSV rows.  The no-sharing baseline runs twice
+    (first pass pays the chunked-prefill compiles) so the reported
+    tokens/s ratio compares steady-state passes."""
+    rng = np.random.default_rng(14)
+    suffixes = TRACE[:N_REQ]
+    sys_prompt = rng.integers(0, vocab, SYS_LEN)
+    prompts = [np.concatenate([sys_prompt, rng.integers(0, vocab, n)])
+               for n in suffixes]
+    _run_prefix(qm, packed, prompts, prefix=False)          # warmup
+    base = _run_prefix(qm, packed, prompts, prefix=False)
+    shared = _run_prefix(qm, packed, prompts, prefix=True)
+    identical = shared["outputs"] == base["outputs"]
+    skipped = base["prefilled_tokens"] - shared["prefilled_tokens"]
+    doc = {
+        "sys_prompt_len": SYS_LEN, "suffix_lens": suffixes,
+        "page_size": PAGE_SIZE,
+        "lookups": shared["lookups"], "hits": shared["hits"],
+        "hit_rate": shared["hits"] / max(shared["lookups"], 1),
+        "matched_tokens": shared["matched_tokens"],
+        "prefill_tokens": shared["prefilled_tokens"],
+        "prefill_tokens_base": base["prefilled_tokens"],
+        "prefill_tokens_skipped": skipped,
+        "tokens_per_s": shared["tokens_per_s"],
+        "base_tokens_per_s": base["tokens_per_s"],
+        "speedup": shared["tokens_per_s"] / base["tokens_per_s"],
+        "preemptions": shared["preemptions"],
+        "token_identical": identical,
+    }
+    # skipped prefill must track the matched tokens exactly when nothing
+    # preempted (a resume re-prefills, which re-counts)
+    if shared["preemptions"] == 0:
+        assert skipped == shared["matched_tokens"], doc
+    us_per_tok = 1e6 * shared["wall_s"] / max(shared["new_tokens"], 1)
+    rows = [("serve/engine_prefix_cache_w4a8kv8", us_per_tok,
+             f"tok_s={doc['tokens_per_s']:.1f};hit_rate="
+             f"{doc['hit_rate']:.2f};prefill_skipped="
+             f"{doc['prefill_tokens_skipped']};base_tok_s="
+             f"{doc['base_tokens_per_s']:.1f};token_identical={identical}")]
+    return doc, rows
+
+
 def _degraded_doc_and_rows(qm, packed, prompts, clean_paged):
     deg = _run_degraded(qm, packed, prompts)
     deg["clean_tokens_per_s"] = clean_paged["tokens_per_s"]
@@ -227,6 +316,18 @@ def run():
         BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
         return rows
 
+    if PREFIX_ONLY:
+        # CI smoke: the shared-system-prompt trace only, merged into an
+        # existing BENCH_serve.json when the full suite ran first
+        pfx, rows = _prefix_doc_and_rows(qm, packed, cfg.vocab_size)
+        common.ART.mkdir(parents=True, exist_ok=True)
+        doc = (json.loads(BENCH_SERVE_JSON.read_text())
+               if BENCH_SERVE_JSON.exists() else
+               {"arch": ARCH, "quant": "w4a8g32kv8", "kernel_mode": "ref"})
+        doc["prefix"] = pfx
+        BENCH_SERVE_JSON.write_text(json.dumps(doc, indent=2))
+        return rows
+
     lin = _run_engine(qm, packed, prompts, paged=False)
     pgd = _run_engine(qm, packed, prompts, paged=True)
     identical = lin["outputs"] == pgd["outputs"]
@@ -251,6 +352,9 @@ def run():
 
     # degraded mode: same trace under injected pool pressure
     deg, deg_rows = _degraded_doc_and_rows(qm, packed, prompts, pgd)
+
+    # prefix caching: shared-system-prompt trace, sharing vs no-sharing
+    pfx, pfx_rows = _prefix_doc_and_rows(qm, packed, cfg.vocab_size)
 
     # mesh scaling: the sharded engine on 1/2/4/8 virtual devices
     # (subprocess — XLA's device-count flag must precede jax init)
@@ -282,6 +386,7 @@ def run():
             "p99_ratio": itl_whole["p99_ms"] / itl_chunk["p99_ms"],
         },
         "degraded": deg,
+        "prefix": pfx,
         "scaling": scaling,
     }
     common.ART.mkdir(parents=True, exist_ok=True)
@@ -315,5 +420,6 @@ def run():
     rows.append(("serve/itl_chunked_vs_whole_p99", 0.0,
                  f"ratio={doc['itl']['p99_ratio']:.2f}x"))
     rows.extend(deg_rows)
+    rows.extend(pfx_rows)
     rows.extend(serve_scaling.scaling_rows(scaling))
     return rows

@@ -51,6 +51,14 @@ the pool runs dry, and reclaims pages on completion — so cache memory
 tracks live tokens instead of ``max_batch × max_len`` slots.  The launcher
 runs the linear engine too and reports token agreement plus the cache
 memory ratio.
+
+``--prefix-cache`` (needs ``--paged``) turns on refcounted prefix-page
+sharing (DESIGN.md §14): full pages of already-served prompts stay
+content-addressable after release, and a new request whose token prefix
+matches adopts those pages instead of re-prefilling them.  The launcher
+demos it with a cold wave plus a replay wave of the same prompts on one
+engine and reports hit rate, adopted tokens, and token agreement against
+the plain paged run.
 """
 from __future__ import annotations
 
@@ -112,6 +120,12 @@ def main(argv=None) -> int:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page-pool size for --paged (0 = live-trace "
                          "sizing: max_batch * pages(prompt_len + max_new))")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prefix-page sharing over the paged "
+                         "cache (needs --paged; chunked admission is "
+                         "implied — defaults to --page-size chunks): "
+                         "matching prompt prefixes adopt resident pages "
+                         "instead of re-prefilling (DESIGN.md §14)")
     ap.add_argument("--ttl-s", type=float, default=0.0,
                     help="per-request wall-clock deadline in seconds "
                          "(0 = none); expired requests finish "
@@ -138,6 +152,9 @@ def main(argv=None) -> int:
         ap.error(f"--kvbits {args.kvbits} unsupported: use 4 (packed int4 "
                  "+ bf16 block-32 scales), 8 (int8 + f32 per-(token, head) "
                  "scales), or >= 16 (fp cache)")
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache shares pages of the paged KV cache: "
+                 "add --paged")
 
     mesh = None
     if args.mesh_data > 1 or args.mesh_model > 1:
@@ -309,6 +326,41 @@ def main(argv=None) -> int:
                     "MiB (%.2fx)", lin_eng._kv.cache_bytes() / 2**20,
                     pg_eng._kv.cache_bytes() / 2**20,
                     lin_eng._kv.cache_bytes() / pg_eng._kv.cache_bytes())
+
+        if args.prefix_cache:
+            # cold wave + replay wave on ONE engine: released full pages
+            # stay content-addressable, so the replay adopts them instead
+            # of re-prefilling — the multi-turn / repeated-system-prompt
+            # serving pattern (DESIGN.md §14)
+            # released pages only stay adoptable while the pool doesn't
+            # recycle them: size it to the whole trace's working set (or
+            # trust --num-pages), not the live max_batch sizing
+            px_pages = args.num_pages or args.requests * pages_for(
+                args.prompt_len + args.max_new + 1, args.page_size)
+            pxcfg = _dc.replace(
+                pcfg, prefix_cache=True, num_pages=px_pages,
+                prefill_chunk=args.prefill_chunk or args.page_size)
+            px_eng = Engine(smodel or model, sparams, pxcfg, mesh=mesh)
+            waves = []
+            for wave in ("cold", "replay"):
+                reqs = [px_eng.submit(pr) for pr in prompts]
+                t0 = time.monotonic()
+                px_eng.run()
+                dt = time.monotonic() - t0
+                waves.append([r.out_tokens for r in reqs])
+                total_new = sum(len(r.out_tokens) for r in reqs)
+                logger.info("[%s-prefix %s] %d requests, %d tokens in "
+                            "%.2fs (%.1f tok/s)", stag, wave, len(reqs),
+                            total_new, dt, total_new / dt)
+            stats = px_eng.prefix_stats
+            logger.info("prefix cache: %d/%d lookups hit, %d prompt tokens "
+                        "adopted from resident pages, %d prefilled",
+                        stats["hits"], stats["lookups"],
+                        stats["matched_tokens"], stats["prefilled_tokens"])
+            logger.info("greedy-token agreement %s paged vs prefix-cache: "
+                        "cold %.1f%%, replay %.1f%%", stag,
+                        100 * agreement(pg_out, waves[0]),
+                        100 * agreement(pg_out, waves[1]))
     return 0
 
 

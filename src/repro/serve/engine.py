@@ -73,6 +73,17 @@ memory tracks live tokens, not slots (DESIGN.md §9). The engine calls only
 ``reserve`` / ``splice`` / ``ensure_append`` / ``free`` and never inspects
 cache-entry ranks.
 
+Prefix caching (``ServeConfig.prefix_cache``, DESIGN.md §14): chunked
+admission passes the resume tokens to ``reserve``, which adopts the
+longest resident full-page prefix (refcounted shares of immutable pages)
+and reports the matched token count; ``_seq_len`` starts there, so
+``_advance_prefill`` chunk-prefills only the novel suffix — prefill work
+drops proportionally to the hit rate, token-identically to the no-sharing
+engine.  Preemption and completion just drop references; FAILED_NAN
+retirement quarantines co-readers of shared pages instead of scrubbing
+live KV (see ``_retire_slot``).  ``prefix_stats`` feeds the serve_bench
+``prefix`` rows.
+
 Quantized serving: pass a ``repro.serve.quantized.QuantizedModel`` over a
 QTensor tree — ``Model`` and ``QuantizedModel`` expose the same
 ``prefill`` / ``decode_step`` / ``init_cache`` / ``init_paged_cache``
@@ -123,6 +134,12 @@ class ServeConfig:
     page_size: int = 64
     num_pages: int = 0           # 0 = auto (max_batch * pages(max_len))
     max_pages_per_seq: int = 0   # 0 = auto (ceil(max_len / page_size))
+    prefix_cache: bool = False   # refcounted prefix-page sharing across
+    #                              requests (DESIGN.md §14): admission
+    #                              adopts the longest resident full-page
+    #                              prefix and chunked prefill resumes at
+    #                              the first novel token; needs paged=True
+    #                              and prefill_chunk > 0
     # failure model (DESIGN.md §12) --------------------------------------
     max_queue: int = 0           # > 0: bound the pending deque; submit
     #                              raises QueueFull past it (backpressure)
@@ -227,13 +244,19 @@ class Engine:
         if cfg.max_queue < 0:
             raise ValueError(f"max_queue={cfg.max_queue} unsupported: use 0 "
                              f"(unbounded) or a positive queue bound")
+        if cfg.prefix_cache and not (cfg.paged and cfg.prefill_chunk > 0):
+            raise ValueError(
+                "prefix_cache=True needs paged=True and prefill_chunk > 0: "
+                "prefix reuse shares whole pool pages and resumes chunked "
+                "prefill at the first novel token (DESIGN.md §14)")
         self._faults = faults
         if cfg.paged:
             self._kv = kv_cache.PagedCache(
                 model, cfg.max_batch, cfg.max_len, cfg.page_size,
                 num_pages=cfg.num_pages,
                 max_pages_per_seq=cfg.max_pages_per_seq,
-                faults=faults, integrity_checks=cfg.integrity_checks)
+                faults=faults, integrity_checks=cfg.integrity_checks,
+                prefix_cache=cfg.prefix_cache)
         else:
             self._kv = kv_cache.LinearCache(model, cfg.max_batch,
                                             cfg.max_len)
@@ -285,6 +308,10 @@ class Engine:
         self._step_idx = 0
         self._watchdog = 0       # consecutive steps without progress
         self._progress = 0       # tokens streamed + chunks + retirements
+        # prefix-cache accounting (serve_bench `prefix` rows): one lookup
+        # per chunked admission, matched tokens skip prefill entirely
+        self.prefix_stats = {"lookups": 0, "hits": 0,
+                             "matched_tokens": 0, "prefilled_tokens": 0}
         if cfg.prefill_chunk:
             if not getattr(model, "supports_chunked_prefill", False):
                 raise ValueError(
@@ -427,19 +454,32 @@ class Engine:
     def _retire_slot(self, slot: int, status: RequestStatus,
                      error: Optional[str] = None) -> None:
         """Terminal path for an occupied slot: scrub poisoned pages, free,
-        clear scheduling state, then fire on_done."""
+        clear scheduling state, then fire on_done.
+
+        FAILED_NAN under prefix sharing (DESIGN.md §14): the slot's
+        exclusively-owned pages may hold non-finite K/V, so they are zeroed
+        before the free list recycles them (masked attention rows still
+        enter ``p @ v`` with weight 0.0 and ``0.0 * NaN = NaN``).  A SHARED
+        page cannot be scrubbed — other readers attend to it live — so
+        ``quarantine`` unmaps it and reports the co-readers, and each is
+        failed FAILED_NAN in turn (recursively, so transitive readers fall
+        too and pages whose refcount has dropped to 1 get scrubbed by the
+        later retirement)."""
         req = self._slots[slot]
+        co_readers: list[int] = []
         if status is RequestStatus.FAILED_NAN:
-            # quarantine: the slot's pages may hold non-finite K/V; zero
-            # them before the free list recycles them (kv_cache.scrub —
-            # masked attention rows still enter p @ v with weight 0.0 and
-            # 0.0 * NaN = NaN, so stale poison would spread)
-            self._kv.scrub(slot)
+            co_readers = self._kv.quarantine(slot)
         self._slots[slot] = None
         self._seq_len[slot] = 0
         self._prefill_prog[slot] = None
         self._kv.free(slot)
         self._finish_request(req, status, error)
+        for other in co_readers:
+            if self._slots[other] is not None:
+                self._retire_slot(
+                    other, RequestStatus.FAILED_NAN,
+                    error=f"shared prefix page(s) poisoned by rid="
+                          f"{req.rid} (FAILED_NAN quarantine)")
 
     def _dispatch_token(self, req: Request, tok: int) -> bool:
         """Record + stream one token; False when the user callback raised
@@ -672,15 +712,26 @@ class Engine:
             if not self._pending:
                 return
             req = self._pending[0]
-            if not self._kv.reserve(slot, req.resume_len):
+            toks = req.resume_tokens()
+            if not self._kv.reserve(slot, req.resume_len, tokens=toks):
                 # pool (transiently) dry: wait for completions to free
                 # pages; a queue that can never drain trips the watchdog
                 return
             self._pending.popleft()
             self._slots[slot] = req
-            self._seq_len[slot] = 0
+            # prefix hit: the matched tokens are already resident in shared
+            # pages — chunked prefill resumes at the first novel token
+            # (matched is a page multiple, so the slot's writes only ever
+            # touch its fresh exclusive pages)
+            matched = self._kv.matched_tokens(slot)
+            self._seq_len[slot] = matched
             req.status = RequestStatus.RUNNING
-            self._prefill_prog[slot] = (req, req.resume_tokens())
+            self._prefill_prog[slot] = (req, toks)
+            if self.cfg.prefix_cache:
+                st = self.prefix_stats
+                st["lookups"] += 1
+                st["hits"] += int(matched > 0)
+                st["matched_tokens"] += matched
 
     def _advance_prefill(self) -> bool:
         """Advance the FIFO-oldest mid-prefill slot by one chunk of up to
@@ -715,6 +766,7 @@ class Engine:
         self._kv.cache = cache
         self._seq_len[slot] = done + n
         self._progress += 1
+        self.prefix_stats["prefilled_tokens"] += n
         if done + n < len(toks):
             return True
         # prompt fully prefilled: sample the first token from the last
@@ -732,6 +784,10 @@ class Engine:
             self._retire_slot(slot, RequestStatus.FAILED_NAN,
                               error="non-finite logits at prefill")
             return True
+        # finite final-row logits certify every attended K/V row finite
+        # (a NaN anywhere within lens would have propagated) — only now
+        # may the sequence's full pages enter the prefix map
+        self._kv.register_prefix(slot, toks)
         tok = int(tok_host[0])
         if not self._dispatch_token(req, tok):
             self._retire_slot(slot, RequestStatus.FAILED_CALLBACK,
@@ -786,8 +842,11 @@ class Engine:
             while not self._kv.ensure_append(slot, self._seq_len[slot]):
                 live = [i for i, s in enumerate(self._slots)
                         if s is not None]
-                victim = max(live, key=lambda i: (self._kv.owned_pages(i),
-                                                  self._seq_len[i], -i))
+                # rank victims by what their eviction actually frees:
+                # shared pages survive the free (their other readers keep
+                # them live), so only exclusively-owned pages count
+                victim = max(live, key=lambda i: (
+                    self._kv.reclaimable_pages(i), self._seq_len[i], -i))
                 self._preempt(victim)
                 if victim == slot:
                     break
@@ -811,8 +870,8 @@ class Engine:
         of the trace can move, rather than spinning forever."""
         live = [i for i, s in enumerate(self._slots) if s is not None]
         if live:
-            victim = max(live, key=lambda i: (self._kv.owned_pages(i),
-                                              self._seq_len[i], -i))
+            victim = max(live, key=lambda i: (
+                self._kv.reclaimable_pages(i), self._seq_len[i], -i))
             self._retire_slot(
                 victim, RequestStatus.FAILED_POOL,
                 error=f"watchdog: no engine progress for "
@@ -862,6 +921,11 @@ class Engine:
             nxt_host, ok = jax.device_get((nxt, ok_dev))
             for i in active:
                 req = self._slots[i]
+                if req is None:
+                    # already retired mid-loop: a FAILED_NAN quarantine on
+                    # an earlier slot failed this one as a co-reader of a
+                    # poisoned shared page — its sampled token is void
+                    continue
                 if not bool(ok[i]):
                     # quarantine ONLY this slot: scrub + free its pages,
                     # fail it, keep the rest of the batch streaming

@@ -23,10 +23,24 @@ pool memory tracks the *live* token count, not ``max_batch * max_len``.
 
 Device/host split: :class:`PagedKVCache` is the pytree the jitted decode
 step carries (pure arrays; ``page_size`` is static aux data).  Allocation is
-host-side bookkeeping — :class:`PageAllocator` owns the free list, and the
-engine-facing stores (:class:`PagedCache`, :class:`LinearCache`) pair the
-device pytree with allocate/append/free plus ``splice`` (writing a prefilled
-sequence into a slot) so the Engine never touches cache-entry ranks.
+host-side bookkeeping — :class:`PageAllocator` owns the free list plus the
+per-page refcounts, and the engine-facing stores (:class:`PagedCache`,
+:class:`LinearCache`) pair the device pytree with allocate/append/free plus
+``splice`` (writing a prefilled sequence into a slot) so the Engine never
+touches cache-entry ranks.
+
+Prefix sharing (DESIGN.md §14): full pages are immutable once written, so
+:class:`PagedCache` keeps a chain-hash-of-(token-ids-so-far, kv-config) →
+page-id map over them.  ``reserve(slot, length, tokens=...)`` matches the
+longest resident prefix, points the new sequence's page-table row at the
+shared pages (refcounts track every reader), and reports the matched token
+count so the engine resumes chunked prefill at the first novel token.  A
+shared page returns to the free list only at refcount 0 — and even then its
+map entry survives (front of the free list, recycled last) so serial
+same-prefix traffic still hits.  The partially-filled tail page is never
+shared, and every sequence keeps at least one exclusive fresh page, so no
+write can ever target a shared page.
+
 
 Cache layout contract (shared with ``models/transformer.py``): linear cache
 entries are ``(L, B, S, ...)`` with the sequence axis at position 2; the
@@ -35,6 +49,7 @@ keys with a sequence axis are exactly ``k / v / k_scale / v_scale``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import jax
@@ -251,12 +266,18 @@ def paged_cache_specs(model, batch: int, num_pages: int, page_size: int,
 
 
 class PageAllocator:
-    """Host-side free-list over the page pool.
+    """Host-side refcounted free-list over the page pool.
 
     Pure bookkeeping — device ``page_table`` updates are done by the store
     that owns the arrays.  ``owned[slot]`` lists the pool pages backing a
-    slot in logical order; the free list is a LIFO stack so recently freed
-    (still-warm) pages are reused first.
+    slot in logical order (under prefix sharing the same page may appear in
+    several slots' lists); ``owners[page]`` is the inverse map — the set of
+    slots referencing a page, its refcount — and ``in_free[page]`` mirrors
+    free-list membership, so every integrity check and release is O(1) per
+    page.  The free list is a LIFO stack so recently freed (still-warm)
+    pages are reused first; refcount-0 pages the store still has
+    prefix-mapped are parked at the FRONT instead, so they are recycled
+    last and stay matchable as long as the pool allows.
     """
 
     def __init__(self, num_pages: int, max_pages_per_seq: int,
@@ -265,6 +286,8 @@ class PageAllocator:
         self.max_pages_per_seq = max_pages_per_seq
         self.free_list: list[int] = list(range(num_pages - 1, -1, -1))
         self.owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.owners: list[set[int]] = [set() for _ in range(num_pages)]
+        self.in_free: list[bool] = [True] * num_pages
         self.peak_in_use = 0
         self.faults = faults
 
@@ -276,12 +299,15 @@ class PageAllocator:
     def num_in_use(self) -> int:
         return self.num_pages - len(self.free_list)
 
+    def refcount(self, page: int) -> int:
+        return len(self.owners[page])
+
     def can_allocate(self, n: int) -> bool:
         return n <= len(self.free_list)
 
     def allocate(self, slot: int, n: int) -> Optional[list[int]]:
-        """Grow ``slot`` by ``n`` pages; None (state unchanged) if the pool
-        or the slot's page table cannot hold them."""
+        """Grow ``slot`` by ``n`` fresh (refcount-1) pages; None (state
+        unchanged) if the pool or the slot's page table cannot hold them."""
         if self.faults is not None and self.faults.fires(
                 flt.ALLOC_FAIL, slot=slot, n=n):
             return None   # injected "pool dry" — state untouched
@@ -290,33 +316,71 @@ class PageAllocator:
         if len(self.owned[slot]) + n > self.max_pages_per_seq:
             return None
         pages = [self.free_list.pop() for _ in range(n)]
+        for p in pages:
+            self.in_free[p] = False
+            self.owners[p].add(slot)
         self.owned[slot].extend(pages)
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
         return pages
 
-    def free(self, slot: int) -> int:
-        """Return every page of ``slot`` to the free list.
+    def adopt(self, slot: int, pages: list[int]) -> bool:
+        """Take refcounted shares of resident pages (prefix reuse).
 
-        Integrity guards (always on — they are O(pages) host work): a page
-        both owned and on the free list is a double-free; a page owned by
-        two slots means a corrupted handoff.  Either way the free list
-        would hand the same page to two sequences, so raise instead."""
+        Live pages just gain a reader; refcount-0 pages still parked on the
+        free list (completed prefixes the store kept mapped) are revived
+        off it.  All-or-nothing: False (state unchanged) when the slot's
+        page table cannot hold them."""
+        if len(self.owned[slot]) + len(pages) > self.max_pages_per_seq:
+            return False
+        for p in pages:
+            if self.in_free[p]:
+                self.free_list.remove(p)
+                self.in_free[p] = False
+            self.owners[p].add(slot)
+        self.owned[slot].extend(pages)
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return True
+
+    def exclusive_pages(self, slot: int) -> int:
+        """Pages only ``slot`` references — what free(slot) would actually
+        return to the pool (the engine's true eviction yield)."""
+        return sum(1 for p in self.owned[slot] if self.owners[p] == {slot})
+
+    def free(self, slot: int, cached: frozenset = frozenset()) -> int:
+        """Drop ``slot``'s reference on every page it owns; pages reaching
+        refcount 0 return to the free list (``cached`` ones — still
+        prefix-mapped by the store — go to the front, recycled last).
+
+        Integrity guards (always on — O(pages) host work for real, one
+        ``owners``/``in_free`` lookup per page): a page both owned and on
+        the free list is a double-free; a page in ``owned[slot]`` that the
+        refcounts don't credit to ``slot`` is a corrupted handoff.  Either
+        way the free list would hand live KV to a new tenant, so raise
+        instead."""
         pages = self.owned[slot]
-        dup = set(pages) & set(self.free_list)
+        dup = sorted({p for p in pages if self.in_free[p]})
         if dup:
             raise PageIntegrityError(
-                f"double-free: slot {slot} owns page(s) {sorted(dup)} that "
+                f"double-free: slot {slot} owns page(s) {dup} that "
                 f"are already on the free list")
-        for other, op in enumerate(self.owned):
-            if other == slot:
-                continue
-            shared = set(pages) & set(op)
-            if shared:
-                raise PageIntegrityError(
-                    f"freeing slot {slot}: page(s) {sorted(shared)} are "
-                    f"also owned by live slot {other}")
+        orphan = sorted({p for p in pages if slot not in self.owners[p]})
+        if orphan:
+            others = sorted({o for p in orphan for o in self.owners[p]})
+            raise PageIntegrityError(
+                f"freeing slot {slot}: page(s) {orphan} are missing from "
+                f"slot {slot}'s refcounts — also owned by live slot(s) "
+                f"{others}: corrupted handoff")
         n = len(pages)
-        self.free_list.extend(reversed(pages))
+        dying: list[int] = []
+        for p in pages:
+            owners = self.owners[p]
+            owners.discard(slot)
+            if not owners:
+                self.in_free[p] = True
+                dying.append(p)
+        self.free_list.extend(reversed([p for p in dying
+                                        if p not in cached]))
+        self.free_list[:0] = [p for p in dying if p in cached]
         self.owned[slot] = []
         return n
 
@@ -345,9 +409,19 @@ class LinearCache:
     def capacity(self) -> int:
         return self.max_len
 
-    def reserve(self, slot: int, length: int) -> bool:
-        """Linear slots are preallocated; only the capacity check applies."""
+    def reserve(self, slot: int, length: int,
+                tokens: Optional[np.ndarray] = None) -> bool:
+        """Linear slots are preallocated; only the capacity check applies.
+        ``tokens`` (the prefix-sharing hint) is ignored — contiguous slabs
+        cannot share pages."""
         return length <= self.max_len
+
+    def matched_tokens(self, slot: int) -> int:
+        """Linear slots never share cache state — nothing ever matches."""
+        return 0
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """No page map to publish into."""
 
     def fits_idle(self, length: int) -> bool:
         """Could an otherwise-idle engine ever hold ``length`` tokens for
@@ -365,6 +439,10 @@ class LinearCache:
         return True
 
     def owned_pages(self, slot: int) -> int:
+        """Linear slots hold no pages (preemption never triggers)."""
+        return 0
+
+    def reclaimable_pages(self, slot: int) -> int:
         """Linear slots hold no pages (preemption never triggers)."""
         return 0
 
@@ -409,6 +487,12 @@ class LinearCache:
                 self.cache[key] = arr.at[:, slot].set(
                     jnp.zeros((), arr.dtype))
 
+    def quarantine(self, slot: int) -> list[int]:
+        """NaN quarantine: linear slots share nothing, so scrub the slab
+        and report no co-readers."""
+        self.scrub(slot)
+        return []
+
     def verify(self) -> None:
         """Linear slots have no shared bookkeeping to corrupt."""
 
@@ -424,23 +508,46 @@ class PagedCache:
     :meth:`free`.  All length accounting is host-side (the engine knows
     every sequence's length without a device sync); the device ``lens`` is
     updated by splice and by the decode step itself.
+
+    With ``prefix_cache`` (DESIGN.md §14) the store additionally keeps a
+    chain-hash → page-id map over FULL pages: ``reserve(..., tokens=...)``
+    adopts the longest resident prefix (refcounted shares, tail page always
+    fresh), :meth:`register_prefix` publishes a fully-prefilled sequence's
+    full pages into the map, and :meth:`quarantine` handles NaN retirement
+    without scrubbing shared KV out from under live readers.
     """
 
     def __init__(self, model, max_batch: int, max_len: int, page_size: int,
                  num_pages: int = 0, max_pages_per_seq: int = 0,
                  faults: Optional[flt.FaultPlan] = None,
-                 integrity_checks: bool = False):
+                 integrity_checks: bool = False,
+                 prefix_cache: bool = False):
         mpps = max_pages_per_seq or pages_for(max_len, page_size)
         pool = num_pages or max_batch * mpps   # default: linear-equivalent
         self.cache: PagedKVCache = model.init_paged_cache(
             max_batch, pool, page_size, mpps)
         self.page_size = page_size
         self.max_len = min(max_len, mpps * page_size)
+        self._cfg_max_len = max_len
         self.allocator = PageAllocator(pool, mpps, max_batch, faults=faults)
         self.faults = faults
         # debug mode: cross-check the device page table against the host
         # allocator on every free (costs a device readback — tests only)
         self.integrity_checks = integrity_checks
+        # prefix sharing (DESIGN.md §14): chain-hash key -> page id over
+        # full pages, its inverse, and the per-slot matched token count of
+        # the last reserve.  The hash chain is seeded with the kv-config
+        # identity (page geometry + storage dtypes) so pages written under
+        # one quantization scheme can never be matched under another.
+        self.prefix_cache = prefix_cache
+        self._prefix_map: dict[bytes, int] = {}
+        self._page_hash: dict[int, bytes] = {}
+        self._matched = [0] * max_batch
+        c = self.cache
+        ident = (page_size, str(c.k.dtype), int(c.k.shape[-1]),
+                 None if c.k_scale is None else str(c.k_scale.dtype))
+        self._seed = hashlib.blake2b(repr(ident).encode(),
+                                     digest_size=16).digest()
 
     # uniform store API ----------------------------------------------------
     @property
@@ -458,24 +565,129 @@ class PagedCache:
                 <= min(al.num_pages, al.max_pages_per_seq))
 
     def unservable_reason(self, length: int) -> str:
+        """Name the ACTUAL binding constraint — each cause has a different
+        remedy, and suggesting ``num_pages`` for a ``max_len`` or
+        ``max_pages_per_seq`` limit sends the operator at the wrong knob."""
         al = self.allocator
-        return (f"needs {pages_for(length, self.page_size)} pages of "
-                f"{self.page_size} for {length} cache tokens but the idle "
-                f"pool holds {al.num_pages} (max {al.max_pages_per_seq} "
-                f"per sequence, max_len {self.max_len}) — size num_pages "
-                f"up")
-
-    def reserve(self, slot: int, length: int) -> bool:
-        """Allocate the prompt's ``ceil(length / page_size)`` pages and
-        publish them to the slot's device page-table row."""
-        assert not self.allocator.owned[slot], "reserve on an occupied slot"
         n = pages_for(length, self.page_size)
+        if length > self._cfg_max_len:
+            return (f"needs {length} cache tokens but max_len is "
+                    f"{self._cfg_max_len} — raise --max-len")
+        if n > al.max_pages_per_seq:
+            return (f"needs {n} pages of {self.page_size} for {length} "
+                    f"cache tokens but one sequence may hold at most "
+                    f"{al.max_pages_per_seq} (max_pages_per_seq caps "
+                    f"usable max_len at {al.max_pages_per_seq * self.page_size}"
+                    f") — raise max_pages_per_seq")
+        return (f"needs {n} pages of {self.page_size} for {length} cache "
+                f"tokens but the idle pool holds {al.num_pages} — size "
+                f"num_pages up")
+
+    # prefix sharing (DESIGN.md §14) --------------------------------------
+    def _page_keys(self, tokens: np.ndarray,
+                   n_pages: Optional[int] = None) -> list[bytes]:
+        """Chain-hash key per FULL page of ``tokens``: key ``i`` digests
+        (key ``i-1``, the page's token ids), seeded with the kv-config
+        identity — so a key names the page's entire token history, and
+        equal keys imply bit-equal quantized KV content (every write path
+        is deterministic in the tokens alone; DESIGN.md §10)."""
+        ps = self.page_size
+        n = len(tokens) // ps if n_pages is None else n_pages
+        toks = np.ascontiguousarray(tokens[:n * ps], np.int32)
+        h, out = self._seed, []
+        for i in range(n):
+            m = hashlib.blake2b(digest_size=16)
+            m.update(h)
+            m.update(toks[i * ps:(i + 1) * ps].tobytes())
+            h = m.digest()
+            out.append(h)
+        return out
+
+    def _match_prefix(self, tokens: np.ndarray) -> list[int]:
+        """Longest resident full-page prefix of ``tokens``, capped so at
+        least ONE token stays novel — the final chunk must produce the
+        first sampled token's logits, so a full hit recomputes exactly its
+        last page."""
+        limit = (len(tokens) - 1) // self.page_size
+        pages = []
+        for key in self._page_keys(tokens, limit):
+            page = self._prefix_map.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def _unmap(self, page: int) -> None:
+        key = self._page_hash.pop(page, None)
+        if key is not None:
+            self._prefix_map.pop(key, None)
+
+    def _allocate(self, slot: int, n: int) -> Optional[list[int]]:
+        """Fresh pages for ``slot``; a recycled page that was still
+        prefix-mapped (refcount-0 cache hit candidate) loses its map entry
+        — its content is about to be overwritten."""
         pages = self.allocator.allocate(slot, n)
-        if pages is None:
+        if pages:
+            for p in pages:
+                self._unmap(p)
+        return pages
+
+    def matched_tokens(self, slot: int) -> int:
+        """Tokens of ``slot``'s sequence already resident via shared pages
+        (set by the last :meth:`reserve`); the engine resumes chunked
+        prefill at this offset."""
+        return self._matched[slot]
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Publish ``slot``'s FULL pages into the prefix map (first writer
+        wins).  Called once the sequence is fully prefilled with finite
+        logits: full pages are immutable from here on (decode appends land
+        in later pages), so their quantized content is exactly what any
+        future sequence with the same token history would write."""
+        if not self.prefix_cache:
+            return
+        pages = self.allocator.owned[slot]
+        for key, page in zip(self._page_keys(np.asarray(tokens)), pages):
+            if key in self._prefix_map or page in self._page_hash:
+                continue   # already resident (often this slot's own adopt)
+            self._prefix_map[key] = page
+            self._page_hash[page] = key
+
+    def reserve(self, slot: int, length: int,
+                tokens: Optional[np.ndarray] = None) -> bool:
+        """Allocate the prompt's ``ceil(length / page_size)`` pages and
+        publish them to the slot's device page-table row.
+
+        With ``prefix_cache`` and ``tokens``, the longest resident full-page
+        prefix is adopted (refcounted shares) instead of allocated, the
+        device ``lens`` is published at the matched length (decode steps
+        write a droppable garbage token ahead of mid-prefill slots — it
+        must land in the slot's first EXCLUSIVE page, never a shared one),
+        and :meth:`matched_tokens` reports the resume offset."""
+        assert not self.allocator.owned[slot], "reserve on an occupied slot"
+        self._matched[slot] = 0
+        shared: list[int] = []
+        if self.prefix_cache and tokens is not None:
+            shared = self._match_prefix(np.asarray(tokens))
+        n = pages_for(length, self.page_size)
+        if shared and not self.allocator.adopt(slot, shared):
+            shared = []
+        fresh = self._allocate(slot, n - len(shared))
+        if fresh is None:
+            if shared:   # roll back the adopt — reserve is all-or-nothing
+                self.allocator.free(slot, cached=frozenset(
+                    p for p in shared if p in self._page_hash))
             return False
         pt = self.cache.page_table.at[slot, :n].set(
-            jnp.asarray(pages, jnp.int32))
-        self.cache = dataclasses.replace(self.cache, page_table=pt)
+            jnp.asarray(shared + fresh, jnp.int32))
+        if shared:
+            matched = len(shared) * self.page_size
+            self._matched[slot] = matched
+            lens = self.cache.lens.at[slot].set(matched)
+            self.cache = dataclasses.replace(self.cache, page_table=pt,
+                                             lens=lens)
+        else:
+            self.cache = dataclasses.replace(self.cache, page_table=pt)
         return True
 
     def ensure_append(self, slot: int, length: int) -> bool:
@@ -484,7 +696,7 @@ class PagedCache:
         idx = len(self.allocator.owned[slot])   # logical index of a new page
         if length < idx * self.page_size:
             return True
-        pages = self.allocator.allocate(slot, 1)
+        pages = self._allocate(slot, 1)
         if pages is None:
             return False
         pt = self.cache.page_table.at[slot, idx].set(pages[0])
@@ -494,6 +706,12 @@ class PagedCache:
     def owned_pages(self, slot: int) -> int:
         """Pages currently backing ``slot`` (the engine's eviction rank)."""
         return len(self.allocator.owned[slot])
+
+    def reclaimable_pages(self, slot: int) -> int:
+        """Pages an eviction of ``slot`` would actually return to the pool
+        (excludes shared pages other readers keep live) — the honest
+        preemption-victim rank under prefix sharing."""
+        return self.allocator.exclusive_pages(slot)
 
     def splice(self, slot: int, seq_cache: dict, row: int,
                length: int) -> None:
@@ -540,11 +758,16 @@ class PagedCache:
                 page_table=self.cache.page_table.at[slot, 0].set(bad))
 
     def free(self, slot: int) -> int:
-        """Reclaim the slot's pages (stale pool contents stay — every read
-        is gated by the page table and lens)."""
+        """Drop the slot's page references; pages reaching refcount 0
+        return to the free list (stale pool contents stay — every read is
+        gated by the page table and lens).  Pages still prefix-mapped are
+        parked at the free-list front so they stay matchable until the
+        pool actually needs them."""
         if self.integrity_checks:
             self._check_free(slot)
-        n = self.allocator.free(slot)
+        n = self.allocator.free(slot, cached=frozenset(
+            p for p in self.allocator.owned[slot] if p in self._page_hash))
+        self._matched[slot] = 0
         pt = self.cache.page_table.at[slot].set(-1)
         lens = self.cache.lens.at[slot].set(0)
         self.cache = dataclasses.replace(self.cache, page_table=pt,
@@ -553,9 +776,12 @@ class PagedCache:
 
     def _check_free(self, slot: int) -> None:
         """Debug-mode free: the device page-table row must mirror the host
-        allocator, and no other row may reference the pages being freed
-        (else the free list would hand live KV to a new tenant)."""
-        owned = self.allocator.owned[slot]
+        allocator, and no other row may reference a page about to reach
+        refcount 0 (else the free list would hand live KV to a new
+        tenant).  Shared pages — refcount > 1 — are legitimately
+        referenced by their other readers' rows."""
+        al = self.allocator
+        owned = al.owned[slot]
         pt = np.asarray(self.cache.page_table)
         row, n = pt[slot], len(owned)
         if list(row[:n]) != owned or not (row[n:] == -1).all():
@@ -563,24 +789,16 @@ class PagedCache:
                 f"free(slot={slot}): device page-table row "
                 f"{row.tolist()} diverged from allocator bookkeeping "
                 f"{owned} — corrupted splice/append")
-        if n:
+        dying = [p for p in owned if al.owners[p] == {slot}]
+        if dying:
             others = np.delete(pt, slot, axis=0)
-            shared = np.intersect1d(others[others >= 0], owned)
+            shared = np.intersect1d(others[others >= 0], dying)
             if shared.size:
                 raise PageIntegrityError(
                     f"free(slot={slot}): page(s) {shared.tolist()} still "
                     f"referenced by another live page-table row")
 
-    def scrub(self, slot: int) -> None:
-        """Zero the slot's pool pages before they return to the free list.
-
-        Needed on NaN quarantine: the flash kernels mask *scores* past
-        ``lens`` (``where(pos < len, sc, -1e30)``) but masked rows still
-        enter ``p @ v`` with weight 0.0 — and ``0.0 * NaN = NaN`` — so a
-        non-finite value in a recycled page would poison its next owner
-        through that page's garbage tail.  Zeroing restores the pool's
-        initial state for exactly these pages (DESIGN.md §12)."""
-        pages = self.allocator.owned[slot]
+    def _zero_pages(self, pages: list[int]) -> None:
         if not pages:
             return
         pidx = jnp.asarray(pages, jnp.int32)
@@ -592,19 +810,85 @@ class PagedCache:
             new[key] = pool.at[:, pidx].set(jnp.zeros((), pool.dtype))
         self.cache = dataclasses.replace(self.cache, **new)
 
+    def quarantine(self, slot: int) -> list[int]:
+        """NaN quarantine for ``slot`` before its free (DESIGN.md §12/§14).
+
+        The flash kernels mask *scores* past ``lens`` (``where(pos < len,
+        sc, -1e30)``) but masked rows still enter ``p @ v`` with weight 0.0
+        — and ``0.0 * NaN = NaN`` — so non-finite values left in a recycled
+        page would poison its next owner.  Under sharing the old
+        zero-everything scrub is itself the bug: zeroing a shared page
+        rewrites live K/V other readers attend to.  So: every page the
+        slot owns is unmapped from the prefix index (suspect content must
+        never be matched again), only refcount-1 pages are zeroed, and the
+        co-readers of any shared page are returned — the engine must fail
+        them with FAILED_NAN rather than let them keep attending to
+        suspect K/V."""
+        al = self.allocator
+        co: set[int] = set()
+        excl: list[int] = []
+        for p in al.owned[slot]:
+            self._unmap(p)
+            if al.owners[p] == {slot}:
+                excl.append(p)
+            else:
+                co |= al.owners[p] - {slot}
+        self._zero_pages(excl)
+        return sorted(co)
+
+    def scrub(self, slot: int) -> None:
+        """Zero the slot's exclusively-owned pages (refcount 1) before they
+        return to the free list; shared pages are left intact — use
+        :meth:`quarantine` to also learn which readers must fail."""
+        self.quarantine(slot)
+
     def verify(self) -> None:
         """Full pool audit (tests / post-trace): every page is either free
-        or owned exactly once, and the device page tables mirror the host
-        allocator.  Raises :class:`PageIntegrityError` on any violation."""
+        (refcount 0, exactly once on the free list) or referenced by
+        exactly its refcount's worth of owned lists, the prefix map is an
+        internally consistent bijection, and the device page tables mirror
+        the host allocator.  Raises :class:`PageIntegrityError` on any
+        violation."""
         al = self.allocator
-        seen = list(al.free_list)
-        for op in al.owned:
-            seen.extend(op)
-        if sorted(seen) != list(range(al.num_pages)):
+        if sorted(al.free_list) != sorted(set(al.free_list)):
             raise PageIntegrityError(
-                f"page conservation violated: free list + owned = "
-                f"{sorted(seen)}, expected every page of "
-                f"{al.num_pages} exactly once")
+                f"free list holds duplicates: {sorted(al.free_list)}")
+        refs: dict[int, int] = {p: 0 for p in range(al.num_pages)}
+        for slot, op in enumerate(al.owned):
+            for p in op:
+                refs[p] += 1
+                if slot not in al.owners[p]:
+                    raise PageIntegrityError(
+                        f"slot {slot} owns page {p} but owners[{p}] = "
+                        f"{sorted(al.owners[p])} does not credit it")
+        free = set(al.free_list)
+        for p in range(al.num_pages):
+            rc = len(al.owners[p])
+            if refs[p] != rc:
+                raise PageIntegrityError(
+                    f"page {p}: refcount {rc} but appears in {refs[p]} "
+                    f"owned list(s)")
+            if al.in_free[p] != (p in free):
+                raise PageIntegrityError(
+                    f"page {p}: in_free={al.in_free[p]} but free-list "
+                    f"membership is {p in free}")
+            if rc == 0 and p not in free:
+                raise PageIntegrityError(
+                    f"page conservation violated: page {p} has refcount 0 "
+                    f"but is not on the free list (leaked)")
+            if rc > 0 and p in free:
+                raise PageIntegrityError(
+                    f"page {p} is on the free list with live refcount "
+                    f"{rc} (owners {sorted(al.owners[p])})")
+        for key, page in self._prefix_map.items():
+            if self._page_hash.get(page) != key:
+                raise PageIntegrityError(
+                    f"prefix map corrupt: key {key.hex()} -> page {page} "
+                    f"but page_hash[{page}] disagrees")
+        if len(self._page_hash) != len(self._prefix_map):
+            raise PageIntegrityError(
+                f"prefix map corrupt: {len(self._prefix_map)} keys vs "
+                f"{len(self._page_hash)} hashed pages")
         pt = np.asarray(self.cache.page_table)
         for slot, op in enumerate(al.owned):
             row, n = pt[slot], len(op)

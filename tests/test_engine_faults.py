@@ -101,6 +101,32 @@ def test_submit_validation_errors(served):
     assert eng._all == [] and paged._all == []
 
 
+def test_unservable_remedy_matches_cause(served):
+    """Each unservable cause names ITS limiting factor (and remedy):
+    suggesting "size num_pages up" for a max_len- or max_pages_per_seq-
+    bound prompt sends the operator at the wrong knob."""
+    cfg, qm, packed = served
+    # pool-bound: plenty of max_len / per-seq table, too few pool pages
+    pool = Engine(qm, packed, _scfg(paged=True, num_pages=2))
+    with pytest.raises(ValueError, match="num_pages up") as e:
+        pool.submit(_prompts(cfg, [40])[0])
+    assert "max-len" not in str(e.value)
+    # max_len-bound: the pool could hold the pages, max_len cannot
+    mlen = Engine(qm, packed, _scfg(paged=True, max_len=32, num_pages=64,
+                                    max_pages_per_seq=8))
+    with pytest.raises(ValueError, match="max-len") as e:
+        mlen.submit(_prompts(cfg, [40])[0])
+    assert "num_pages" not in str(e.value)
+    # max_pages_per_seq-bound: pool and max_len fine, the per-sequence
+    # page table is the cap
+    mpps = Engine(qm, packed, _scfg(paged=True, max_len=64, num_pages=64,
+                                    max_pages_per_seq=2))
+    with pytest.raises(ValueError, match="max_pages_per_seq") as e:
+        mpps.submit(_prompts(cfg, [40])[0])
+    assert "num_pages up" not in str(e.value) \
+        and "max-len" not in str(e.value)
+
+
 def test_queue_full_backpressure(served):
     """REJECTED_QUEUE_FULL: a bounded queue raises QueueFull at submit;
     the rejected request is terminal (on_done fired) and the engine keeps
@@ -179,6 +205,89 @@ def test_nan_quarantine_scrubs_slot(served):
     lin.scrub(0)
     ks = np.asarray(lin.cache["k_scale"], np.float32)
     assert np.isfinite(ks[:, 0]).all() and np.isnan(ks[:, 1]).all()
+
+
+def test_nan_quarantine_never_scrubs_shared_pages(served):
+    """Scrub vs sharing (DESIGN.md §14): zeroing a SHARED page would
+    silently corrupt the other readers' live K/V (0.0 rows re-enter
+    p @ v), so quarantine must zero only refcount-1 pages, unmap the
+    slot's pages from the prefix index, and report the co-readers for
+    the engine to fail."""
+    cfg, qm, packed = served
+    store = PagedCache(qm, max_batch=3, max_len=32, page_size=PS,
+                       prefix_cache=True)
+    toks = np.arange(19, dtype=np.int32)
+    assert store.reserve(0, len(toks) + 1, tokens=toks)
+    store.register_prefix(0, toks)            # 2 full pages enter the map
+    assert store.reserve(1, len(toks) + 1, tokens=toks)
+    assert store.matched_tokens(1) == 2 * PS  # slot 1 adopted both
+    shared = store.allocator.owned[0][:2]
+    excl1 = [p for p in store.allocator.owned[1] if p not in shared]
+    store.cache = dataclasses.replace(
+        store.cache, k_scale=store.cache.k_scale + jnp.float32(jnp.nan))
+    co = store.quarantine(1)
+    assert co == [0]                          # slot 0 still reads the pages
+    ks = np.asarray(store.cache.k_scale, np.float32)
+    for page in excl1:
+        assert np.isfinite(ks[:, page]).all()   # exclusive pages zeroed
+    for page in shared:
+        assert np.isnan(ks[:, page]).all()      # shared pages untouched
+    assert not store._prefix_map                # suspect pages unmatchable
+    store.free(1)
+    store.verify()
+
+
+def test_nan_quarantine_fails_shared_prefix_readers(served):
+    """Engine acceptance for the quarantine-under-sharing policy: poison a
+    request whose prompt pages are shared — the co-reader decoding from
+    those pages fails FAILED_NAN too (never silently serving scrubbed
+    K/V), a fresh request re-prefills the now-unmapped prefix cleanly,
+    and completed streams stay token-identical to the no-sharing engine.
+    The linear engine under the same fault plan is the no-sharing
+    control: only the victim fails there."""
+    cfg, qm, packed = served
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 19)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, cfg.vocab_size, n)])
+               for n in (5, 9, 13)]
+
+    def run(prefix, paged=True):
+        scfg = _scfg(max_batch=2, max_new=8, paged=paged,
+                     prefill_chunk=PS, prefix_cache=prefix,
+                     integrity_checks=paged)
+        plan = FaultPlan(Fault(point=flt.NAN_LOGITS, rid=1, after_step=12))
+        eng = Engine(qm, packed, scfg, faults=plan)
+        r0 = eng.submit(prompts[0])
+        eng.run(max_steps=200)           # writer completes + registers
+        rs = [eng.submit(p) for p in prompts[1:]]
+        eng.run(max_steps=400)
+        late = eng.submit(prompts[2])    # after quarantine unmapped the map
+        eng.run(max_steps=400)
+        if paged:
+            assert _pool_conserved(eng)
+        return [r0] + rs + [late], eng
+
+    base, _ = run(False)
+    reqs, eng = run(True)
+    assert reqs[0].status is RequestStatus.COMPLETED
+    assert reqs[1].status is RequestStatus.FAILED_NAN
+    assert reqs[2].status is RequestStatus.FAILED_NAN
+    assert "poisoned" in reqs[2].error and "rid=1" in reqs[2].error
+    assert reqs[3].status is RequestStatus.COMPLETED
+    # completed streams identical to no-sharing; the co-reader's partial
+    # stream is a prefix of its no-sharing counterpart
+    for got, want in ((reqs[0], base[0]), (reqs[3], base[3])):
+        assert got.out_tokens == want.out_tokens
+    n = len(reqs[2].out_tokens)
+    assert reqs[2].out_tokens == base[2].out_tokens[:n]
+
+    # linear-splice layout control: same fault plan, no page sharing —
+    # only the victim fails, every other stream completes identically
+    lreqs, _ = run(False, paged=False)
+    assert [r.status for r in lreqs] == [
+        RequestStatus.COMPLETED, RequestStatus.FAILED_NAN,
+        RequestStatus.COMPLETED, RequestStatus.COMPLETED]
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,18 @@ model's invariants instead (DESIGN.md §12): bounded termination, page
 conservation through quarantine, victim containment, survivor identity
 against solo no-fault runs, and post-fault serviceability.
 
+Shared-prefix traces (``Trace.prefix_len`` + :func:`check_prefix_trace`
+/ :func:`check_prefix_fault_trace`) prepend a common prefix to every
+prompt and run the refcounted prefix-cache engine (DESIGN.md §14)
+against the no-sharing engine: token identity (including tight-pool
+preemption/resume, which exercises the refcount x eviction interaction
+the ROADMAP calls out), refcount/free-list conservation + ``verify()``
+after every trace, and matched+prefilled token accounting.  The fault
+variant additionally checks co-reader containment: a poisoned shared
+page fails its readers with FAILED_NAN ("poisoned" diagnostics) rather
+than silently corrupting their streams — every stream, failed or not,
+must stay a prefix of its solo no-fault run.
+
 The hypothesis tests shrink failing traces to minimal repros (replacing
 the fixed mixed-length trace of the earlier suite); the seeded variants
 run the same checker without hypothesis installed.  Profiles: a bounded
@@ -86,13 +98,16 @@ class Trace:
     pool_slack: int          # pages beyond the single-request minimum
     seed: int = 0
     fault: str = ""          # "" = clean trace; else a FAULT_KINDS entry
+    prefix_len: int = 0      # shared-prefix traces: tokens common to all
+                             # prompts (prompt_lens are the suffix lengths)
 
     def __repr__(self):      # the shrunk repro hypothesis prints
         return (f"Trace(prompt_lens={self.prompt_lens}, "
                 f"max_new={self.max_new}, max_batch={self.max_batch}, "
                 f"prefill_chunk={self.prefill_chunk}, "
                 f"kv_bits={self.kv_bits}, pool_slack={self.pool_slack}, "
-                f"seed={self.seed}, fault={self.fault!r})")
+                f"seed={self.seed}, fault={self.fault!r}, "
+                f"prefix_len={self.prefix_len})")
 
 
 def _check_page_invariants(eng):
@@ -115,7 +130,7 @@ def _check_page_invariants(eng):
     assert al.num_in_use <= al.num_pages
 
 
-def _run_engine(qm, packed, scfg, prompts):
+def _run_engine(qm, packed, scfg, prompts, fifo=True):
     eng = Engine(qm, packed, scfg)
     first_order, done_order = [], []
 
@@ -131,18 +146,20 @@ def _run_engine(qm, packed, scfg, prompts):
     eng.run()
     assert all(r.done for r in reqs)
     if scfg.paged:
+        eng._kv.verify()
         al = eng._kv.allocator
         # free-list conservation after every trace
         assert al.num_free == al.num_pages, (al.num_free, al.num_pages)
         assert all(not o for o in al.owned)
         assert al.peak_in_use <= al.num_pages
     preempts = sum(r.preemptions for r in reqs)
-    if preempts == 0:
+    if preempts == 0 and fifo:
         # FIFO: first tokens in submission order; completions too
-        # (uniform max_new).  Preemption legitimately reorders restarts.
+        # (uniform max_new).  Preemption legitimately reorders restarts;
+        # prefix-cache hits legitimately shorten a later prompt's prefill.
         assert first_order == sorted(first_order), first_order
         assert done_order == sorted(done_order), done_order
-    return [r.out_tokens for r in reqs], preempts
+    return [r.out_tokens for r in reqs], preempts, eng
 
 
 def check_trace(tr: Trace, solo: bool = True, expect_preempt: bool = False):
@@ -163,22 +180,23 @@ def check_trace(tr: Trace, solo: bool = True, expect_preempt: bool = False):
             num_pages=(pool_min + tr.pool_slack) if (paged and tight) else 0,
             prefill_chunk=tr.prefill_chunk if chunked else 0)
 
-    base, _ = _run_engine(qm, packed, scfg(), prompts)
+    base, _, _ = _run_engine(qm, packed, scfg(), prompts)
     for tag, cfg_v in (("chunked-linear", scfg(chunked=True)),
                        ("whole-paged", scfg(paged=True)),
                        ("chunked-paged", scfg(paged=True, chunked=True))):
-        outs, _ = _run_engine(qm, packed, cfg_v, prompts)
+        outs, _, _ = _run_engine(qm, packed, cfg_v, prompts)
         assert outs == base, f"{tag} diverged from whole-linear on {tr}"
     # page-pool pressure: a tight pool must preempt yet stay identical
-    outs, preempts = _run_engine(qm, packed,
-                                 scfg(paged=True, chunked=True, tight=True),
-                                 prompts)
+    outs, preempts, _ = _run_engine(qm, packed,
+                                    scfg(paged=True, chunked=True,
+                                         tight=True),
+                                    prompts)
     assert outs == base, f"tight chunked-paged diverged on {tr}"
     if expect_preempt:
         assert preempts > 0, f"pool never ran dry on {tr}"
     if solo:
         for i, p in enumerate(prompts):
-            solo_out, _ = _run_engine(
+            solo_out, _, _ = _run_engine(
                 qm, packed, dataclasses.replace(scfg(), max_batch=1), [p])
             assert solo_out[0] == base[i], f"solo run {i} diverged on {tr}"
     return base
@@ -271,6 +289,135 @@ def check_fault_trace(tr: Trace):
     assert late.out_tokens == solo[0], f"post-fault submission diverged {tr}"
 
 
+def _prefix_prompts(tr: Trace, vocab: int):
+    """Prompts sharing a ``prefix_len``-token prefix; ``prompt_lens`` are
+    the per-request suffix lengths (each >= 1, so a match always leaves a
+    novel token for the first-logits chunk)."""
+    rng = np.random.default_rng(tr.seed)
+    prefix = rng.integers(0, vocab, tr.prefix_len)
+    return [np.concatenate([prefix, rng.integers(0, vocab, n)])
+            for n in tr.prompt_lens]
+
+
+def check_prefix_trace(tr: Trace, expect_preempt: bool = False):
+    """Shared-prefix trace through the refcounted prefix cache
+    (DESIGN.md §14), against the no-sharing engine:
+
+      * **token identity**: concurrent and serial prefix-cache runs ==
+        the no-sharing paged run, including a tight pool that preempts
+        mid-flight (refcount x eviction);
+      * **conservation**: ``verify()`` clean + free-list identity after
+        every run (inside :func:`_run_engine`), and on preempt-free runs
+        matched + prefilled tokens account for every prompt token;
+      * **hits**: with ``prefix_len >= PS`` a serial run (registration
+        always precedes the next admission) must hit on every follow-up
+        prompt — the cold-start race only excuses concurrent admissions.
+    """
+    cfg, qm, packed = _served(tr.kv_bits)
+    prompts = _prefix_prompts(tr, cfg.vocab_size)
+    longest = tr.prefix_len + max(tr.prompt_lens)
+    max_len = -(-(longest + tr.max_new + 1) // PS) * PS
+    pool_min = pages_for(longest + tr.max_new, PS)
+
+    def scfg(prefix=False, tight=False):
+        return ServeConfig(
+            max_batch=tr.max_batch, max_len=max_len, max_new=tr.max_new,
+            prefill_bucket=16, page_size=PS, paged=True,
+            num_pages=(pool_min + tr.pool_slack) if tight else 0,
+            prefill_chunk=tr.prefill_chunk, prefix_cache=prefix)
+
+    base, _, _ = _run_engine(qm, packed, scfg(), prompts)
+
+    outs, preempts, eng = _run_engine(qm, packed, scfg(prefix=True),
+                                      prompts, fifo=False)
+    assert outs == base, f"prefix-cache run diverged on {tr}"
+    stats = eng.prefix_stats
+    assert stats["lookups"] == len(prompts)
+    if preempts == 0:
+        # every prompt token was either adopted or prefilled, exactly once
+        assert (stats["matched_tokens"] + stats["prefilled_tokens"]
+                == sum(len(p) for p in prompts)), (stats, tr)
+
+    # serial: each prompt registers before the next admits, so hits are
+    # deterministic whenever a full shared page exists
+    outs_s, _, eng_s = _run_engine(
+        qm, packed, dataclasses.replace(scfg(prefix=True), max_batch=1),
+        prompts, fifo=False)
+    assert outs_s == base, f"serial prefix-cache run diverged on {tr}"
+    if tr.prefix_len >= PS and len(prompts) > 1:
+        s = eng_s.prefix_stats
+        assert s["hits"] >= len(prompts) - 1, (s, tr)
+        assert s["matched_tokens"] >= \
+            (len(prompts) - 1) * (tr.prefix_len // PS) * PS, (s, tr)
+
+    # tight pool: preemption/resume must re-match and stay identical
+    outs_t, preempts_t, _ = _run_engine(
+        qm, packed, scfg(prefix=True, tight=True), prompts, fifo=False)
+    assert outs_t == base, f"tight prefix-cache run diverged on {tr}"
+    if expect_preempt:
+        assert preempts_t > 0, f"pool never ran dry on {tr}"
+
+
+def check_prefix_fault_trace(tr: Trace):
+    """Fault injection through the prefix-cache engine.  Beyond the
+    :func:`check_fault_trace` invariants, sharing adds co-reader
+    containment: a NaN victim's quarantine may fail requests reading its
+    shared pages — those must end FAILED_NAN with "poisoned" diagnostics
+    and a solo-prefix stream, never complete with corrupted tokens.  The
+    post-fault submission re-adopts surviving cached pages, proving the
+    quarantine unmapped everything it poisoned.
+    """
+    assert tr.fault in FAULT_KINDS
+    cfg, qm, packed = _served(tr.kv_bits)
+    prompts = _prefix_prompts(tr, cfg.vocab_size)
+    longest = tr.prefix_len + max(tr.prompt_lens)
+    max_len = -(-(longest + tr.max_new + 1) // PS) * PS
+    pool_min = pages_for(longest + tr.max_new, PS)
+    scfg = ServeConfig(
+        max_batch=tr.max_batch, max_len=max_len, max_new=tr.max_new,
+        prefill_bucket=16, page_size=PS, paged=True,
+        num_pages=pool_min + tr.pool_slack,
+        prefill_chunk=tr.prefill_chunk, watchdog_steps=8,
+        prefix_cache=True)
+    solo = [
+        _run_engine(qm, packed,
+                    dataclasses.replace(scfg, max_batch=1, num_pages=0,
+                                        prefix_cache=False),
+                    [p])[0][0]
+        for p in prompts]
+
+    victim = len(prompts) // 2
+    plan = _fault_plan(tr, victim)
+    eng = Engine(qm, packed, scfg, faults=plan)
+    for p in prompts:
+        eng.submit(p, on_token=lambda r, t: _check_page_invariants(eng))
+    budget = 200 + 80 * len(prompts)
+    reqs = eng.run(max_steps=budget)           # raises if the trace hangs
+
+    assert all(r.done for r in reqs)
+    for i, r in enumerate(reqs):
+        # every stream — victim, co-reader, survivor — is a solo prefix
+        assert r.out_tokens == solo[i][:len(r.out_tokens)], \
+            f"request {i} stream not a solo prefix on {tr}"
+        if tr.fault != "alloc" and i == victim:
+            assert r.status in (_FAULT_STATUS[tr.fault],
+                                RequestStatus.COMPLETED), (tr, r.status)
+        elif (tr.fault == "nan"
+              and r.status is RequestStatus.FAILED_NAN):
+            # co-reader of a poisoned shared page: contained, diagnosed
+            assert "poisoned" in (r.error or ""), (tr, i, r.error)
+        else:
+            assert r.status is RequestStatus.COMPLETED, (tr, i, r.status)
+            assert r.out_tokens == solo[i], f"survivor {i} diverged on {tr}"
+    eng._kv.verify()
+    al = eng._kv.allocator
+    assert al.num_free == al.num_pages and all(not o for o in al.owned)
+    late = eng.submit(prompts[0])
+    eng.run(max_steps=budget)
+    assert late.status is RequestStatus.COMPLETED
+    assert late.out_tokens == solo[0], f"post-fault submission diverged {tr}"
+
+
 # ---------------------------------------------------------------------------
 # seeded variants (run without hypothesis — and in this repo's fast lane)
 # ---------------------------------------------------------------------------
@@ -321,6 +468,36 @@ def test_fault_trace_seeded_kv4_pressure():
     check_fault_trace(Trace(prompt_lens=(15, 14, 13), max_new=6,
                             max_batch=3, prefill_chunk=4, kv_bits=4,
                             pool_slack=2, seed=2, fault="nan"))
+
+
+def test_prefix_trace_seeded_kv8():
+    """19-token shared system prompt (2 full pages + tail) over mixed
+    suffix lengths: concurrent, serial (deterministic hits) and
+    tight-pool prefix-cache runs all == the no-sharing engine."""
+    check_prefix_trace(Trace(prompt_lens=(5, 9, 13), max_new=5,
+                             max_batch=2, prefill_chunk=8, kv_bits=8,
+                             pool_slack=4, seed=1, prefix_len=19))
+
+
+def test_prefix_trace_seeded_pressure_kv4():
+    """Refcount x eviction on the packed int4 cache: a tight pool must
+    preempt sequences holding shared pages, and the resume must re-match
+    and stay token-identical."""
+    check_prefix_trace(Trace(prompt_lens=(7, 6, 5), max_new=16,
+                             max_batch=3, prefill_chunk=4, kv_bits=4,
+                             pool_slack=2, seed=2, prefix_len=8),
+                       expect_preempt=True)
+
+
+@pytest.mark.parametrize("fault", ("nan", "alloc", "deadline"))
+def test_prefix_fault_trace_seeded(fault):
+    """Faults through the sharing engine: NaN quarantine fails co-readers
+    (never silent corruption), alloc/deadline leave cached pages clean
+    for re-adoption, pool conserved + verify() after every trace."""
+    check_prefix_fault_trace(Trace(prompt_lens=(5, 9, 13), max_new=5,
+                                   max_batch=3, prefill_chunk=8,
+                                   kv_bits=8, pool_slack=3, seed=3,
+                                   fault=fault, prefix_len=19))
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +566,69 @@ if HAVE_HYPOTHESIS:
     @given(tr=fault_trace_strategy)
     def test_engine_fault_fuzz_deep(tr):
         check_fault_trace(tr)
+
+    prefix_trace_strategy = st.builds(
+        Trace,
+        prompt_lens=st.lists(st.integers(1, 16), min_size=2, max_size=4)
+        .map(tuple),
+        max_new=st.integers(1, 6),
+        max_batch=st.integers(1, 3),
+        prefill_chunk=st.sampled_from([4, 8, 16]),
+        kv_bits=st.sampled_from([4, 8, 16]),
+        pool_slack=st.integers(0, 4),
+        seed=st.integers(0, 2 ** 16),
+        # below PS the tail-page rule forbids sharing entirely — the
+        # strategy covers both the degenerate and the multi-page regimes
+        prefix_len=st.integers(1, 24),
+    )
+
+    @needs_hypothesis
+    @settings(max_examples=2, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=prefix_trace_strategy)
+    def test_engine_prefix_fuzz_fast(tr):
+        """Shrinkable shared-prefix traces: sharing == no-sharing token
+        identity, deterministic serial hits, refcount conservation."""
+        check_prefix_trace(tr)
+
+    @needs_hypothesis
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=prefix_trace_strategy)
+    def test_engine_prefix_fuzz_deep(tr):
+        check_prefix_trace(tr)
+
+    prefix_fault_strategy = st.builds(
+        Trace,
+        prompt_lens=st.lists(st.integers(1, 16), min_size=2, max_size=3)
+        .map(tuple),
+        max_new=st.integers(1, 6),
+        max_batch=st.integers(1, 3),
+        prefill_chunk=st.sampled_from([4, 8, 16]),
+        kv_bits=st.sampled_from([4, 8, 16]),
+        pool_slack=st.integers(0, 4),
+        seed=st.integers(0, 2 ** 16),
+        fault=st.sampled_from(FAULT_KINDS),
+        prefix_len=st.integers(1, 24),
+    )
+
+    @needs_hypothesis
+    @settings(max_examples=2, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=prefix_fault_strategy)
+    def test_engine_prefix_fault_fuzz_fast(tr):
+        """Random trace x random fault x shared prefixes: co-reader
+        containment plus the full failure-model invariant set."""
+        check_prefix_fault_trace(tr)
+
+    @needs_hypothesis
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=list(HealthCheck))
+    @given(tr=prefix_fault_strategy)
+    def test_engine_prefix_fault_fuzz_deep(tr):
+        check_prefix_fault_trace(tr)
 else:
     @needs_hypothesis
     def test_engine_fuzz_fast():
@@ -404,4 +644,20 @@ else:
 
     @needs_hypothesis
     def test_engine_fault_fuzz_deep():
+        pass
+
+    @needs_hypothesis
+    def test_engine_prefix_fuzz_fast():
+        pass
+
+    @needs_hypothesis
+    def test_engine_prefix_fuzz_deep():
+        pass
+
+    @needs_hypothesis
+    def test_engine_prefix_fault_fuzz_fast():
+        pass
+
+    @needs_hypothesis
+    def test_engine_prefix_fault_fuzz_deep():
         pass

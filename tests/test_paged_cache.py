@@ -123,22 +123,59 @@ def test_page_allocator_double_free_raises():
     not silently extend the corruption (DESIGN.md §12)."""
     al = kvc.PageAllocator(num_pages=4, max_pages_per_seq=4, max_batch=2)
     pages = al.allocate(0, 2)
-    al.free_list.append(pages[0])             # simulate the double-free
+    al.free(0)
+    al.owned[0] = list(pages)        # stale owned list resurrected after
     with pytest.raises(kvc.PageIntegrityError, match="double-free"):
-        al.free(0)
+        al.free(0)                   # its pages went back to the free list
 
 
 def test_page_allocator_shared_page_raises():
-    """Integrity guard: freeing a page another live slot still owns would
-    recycle KV that slot is actively reading."""
+    """Integrity guard: a page in ``owned[slot]`` the refcounts never
+    credited to that slot is a corrupted handoff — freeing through it
+    would recycle KV its real owner is actively reading."""
     al = kvc.PageAllocator(num_pages=4, max_pages_per_seq=4, max_batch=2)
     pages = al.allocate(0, 2)
     al.allocate(1, 1)
     al.owned[1].append(pages[1])              # simulate a corrupted handoff
     with pytest.raises(kvc.PageIntegrityError, match="also owned by"):
-        al.free(0)
-    with pytest.raises(kvc.PageIntegrityError, match="also owned by"):
         al.free(1)
+
+
+def test_page_allocator_adopt_refcounts():
+    """Legitimate sharing (prefix cache, DESIGN.md §14): adopt() adds
+    readers instead of pages, free() releases a shared page only at
+    refcount 0, and a refcount-0 cached page is revived off the free
+    list by a later adopt."""
+    al = kvc.PageAllocator(num_pages=6, max_pages_per_seq=4, max_batch=3)
+    pages = al.allocate(0, 2)
+    assert al.adopt(1, pages) and al.adopt(2, pages)
+    assert al.refcount(pages[0]) == 3 and al.num_in_use == 2
+    assert al.free(0) == 2 and al.num_free == 4      # readers keep them live
+    assert al.refcount(pages[0]) == 2
+    assert al.free(1) == 2 and al.free(2) == 2
+    assert al.num_free == 6 and al.refcount(pages[0]) == 0
+    # refcount-0 pages parked as cached sit at the free-list FRONT:
+    # fresh allocations recycle everything else first
+    assert al.adopt(0, pages)
+    al.free(0, cached=frozenset(pages))
+    got = al.allocate(1, 4)
+    assert got is not None and not (set(got) & set(pages))
+    # ...and adopt revives them from the free list when matched
+    assert al.adopt(2, pages)
+    assert al.num_free == 0 and al.refcount(pages[0]) == 1
+    al.free(1), al.free(2)
+    assert sorted(al.free_list) == list(range(6))
+
+
+def test_page_allocator_adopt_respects_page_table_cap():
+    """adopt() is all-or-nothing against max_pages_per_seq, like
+    allocate()."""
+    al = kvc.PageAllocator(num_pages=8, max_pages_per_seq=3, max_batch=2)
+    pages = al.allocate(0, 3)
+    assert al.allocate(1, 1) is not None
+    assert not al.adopt(1, pages)             # 1 + 3 > max_pages_per_seq
+    assert al.refcount(pages[0]) == 1         # nothing adopted
+    assert al.adopt(1, pages[:2])
 
 
 def test_paged_cache_verify_audits_device_table():

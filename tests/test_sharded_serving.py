@@ -184,6 +184,33 @@ assert reps[(1, 2)]["kv_bytes_per_device"] \
     < reps[(1, 1)]["kv_bytes_per_device"]
 assert reps[(1, 4)]["kv_bytes_per_device"] \
     < reps[(1, 2)]["kv_bytes_per_device"]
+
+# 5. prefix caching composes with the mesh: the hash map and page tables
+#    are replicated host state, so sharing needs no new collectives and
+#    the sharing engine stays token-identical to no-sharing single-device
+sys_prompt = rng.integers(0, cfg.vocab_size, 19)
+pref_prompts = [np.concatenate([sys_prompt,
+                                rng.integers(0, cfg.vocab_size, n)])
+                for n in (5, 9, 13)]
+
+
+def prefix_run(mesh, prefix):
+    scfg = dataclasses.replace(make_cfg(False), max_len=48,
+                               prefix_cache=prefix)
+    eng = Engine(qm, packed, scfg, mesh=mesh)
+    reqs = [eng.submit(p) for p in pref_prompts]
+    eng.run(max_steps=600)
+    eng._kv.verify()
+    assert eng._kv.allocator.num_free == eng._kv.allocator.num_pages
+    return [tuple(r.out_tokens) for r in reqs], eng.prefix_stats["hits"]
+
+
+p_base, _ = prefix_run(None, False)
+for dm in (None, (2, 2)):
+    p_out, p_hits = prefix_run(None if dm is None else
+                               make_serving_mesh(*dm), True)
+    assert p_out == p_base, f"prefix cache diverged on mesh {dm}"
+    assert p_hits >= 1, f"shared prefix never hit on mesh {dm}"
 print("SHARDED-SERVING-OK")
 """
 
@@ -191,8 +218,9 @@ print("SHARDED-SERVING-OK")
 @pytest.mark.multidevice
 def test_sharded_engine_multidevice_subprocess():
     """The full acceptance matrix on 8 virtual CPU devices: preemption,
-    clean trace, injected fault, per-device footprint — sharded (data>=2,
-    model>=2) token-identical to single-device throughout."""
+    clean trace, injected fault, per-device footprint, prefix caching —
+    sharded (data>=2, model>=2) token-identical to single-device
+    throughout."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.pathsep.join(
